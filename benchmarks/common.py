@@ -1,0 +1,70 @@
+"""Shared benchmark helpers: timing + TNN/PC library construction."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core.cgp import evolve_pc_library
+from repro.core.pcc import build_pcc_library, pc_pareto
+from repro.core.tnn import TNNTrainConfig, train_tnn
+from repro.data.tabular import DATASETS, make_dataset
+
+QUICK = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
+
+_TNN_CACHE: dict = {}
+_PC_CACHE: dict = {}
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def get_trained_tnn(dataset: str, seed: int = 0):
+    """Train (and cache) the exact TNN at the paper's topology."""
+    key = (dataset, seed)
+    if key not in _TNN_CACHE:
+        ds = make_dataset(dataset)
+        spec = DATASETS[dataset]
+        best = None
+        lrs = (5e-3, 1e-2) if QUICK else (2e-3, 5e-3, 1e-2)
+        for lr in lrs:
+            t = train_tnn(ds, TNNTrainConfig(n_hidden=spec.topology[1],
+                                             epochs=12 if QUICK else 18,
+                                             lr=lr, seed=seed))
+            if best is None or t.test_acc > best.test_acc:
+                best = t
+        _TNN_CACHE[key] = (ds, best)
+    return _TNN_CACHE[key]
+
+
+def get_pc_library(n: int, *, points: int | None = None,
+                   iters: int | None = None, seed: int = 0):
+    points = points if points is not None else (2 if QUICK else 4)
+    iters = iters if iters is not None else (300 if QUICK else 1200)
+    key = (n, points, iters, seed)
+    if key not in _PC_CACHE:
+        _PC_CACHE[key] = evolve_pc_library(n, n_points=points,
+                                           max_iters=iters, seed=seed)
+    return _PC_CACHE[key]
+
+
+def tnn_libraries(dataset: str, seed: int = 0):
+    """(ds, tnn, pcc_lib, pc_out_lib) with budgets scaled by QUICK."""
+    ds, tnn = get_trained_tnn(dataset, seed)
+    sizes, pcc_sizes = set(), []
+    for (p, n) in tnn.hidden_sizes():
+        if p >= 1 and n >= 1:
+            sizes.update([p, n])
+            pcc_sizes.append((p, n))
+    out_n = max(tnn.out_nnz, 1)
+    sizes.add(out_n)
+    pc_libs = {n: get_pc_library(n, seed=seed) for n in sorted(sizes)}
+    pcc_lib = build_pcc_library(sorted(set(pcc_sizes)), pc_libs,
+                                n_samples=20000 if QUICK else 100000,
+                                seed=seed)
+    pc_out = pc_pareto(pc_libs[out_n])
+    return ds, tnn, pcc_lib, pc_out

@@ -1,0 +1,85 @@
+"""Render §Dry-run and §Roofline markdown tables from reports/dryrun.jsonl.
+
+Usage: PYTHONPATH=src python -m benchmarks.render_experiments [path]
+Prints markdown to stdout (pasted into EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    best = {}
+    with open(path) as f:
+        for line in f:
+            rec = json.loads(line)
+            key = (rec["arch"], rec["shape"], rec["mesh"],
+                   rec.get("quant", "dense"), rec.get("remat", True),
+                   rec.get("accum_dtype", "float32"),
+                   rec.get("moe_fsdp", "d"),
+                   rec.get("microbatches"))
+            best[key] = rec
+    return best
+
+
+def baseline_only(best: dict) -> list[dict]:
+    """Default-knob records only (the baseline table)."""
+    out = {}
+    for (arch, shape, mesh, quant, remat, acc, mf, mb), rec in best.items():
+        if quant == "dense" and remat and acc == "float32" and mf == "d":
+            out[(arch, shape, mesh)] = rec
+    return [out[k] for k in sorted(out)]
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def main(path: str = "reports/dryrun.jsonl") -> None:
+    rows = baseline_only(load(path))
+
+    print("### Dry-run (baseline, default knobs)\n")
+    print("| arch | shape | mesh | status | compile_s | params/dev GiB | "
+          "temp GiB | collectives (top kinds) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] == "ok":
+            m, rf = r["memory"], r["roofline"]
+            kinds = sorted(rf["collective_by_kind"].items(),
+                           key=lambda kv: -kv[1])[:3]
+            ks = ", ".join(f"{k}:{v/2**30:.2f}GiB" for k, v in kinds)
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                  f"{r['compile_s']} | {fmt_bytes(m['argument_bytes'])} | "
+                  f"{fmt_bytes(m['temp_bytes'])} | {ks} |")
+        else:
+            note = r.get("reason", r.get("error", ""))[:60]
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"{r['status']} | - | - | - | {note} |")
+
+    print("\n### Roofline (single-pod 16x16 = 256 chips, per-device terms)\n")
+    print("| arch | shape | compute ms | memory ms | collective ms | "
+          "dominant | bound ms | MODEL_FLOPS/HLO_FLOPs | fits 16GB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["mesh"] != "16x16" or r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        m = r["memory"]
+        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        peak = (m["argument_bytes"] + m["temp_bytes"]) / 2**30
+        print(f"| {r['arch']} | {r['shape']} | {rf['compute_s']*1e3:.1f} | "
+              f"{rf['memory_s']*1e3:.1f} | {rf['collective_s']*1e3:.1f} | "
+              f"{rf['dominant']} | {bound*1e3:.1f} | "
+              f"{r['useful_flops_ratio']:.3f} | "
+              f"{'yes' if peak <= 16 else f'NO ({peak:.0f}GiB)'} |")
+
+    # skip list
+    print("\n### Skipped cells\n")
+    for r in rows:
+        if r["status"] == "skipped" and r["mesh"] == "16x16":
+            print(f"* {r['arch']} x {r['shape']}: {r['reason']}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun.jsonl")

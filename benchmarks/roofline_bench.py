@@ -1,0 +1,44 @@
+"""Roofline table from the dry-run artifacts (reports/dryrun.jsonl).
+
+Reads every successful single-pod cell and emits the §Roofline rows:
+three terms in seconds, dominant bottleneck, MODEL_FLOPS ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def run(path: str = "reports/dryrun.jsonl") -> list[dict]:
+    if not os.path.exists(path):
+        return [{"bench": "roofline", "note": f"{path} missing — run "
+                 "`python -m repro.launch.dryrun --arch all --shape all`"}]
+    best: dict[tuple, dict] = {}
+    with open(path) as f:
+        for line in f:
+            rec = json.loads(line)
+            key = (rec["arch"], rec["shape"], rec["mesh"],
+                   rec.get("quant", "dense"))
+            best[key] = rec        # last write wins (reruns override)
+    rows = []
+    for (arch, shape, mesh, quant), rec in sorted(best.items()):
+        if rec["status"] != "ok":
+            rows.append({"bench": "roofline", "arch": arch, "shape": shape,
+                         "mesh": mesh, "quant": quant,
+                         "status": rec["status"],
+                         "note": rec.get("reason", rec.get("error", ""))[:90]})
+            continue
+        r = rec["roofline"]
+        m = rec["memory"]
+        rows.append({
+            "bench": "roofline", "arch": arch, "shape": shape, "mesh": mesh,
+            "quant": quant, "status": "ok",
+            "compute_ms": round(r["compute_s"] * 1e3, 2),
+            "memory_ms": round(r["memory_s"] * 1e3, 2),
+            "collective_ms": round(r["collective_s"] * 1e3, 2),
+            "dominant": r["dominant"],
+            "hbm_gib_per_dev": round(m["peak_estimate_bytes"] / 2**30, 2),
+            "useful_flops_ratio": round(rec["useful_flops_ratio"], 4),
+            "compile_s": rec["compile_s"],
+        })
+    return rows

@@ -1,0 +1,68 @@
+"""The paper's full three-phase evolutionary approximation flow (Fig. 3).
+
+Phase 1 — CGP evolves approximate popcount circuits per size.
+Phase 2 — Pareto-optimal popcount-compare combinations (distance metric D).
+Phase 3 — NSGA-II assigns approximate units per neuron: area vs accuracy.
+
+Run:  PYTHONPATH=src python examples/evolve_approx_tnn.py [dataset]
+"""
+import sys
+
+import numpy as np
+
+from repro.core import tnn as T
+from repro.core.cgp import evolve_pc_library
+from repro.core.nsga2 import NSGA2Config
+from repro.core.pcc import build_pcc_library, pc_pareto
+from repro.core.ternary import abc_binarize
+from repro.data.tabular import make_dataset
+
+
+def main(dataset: str = "cardio") -> None:
+    ds = make_dataset(dataset)
+    tnn = T.train_tnn(ds, T.TNNTrainConfig(
+        n_hidden=ds.spec.topology[1], epochs=12, lr=1e-2))
+    print(f"[exact] acc={tnn.test_acc:.3f} sizes={tnn.hidden_sizes()}")
+
+    # Phase 1: approximate popcount libraries for every size in the TNN
+    sizes, pcc_sizes = set(), []
+    for (p, n) in tnn.hidden_sizes():
+        if p >= 1 and n >= 1:
+            sizes.update([p, n])
+            pcc_sizes.append((p, n))
+    sizes.add(max(tnn.out_nnz, 1))
+    pc_libs = {}
+    for n in sorted(sizes):
+        pc_libs[n] = evolve_pc_library(n, n_points=3, max_iters=500)
+        print(f"[phase1] pc{n}: {len(pc_libs[n])} circuits "
+              f"(areas {[round(c.cost().area_mm2, 2) for c in pc_libs[n]]})")
+
+    # Phase 2: Pareto-optimal PCC combinations under the distance metric
+    pcc_lib = build_pcc_library(sorted(set(pcc_sizes)), pc_libs,
+                                n_samples=30000)
+    print(f"[phase2] PCC library: {len(pcc_lib)} Pareto entries over "
+          f"{len(pcc_lib.sizes())} sizes")
+    pc_out = pc_pareto(pc_libs[max(tnn.out_nnz, 1)])
+
+    # Phase 3: NSGA-II integration
+    xb_tr = np.asarray(abc_binarize(ds.x_train, tnn.thresholds))
+    xb_te = np.asarray(abc_binarize(ds.x_test, tnn.thresholds))
+    prob = T.TNNApproxProblem(tnn=tnn, pcc_lib=pcc_lib, pc_out_lib=pc_out,
+                              xbin=xb_tr, y=ds.y_train)
+    res = prob.optimize(NSGA2Config(pop_size=24, n_generations=40, seed=0))
+
+    hx, ox = T.exact_netlists(tnn)
+    exact_area = T.tnn_hw_cost(tnn, hx, ox, interface=None).area_mm2
+    print(f"[phase3] Pareto front ({len(res.pareto_x)} designs, "
+          f"exact area {exact_area/100:.3f} cm^2):")
+    for x, f in zip(res.pareto_x, res.pareto_f):
+        hnl, onl = prob.decode(x)
+        acc = float((T.predict_with_circuits(tnn, xb_te, hnl, onl)
+                     == ds.y_test).mean())
+        area = T.tnn_hw_cost(tnn, hnl, onl, interface=None).area_mm2
+        print(f"  test_acc={acc:.3f}  area={area/100:.3f} cm^2 "
+              f"({area/exact_area:.0%} of exact)")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "cardio")

@@ -1,0 +1,15 @@
+"""Batched serving example: prefill + greedy decode over request buckets.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+(thin wrapper over `python -m repro.launch.serve --arch llama3.2-1b --reduced`)
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    argv = ["--arch", "llama3.2-1b", "--requests", "8", "--max-new", "12"]
+    argv += sys.argv[1:]
+    sys.argv = [sys.argv[0]] + argv
+    serve_main()

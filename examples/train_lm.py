@@ -1,0 +1,20 @@
+"""End-to-end LM training driver: ~100M-param model, a few hundred steps.
+
+Trains the `lm100m` preset (8L/512d llama-style) on the deterministic
+synthetic token stream, with checkpointing + resume; optionally with the
+paper's ternary quantization (--quant ternary) to compare loss curves.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--quant ternary]
+(thin wrapper over `python -m repro.launch.train --preset lm100m`)
+"""
+import sys
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    argv = ["--preset", "lm100m", "--steps", "300", "--batch", "8",
+            "--seq", "256", "--ckpt-dir", "/tmp/repro_lm100m"]
+    argv += sys.argv[1:]
+    sys.argv = [sys.argv[0]] + argv
+    train_main()

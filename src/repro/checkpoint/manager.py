@@ -1,0 +1,155 @@
+"""Checkpointing: atomic, retained, background-capable, elastic.
+
+Design (DESIGN.md §6):
+  * atomicity  — write into `<dir>/.tmp-<step>` then `os.rename` to
+    `<dir>/step_<N>`; a crash mid-save never corrupts the latest checkpoint;
+  * manifest   — msgpack with step, leaf paths, shapes, dtypes; leaves are
+    stored in a single .npz keyed by leaf index (paths recorded for safety);
+  * retention  — keep the most recent `keep` checkpoints;
+  * background — `save(..., background=True)` snapshots to host memory
+    synchronously (cheap) and writes to disk on a thread, so the train loop
+    is blocked only for the device->host copy;
+  * elasticity — `restore(template, mesh, specs)` re-device_puts every leaf
+    with the *current* mesh's NamedSharding: a job restarted on a different
+    topology reshards transparently (logical arrays are global).
+
+Single-process container note: arrays are gathered to host before writing.
+On a real multi-host pod this becomes per-host shard files keyed by
+(process_index, shard_index) — the manifest format already carries what's
+needed; the gather/scatter is the only host-local piece.
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _leaf_paths(tree: Any) -> list[str]:
+    paths = []
+    for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append(jax.tree_util.keystr(kp))
+    return paths
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # -- discovery -----------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.dir, name, "MANIFEST.msgpack")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: dict | None = None,
+             background: bool = False) -> None:
+        leaves, _ = jax.tree_util.tree_flatten(state)
+        host_leaves = [np.asarray(x) for x in leaves]      # device -> host
+        manifest = {
+            "step": int(step),
+            "paths": _leaf_paths(state),
+            "shapes": [list(a.shape) for a in host_leaves],
+            "dtypes": [str(a.dtype) for a in host_leaves],
+            "extra": extra or {},
+        }
+        if background:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_leaves, manifest), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host_leaves, manifest)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_leaves: list[np.ndarray], manifest: dict) -> None:
+        tmp = os.path.join(self.dir, f".tmp-{step}")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        # store raw bytes: npz cannot roundtrip ml_dtypes (bfloat16 etc.)
+        np.savez(os.path.join(tmp, "leaves.npz"),
+                 **{f"leaf_{i}": np.ascontiguousarray(a).view(np.uint8)
+                    for i, a in enumerate(host_leaves)})
+        with open(os.path.join(tmp, "MANIFEST.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._retain()
+
+    def _retain(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def restore(self, template: Any, step: int | None = None,
+                mesh=None, specs: Any = None) -> tuple[int, Any, dict]:
+        """Restore into the structure of `template` (abstract or concrete).
+
+        With (mesh, specs): every leaf is device_put with the current mesh's
+        NamedSharding — elastic resharding across topologies."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "MANIFEST.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+        data = np.load(os.path.join(d, "leaves.npz"))
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        saved_paths = manifest["paths"]
+        tmpl_paths = _leaf_paths(template)
+        if saved_paths != tmpl_paths:
+            raise ValueError(
+                "checkpoint/template structure mismatch: "
+                f"{set(saved_paths) ^ set(tmpl_paths)}")
+        out = []
+        spec_leaves = (jax.tree_util.tree_flatten(
+            specs, is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec)
+        )[0] if specs is not None else [None] * len(leaves))
+        import ml_dtypes
+        for i, (leaf, sp) in enumerate(zip(leaves, spec_leaves)):
+            raw = data[f"leaf_{i}"]
+            dt_str = manifest["dtypes"][i]
+            shape = tuple(manifest["shapes"][i])
+            try:
+                dtype = np.dtype(dt_str)
+            except TypeError:
+                dtype = np.dtype(getattr(ml_dtypes, dt_str))
+            arr = raw.view(dtype).reshape(shape)
+            want_dtype = leaf.dtype if hasattr(leaf, "dtype") else dtype
+            if np.dtype(want_dtype) != dtype:
+                arr = arr.astype(want_dtype)
+            if mesh is not None and sp is not None:
+                out.append(jax.device_put(
+                    arr, jax.sharding.NamedSharding(mesh, sp)))
+            else:
+                out.append(jnp.asarray(arr))
+        return int(manifest["step"]), jax.tree_util.tree_unflatten(treedef, out), \
+            manifest.get("extra", {})

@@ -1,0 +1,41 @@
+"""Architecture registry: one module per assigned architecture.
+
+`get_config(name)` resolves an arch id (e.g. "qwen3-4b") to its ModelConfig;
+`ARCHS` lists all assigned ids.  The paper's own TNN configs live in
+`repro.configs.tnn_paper`.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    MoESpec,
+    SSMSpec,
+    ShapeConfig,
+    SHAPES,
+    shape_applicable,
+)
+
+ARCHS: tuple[str, ...] = (
+    "qwen2-vl-72b",
+    "hymba-1.5b",
+    "whisper-medium",
+    "arctic-480b",
+    "mixtral-8x22b",
+    "llama3.2-1b",
+    "qwen2-1.5b",
+    "qwen3-4b",
+    "qwen2.5-14b",
+    "rwkv6-7b",
+)
+
+_MODULES = {name: "repro.configs." + name.replace("-", "_").replace(".", "_")
+            for name in ARCHS}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[name])
+    return mod.CONFIG

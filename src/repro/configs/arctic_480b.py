@@ -1,0 +1,27 @@
+"""arctic-480b [moe] — 128 experts top-2 + parallel dense residual FFN.
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000
+[hf:Snowflake/snowflake-arctic-base].  Dense-MoE hybrid: every layer runs a
+dense FFN residual branch in parallel with the 128e top-2 MoE.  Experts
+shard over the model axis (EP, 128 % 16 == 0); int8 AdamW moments keep the
+optimizer inside 16 GB/chip on a single 256-chip pod (DESIGN.md §6).
+"""
+from repro.configs.base import ModelConfig, MoESpec
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=4864,
+    vocab=32000,
+    rope="std",
+    rope_theta=1e6,
+    moe=MoESpec(n_experts=128, top_k=2, capacity_factor=1.25,
+                dense_residual=True, d_ff_dense=4864),
+    opt_8bit=True,
+    notes="full attention -> long_500k skipped",
+)

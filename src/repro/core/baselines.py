@@ -1,0 +1,201 @@
+"""Baselines the paper compares against (Tables 2-3).
+
+* Exact bespoke MLP [Mubarik et al., MICRO'20]: 4-bit inputs, 8-bit weights,
+  hardwired multipliers (shift-add trees), ReLU, argmax.
+* Power-of-2 Ax MLP [Afentaki et al., ICCAD'23/DATE'24]: weights constrained
+  to ±2^k (multiplication = rewiring), truncated accumulation, low-precision
+  activation.
+
+Both are (a) trained with QAT in JAX on the same synthetic datasets, and
+(b) costed with the same EGFET gate model used for our TNNs, via an
+adder-tree area estimator for bespoke MAC hardware.  The published Table-3
+numbers are also carried verbatim (PAPER_TABLE3) so benchmarks can print
+modeled-vs-published side by side.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tabular import TabularDataset
+from repro.hw.egfet import Gate, HwCost, gate_cost, interface_cost
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+
+
+# ---------------------------------------------------------------------------
+# Area model for bespoke arithmetic (EGFET)
+# ---------------------------------------------------------------------------
+_FA = (gate_cost(Gate.XOR).scale(2) + gate_cost(Gate.AND).scale(2)
+       + gate_cost(Gate.OR))           # full adder
+
+
+def adder_cost(width: int) -> HwCost:
+    """Ripple adder of `width` bits (bespoke, carry chain of FAs)."""
+    return _FA.scale(max(width, 1))
+
+
+def shift_add_multiplier_cost(w: int, in_bits: int) -> HwCost:
+    """Hardwired multiply of an `in_bits` input by constant w: one shifted
+    add per set bit beyond the first (bespoke constant multiplier)."""
+    ones = bin(abs(int(w))).count("1")
+    if ones <= 1:
+        return HwCost(0.0, 0.0)        # power of two: pure rewiring
+    width = in_bits + max(abs(int(w)).bit_length(), 1)
+    return adder_cost(width).scale(ones - 1)
+
+
+def accumulator_tree_cost(n_addends: int, width: int) -> HwCost:
+    """Adder tree over n addends of `width` bits (width grows up the tree)."""
+    total = HwCost(0.0, 0.0)
+    level_w = width
+    n = n_addends
+    while n > 1:
+        total = total + adder_cost(level_w).scale(n // 2)
+        n = (n + 1) // 2
+        level_w += 1
+    return total
+
+
+def relu_cost(width: int) -> HwCost:
+    # sign check + AND gating per bit
+    return gate_cost(Gate.AND).scale(width)
+
+
+def mlp_hw_cost(weights: list[np.ndarray], in_bits: int, w_bits: int,
+                pow2: bool, interface: str | None) -> HwCost:
+    """Bespoke MLP cost: hardwired multipliers + accumulation + ReLU/argmax."""
+    total = HwCost(0.0, 0.0)
+    bits = in_bits
+    for li, W in enumerate(weights):
+        fan_in, n_out = W.shape
+        acc_w = bits + int(np.ceil(np.log2(max(fan_in, 2)))) + w_bits
+        for o in range(n_out):
+            col = W[:, o]
+            nz = col[col != 0]
+            if not pow2:
+                for w in nz:
+                    total = total + shift_add_multiplier_cost(int(w), bits)
+            total = total + accumulator_tree_cost(max(len(nz), 1), acc_w)
+            if li < len(weights) - 1:
+                total = total + relu_cost(acc_w)
+        bits = min(acc_w, 8)           # low-precision inter-layer activation
+    # argmax comparators over the last layer
+    n_cls = weights[-1].shape[1]
+    cmp_w = bits
+    total = total + (adder_cost(cmp_w) + gate_cost(Gate.AND).scale(cmp_w)
+                     ).scale(max(n_cls - 1, 1))
+    if interface:
+        total = total + interface_cost(weights[0].shape[0], interface)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# QAT training for the two baselines
+# ---------------------------------------------------------------------------
+def _quant_input_4bit(x: np.ndarray) -> np.ndarray:
+    return np.round(np.clip(x, 0, 1) * 15.0) / 15.0
+
+
+def _int_ste(w, bits):
+    lim = 2.0 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(w * lim), -lim, lim) / lim
+    return w + jax.lax.stop_gradient(q - w)
+
+
+def _pow2_ste(w):
+    mag = jnp.clip(jnp.abs(w), 2.0 ** -3, 1.0)
+    q = jnp.sign(w) * 2.0 ** jnp.round(jnp.log2(mag))
+    q = jnp.where(jnp.abs(w) < 2.0 ** -4, 0.0, q)
+    return w + jax.lax.stop_gradient(q - w)
+
+
+@dataclass
+class TrainedMLP:
+    weights_int: list[np.ndarray]    # integer (or pow2-integer) hardware weights
+    test_acc: float
+    pow2: bool
+    in_bits: int
+    w_bits: int
+
+    def cost(self, interface: str | None = "adc4") -> HwCost:
+        return mlp_hw_cost(self.weights_int, self.in_bits, self.w_bits,
+                           self.pow2, interface)
+
+
+def train_mlp_baseline(ds: TabularDataset, hidden: int, *, pow2: bool = False,
+                       epochs: int = 15, lr: float = 5e-3, seed: int = 0,
+                       w_bits: int = 8) -> TrainedMLP:
+    xq_tr = _quant_input_4bit(ds.x_train)
+    xq_te = _quant_input_4bit(ds.x_test)
+    F, C = ds.spec.n_features, ds.spec.n_classes
+    rng = np.random.default_rng(seed)
+    params = {"w1": jnp.asarray(rng.normal(0, 0.3, (F, hidden)), jnp.float32),
+              "w2": jnp.asarray(rng.normal(0, 0.3, (hidden, C)), jnp.float32)}
+    quant = _pow2_ste if pow2 else (lambda w: _int_ste(w, w_bits))
+
+    def fwd(p, x):
+        h = jax.nn.relu(x @ quant(p["w1"]))
+        return h @ quant(p["w2"])
+
+    def loss(p, x, y):
+        lg = fwd(p, x)
+        lp = jax.nn.log_softmax(lg, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(lp, y[:, None], 1))
+
+    ocfg = AdamWConfig(lr=lr)
+    state = adamw.init(params)
+    step = jax.jit(lambda p, s, x, y: (lambda l_g: adamw.apply_updates(
+        p, l_g[1], s, ocfg) + (l_g[0],))(
+        jax.value_and_grad(loss)(p, x, y)))
+    xj, yj = jnp.asarray(xq_tr), jnp.asarray(ds.y_train.astype(np.int32))
+    n = xj.shape[0]
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for s in range(0, n, 64):
+            idx = perm[s:s + 64]
+            params, state, _ = step(params, state, xj[idx], yj[idx])
+
+    pred = np.asarray(jnp.argmax(fwd(params, jnp.asarray(xq_te)), axis=-1))
+    acc = float((pred == ds.y_test).mean())
+    lim = 2 ** (w_bits - 1) - 1
+
+    def to_int(w):
+        wq = np.asarray(quant(w))
+        if pow2:
+            return np.round(wq * 8).astype(np.int32)   # pow2 grid, 1/8 lsb
+        return np.round(wq * lim).astype(np.int32)
+
+    return TrainedMLP(weights_int=[to_int(params["w1"]), to_int(params["w2"])],
+                      test_acc=acc, pow2=pow2, in_bits=4, w_bits=w_bits)
+
+
+# ---------------------------------------------------------------------------
+# Published Table 3 rows (reference comparison values from the paper)
+# area cm^2 / power mW, w/o interface cost
+# ---------------------------------------------------------------------------
+PAPER_TABLE3 = {
+    "arrhythmia": {"exact_mlp": (62, 266.00, 998.00),
+                   "ax_mlp": (60, 13.51, 12.80),
+                   "our_exact_tnn": (60, 8.87, 8.09),
+                   "our_ax_tnn": (60, 7.73, 7.12)},
+    "breast_cancer": {"exact_mlp": (98, 12.00, 40.00),
+                      "ax_mlp": (94, 0.03, 0.03),
+                      "our_exact_tnn": (98, 0.29, 0.31),
+                      "our_ax_tnn": (98, 0.05, 0.04)},
+    "cardio": {"exact_mlp": (88, 33.40, 124.20),
+               "ax_mlp": (87, 1.46, 1.70),
+               "our_exact_tnn": (85, 0.75, 0.91),
+               "our_ax_tnn": (85, 0.36, 0.42)},
+    "redwine": {"exact_mlp": (56, 17.60, 73.50),
+                "ax_mlp": (55, 0.03, 0.02),
+                "our_exact_tnn": (56, 0.08, 0.09),
+                "our_ax_tnn": (56, 0.03, 0.03)},
+    "whitewine": {"exact_mlp": (54, 31.20, 126.40),
+                  "ax_mlp": (51, 0.23, 0.25),
+                  "our_exact_tnn": (50, 0.16, 0.18),
+                  "our_ax_tnn": (50, 0.11, 0.12)},
+}

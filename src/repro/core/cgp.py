@@ -1,0 +1,273 @@
+"""Phase 1 — Cartesian Genetic Programming for approximate popcount circuits.
+
+Implements the paper's Sec. 4.1.1: a (1+lambda) evolutionary strategy over an
+integer, address-based genome.  The initial population contains the *exact*
+popcount adder tree; mutants trade arithmetic error for EGFET area under the
+constrained fitness of Eq. (3):
+
+    F(c) = area(c)  if  eps(c) <= tau   else  +inf
+
+Error evaluation is the bit-parallel sweep from `circuits.eval_vectors` —
+exhaustive for n <= 16 inputs, Hamming-weight-stratified Monte-Carlo above
+(the offline stand-in for the paper's BDD-based formal evaluation).
+
+Classic CGP efficiency trick: a mutation that touches only *inactive* genes
+yields a functionally identical circuit, so the child inherits the parent's
+fitness without re-simulation (neutral drift is retained, cf. Miller'11).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.hw.egfet import Gate
+from repro.core.circuits import (
+    Netlist,
+    eval_vectors,
+    popcount_netlist,
+    popcount_width,
+)
+
+# Function set for evolved nodes (2-input ops + unaries).
+DEFAULT_FUNCS: tuple[int, ...] = (
+    Gate.AND, Gate.OR, Gate.XOR, Gate.NAND, Gate.NOR, Gate.XNOR,
+    Gate.NOT, Gate.BUF, Gate.ANDN, Gate.ORN, Gate.CONST0, Gate.CONST1,
+)
+
+
+@dataclass
+class CGPConfig:
+    n_inputs: int
+    n_outputs: int
+    n_nodes: int                      # grid size (single row, full levels-back)
+    funcs: tuple[int, ...] = DEFAULT_FUNCS
+    lam: int = 4                      # lambda children per generation
+    mut_genes: int = 5                # genes mutated per child
+    seed: int = 0
+    max_iters: int = 2000
+    time_limit_s: float | None = None
+    error_metric: str = "mae"         # "mae" | "wcae"
+    tau: float = 0.0                  # error threshold (Eq. 3)
+
+
+@dataclass
+class CGPResult:
+    best: Netlist
+    best_area: float
+    best_error: tuple[float, float]   # (mae, wcae) of the winner
+    history: list[tuple[int, float]] = field(default_factory=list)  # (iter, area)
+    evaluations: int = 0
+
+
+class _Genome:
+    """func[g], a[g], b[g] int arrays + out[] output addresses."""
+
+    __slots__ = ("n_inputs", "func", "a", "b", "out")
+
+    def __init__(self, n_inputs, func, a, b, out):
+        self.n_inputs = n_inputs
+        self.func = func
+        self.a = a
+        self.b = b
+        self.out = out
+
+    def copy(self) -> "_Genome":
+        return _Genome(self.n_inputs, self.func.copy(), self.a.copy(),
+                       self.b.copy(), self.out.copy())
+
+    def to_netlist(self, name: str = "") -> Netlist:
+        nl = Netlist(
+            n_inputs=self.n_inputs,
+            op=self.func.astype(np.int16),
+            in0=self.a.astype(np.int32),
+            in1=self.b.astype(np.int32),
+            outputs=self.out.astype(np.int32),
+            name=name,
+        )
+        nl.validate()
+        return nl
+
+    def active_nodes(self) -> np.ndarray:
+        """Boolean mask over grid nodes reachable from outputs."""
+        n_in = self.n_inputs
+        n_nodes = self.func.shape[0]
+        live = np.zeros(n_in + n_nodes, dtype=bool)
+        live[self.out] = True
+        for g in range(n_nodes - 1, -1, -1):
+            if live[n_in + g]:
+                f = self.func[g]
+                if f not in (Gate.CONST0, Gate.CONST1):
+                    live[self.a[g]] = True
+                    if f not in (Gate.NOT, Gate.BUF):
+                        live[self.b[g]] = True
+        return live[n_in:]
+
+
+def _seed_genome(exact: Netlist, n_nodes: int, rng: np.random.Generator,
+                 funcs: tuple[int, ...]) -> _Genome:
+    """Embed the exact netlist in a larger grid; random-fill the slack."""
+    g0 = exact.n_gates
+    if n_nodes < g0:
+        raise ValueError(f"grid {n_nodes} smaller than exact circuit {g0}")
+    n_in = exact.n_inputs
+    func = np.empty(n_nodes, dtype=np.int64)
+    a = np.empty(n_nodes, dtype=np.int64)
+    b = np.empty(n_nodes, dtype=np.int64)
+    func[:g0] = exact.op
+    a[:g0] = exact.in0
+    b[:g0] = exact.in1
+    for g in range(g0, n_nodes):
+        func[g] = funcs[rng.integers(len(funcs))]
+        a[g] = rng.integers(n_in + g)
+        b[g] = rng.integers(n_in + g)
+    return _Genome(n_in, func, a, b, exact.outputs.astype(np.int64).copy())
+
+
+def _mutate(parent: _Genome, cfg: CGPConfig, rng: np.random.Generator) -> tuple["_Genome", bool]:
+    """Point-mutate `mut_genes` genes; report whether any *active* gene moved."""
+    child = parent.copy()
+    n_nodes = child.func.shape[0]
+    n_in = cfg.n_inputs
+    active = parent.active_nodes()
+    touched_active = False
+    n_genes = 3 * n_nodes + child.out.shape[0]
+    for _ in range(cfg.mut_genes):
+        gi = int(rng.integers(n_genes))
+        if gi < 3 * n_nodes:
+            g, which = divmod(gi, 3)
+            if which == 0:
+                child.func[g] = cfg.funcs[rng.integers(len(cfg.funcs))]
+            elif which == 1:
+                child.a[g] = rng.integers(n_in + g)
+            else:
+                child.b[g] = rng.integers(n_in + g)
+            if active[g]:
+                touched_active = True
+        else:
+            o = gi - 3 * n_nodes
+            child.out[o] = rng.integers(n_in + n_nodes)
+            touched_active = True
+    return child, touched_active
+
+
+def _area_of(genome: _Genome) -> float:
+    return genome.to_netlist().cost().area_mm2
+
+
+def _errors(genome: _Genome, packed: np.ndarray, true: np.ndarray) -> tuple[float, float]:
+    approx = genome.to_netlist().eval_uint(packed)
+    err = np.abs(approx - true)
+    return float(err.mean()), float(err.max())
+
+
+def evolve_popcount(cfg: CGPConfig,
+                    exact: Netlist | None = None,
+                    eval_set: tuple[np.ndarray, np.ndarray] | None = None) -> CGPResult:
+    """(1+lambda) CGP search for an approximate popcount under eps <= tau."""
+    rng = np.random.default_rng(cfg.seed)
+    n = cfg.n_inputs
+    exact = exact if exact is not None else popcount_netlist(n)
+    assert exact.n_outputs == cfg.n_outputs
+    packed, true = eval_set if eval_set is not None else eval_vectors(n)
+
+    parent = _seed_genome(exact, cfg.n_nodes, rng, cfg.funcs)
+    p_err = _errors(parent, packed, true)
+    p_fit = _area_of(parent)  # exact circuit always satisfies tau
+    evaluations = 1
+    history = [(0, p_fit)]
+    t0 = time.monotonic()
+
+    def fitness(err: tuple[float, float], area: float) -> float:
+        e = err[0] if cfg.error_metric == "mae" else err[1]
+        return area if e <= cfg.tau else float("inf")
+
+    best_g, best_fit, best_err = parent.copy(), p_fit, p_err
+    for it in range(1, cfg.max_iters + 1):
+        if cfg.time_limit_s is not None and time.monotonic() - t0 > cfg.time_limit_s:
+            break
+        children = []
+        for _ in range(cfg.lam):
+            child, touched = _mutate(parent, cfg, rng)
+            if touched:
+                c_err = _errors(child, packed, true)
+                evaluations += 1
+            else:
+                c_err = p_err      # functionally identical
+            c_fit = fitness(c_err, _area_of(child))
+            children.append((c_fit, c_err, child))
+        c_fit, c_err, child = min(children, key=lambda t: t[0])
+        # <= : accept neutral moves (CGP drift)
+        if c_fit <= (p_fit if np.isfinite(p_fit) else float("inf")):
+            parent, p_fit, p_err = child, c_fit, c_err
+        if c_fit < best_fit:
+            best_g, best_fit, best_err = child.copy(), c_fit, c_err
+            history.append((it, best_fit))
+
+    name = f"pc{n}_cgp_{cfg.error_metric}{cfg.tau:g}_s{cfg.seed}"
+    best_nl = best_g.to_netlist(name=name)
+    best_nl.meta.update({"n": n, "tau": cfg.tau, "metric": cfg.error_metric,
+                         "mae": best_err[0], "wcae": best_err[1]})
+    return CGPResult(best=best_nl, best_area=best_fit, best_error=best_err,
+                     history=history, evaluations=evaluations)
+
+
+def tau_schedule(n: int, n_points: int = 6) -> list[tuple[str, float]]:
+    """The paper's error-limit grid: tau_mae log-spaced in [0.1, 0.5*2^m],
+    tau_wcae log-spaced in [1, 0.5*2^m], with m = ceil(log2 n)."""
+    m = max(1, int(np.ceil(np.log2(n))))
+    hi = 0.5 * (1 << m)
+    taus_mae = np.geomspace(0.1, hi, n_points)
+    taus_wcae = np.geomspace(1.0, hi, n_points)
+    return [("mae", float(t)) for t in taus_mae] + [("wcae", float(t)) for t in taus_wcae]
+
+
+def _best_feasible_seed(n: int, metric: str, tau: float,
+                        packed, true) -> Netlist:
+    """Cheapest known-feasible start: the exact tree or a truncated variant
+    already satisfying tau (warm-starting CGP from the truncation baseline
+    converges far faster than from the exact circuit alone)."""
+    from repro.core.circuits import truncated_popcount_netlist
+    best = popcount_netlist(n)
+    best_area = best.cost().area_mm2
+    for drop in range(1, n - 1):
+        nl = truncated_popcount_netlist(n, drop)
+        mae, wcae = (np.abs(nl.eval_uint(packed) - true).mean(),
+                     np.abs(nl.eval_uint(packed) - true).max())
+        err = mae if metric == "mae" else wcae
+        a = nl.cost().area_mm2
+        if err <= tau and a < best_area:
+            best, best_area = nl, a
+    return best
+
+
+def evolve_pc_library(n: int,
+                      n_points: int = 4,
+                      max_iters: int = 800,
+                      n_nodes: int | None = None,
+                      seed: int = 0,
+                      time_limit_s: float | None = None) -> list[Netlist]:
+    """Evolve a small library of approximate n-input popcounts across the tau
+    grid.  Always includes the exact circuit as the zero-error member."""
+    exact = popcount_netlist(n)
+    exact.meta.update({"mae": 0.0, "wcae": 0.0, "tau": 0.0, "metric": "exact"})
+    packed, true = eval_vectors(n)
+    grid = n_nodes if n_nodes is not None else max(exact.n_gates + 16, int(exact.n_gates * 1.5))
+    lib = [exact]
+    for i, (metric, tau) in enumerate(tau_schedule(n, n_points)):
+        seed_nl = _best_feasible_seed(n, metric, tau, packed, true)
+        cfg = CGPConfig(n_inputs=n, n_outputs=popcount_width(n), n_nodes=grid,
+                        seed=seed + i, max_iters=max_iters, tau=tau,
+                        error_metric=metric, time_limit_s=time_limit_s)
+        res = evolve_popcount(cfg, exact=seed_nl, eval_set=(packed, true))
+        if np.isfinite(res.best_area):
+            lib.append(res.best)
+    # dedupe by (area, mae) signature
+    seen, out = set(), []
+    for nl in lib:
+        key = (round(nl.cost().area_mm2, 6), round(nl.meta.get("mae", 0.0), 6))
+        if key not in seen:
+            seen.add(key)
+            out.append(nl)
+    return out

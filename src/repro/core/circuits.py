@@ -1,0 +1,419 @@
+"""Gate-level netlists + bit-parallel simulation + EGFET cost.
+
+This is the substrate for the paper's three-phase approximation flow:
+  * Phase 1 (CGP) mutates netlists of this form and needs fast error
+    evaluation -> `simulate()` is bit-parallel: every uint64 word carries 64
+    test vectors, so exhaustive evaluation of an n<=16-input circuit touches
+    2**n / 64 words per signal (the offline stand-in for the paper's BDDs).
+  * Phase 2 composes popcount netlists + comparators into PCC circuits.
+  * Phase 3 plugs chosen netlists into the circuit-accurate TNN.
+
+Node ids: inputs are 0..n_inputs-1; gate g (0-based) has id n_inputs+g and
+may only read strictly smaller ids (a feed-forward DAG by construction).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.hw.egfet import Gate, GATE_AREA_MM2, GATE_POWER_UW, HwCost
+
+_U64 = np.uint64
+_FULL = _U64(0xFFFFFFFFFFFFFFFF)
+
+
+@dataclass
+class Netlist:
+    n_inputs: int
+    op: np.ndarray        # (n_gates,) int16 Gate opcodes
+    in0: np.ndarray       # (n_gates,) int32 node ids
+    in1: np.ndarray       # (n_gates,) int32 node ids
+    outputs: np.ndarray   # (n_outputs,) int32 node ids, LSB-first
+    name: str = ""
+    meta: dict = field(default_factory=dict)
+
+    # -- structure ----------------------------------------------------------
+    @property
+    def n_gates(self) -> int:
+        return int(self.op.shape[0])
+
+    @property
+    def n_outputs(self) -> int:
+        return int(self.outputs.shape[0])
+
+    def validate(self) -> None:
+        ids = np.arange(self.n_gates) + self.n_inputs
+        if self.n_gates:
+            if (self.in0 >= ids).any() or (self.in1 >= ids).any():
+                raise ValueError("netlist is not feed-forward")
+            if (self.in0 < 0).any() or (self.in1 < 0).any():
+                raise ValueError("negative input id")
+        if (self.outputs < 0).any() or (self.outputs >= self.n_inputs + self.n_gates).any():
+            raise ValueError("output id out of range")
+
+    def active_mask(self) -> np.ndarray:
+        """Boolean mask over gates reachable from the outputs (live logic)."""
+        live = np.zeros(self.n_inputs + self.n_gates, dtype=bool)
+        live[self.outputs] = True
+        # reverse sweep: DAG edges always point backwards
+        for g in range(self.n_gates - 1, -1, -1):
+            nid = self.n_inputs + g
+            if live[nid]:
+                o = self.op[g]
+                if o not in (Gate.INPUT, Gate.CONST0, Gate.CONST1):
+                    live[self.in0[g]] = True
+                    if o not in (Gate.NOT, Gate.BUF):
+                        live[self.in1[g]] = True
+        return live[self.n_inputs:]
+
+    # -- cost ---------------------------------------------------------------
+    def cost(self) -> HwCost:
+        act = self.active_mask()
+        ops = self.op[act]
+        area = sum(GATE_AREA_MM2[int(o)] for o in ops)
+        power = sum(GATE_POWER_UW[int(o)] for o in ops) * 1e-3
+        return HwCost(area, power)
+
+    def area(self) -> float:
+        return self.cost().area_mm2
+
+    # -- simulation ---------------------------------------------------------
+    def simulate(self, inputs: np.ndarray) -> np.ndarray:
+        """Bit-parallel evaluation.
+
+        inputs: uint64 (n_inputs, W) — bit k of word w of row i is test
+        vector (w*64+k)'s value for input i.  Returns (n_outputs, W).
+        """
+        if inputs.shape[0] != self.n_inputs:
+            raise ValueError(f"expected {self.n_inputs} input rows, got {inputs.shape[0]}")
+        W = inputs.shape[1]
+        vals = np.zeros((self.n_inputs + self.n_gates, W), dtype=_U64)
+        vals[: self.n_inputs] = inputs
+        op, in0, in1 = self.op, self.in0, self.in1
+        for g in range(self.n_gates):
+            o = op[g]
+            a = vals[in0[g]]
+            if o == Gate.CONST0:
+                continue  # already zeros
+            if o == Gate.CONST1:
+                vals[self.n_inputs + g] = _FULL
+                continue
+            if o == Gate.BUF:
+                vals[self.n_inputs + g] = a
+                continue
+            if o == Gate.NOT:
+                vals[self.n_inputs + g] = ~a
+                continue
+            b = vals[in1[g]]
+            if o == Gate.AND:
+                r = a & b
+            elif o == Gate.OR:
+                r = a | b
+            elif o == Gate.XOR:
+                r = a ^ b
+            elif o == Gate.NAND:
+                r = ~(a & b)
+            elif o == Gate.NOR:
+                r = ~(a | b)
+            elif o == Gate.XNOR:
+                r = ~(a ^ b)
+            elif o == Gate.ANDN:
+                r = a & ~b
+            elif o == Gate.ORN:
+                r = a | ~b
+            else:
+                raise ValueError(f"bad opcode {o}")
+            vals[self.n_inputs + g] = r
+        return vals[self.outputs]
+
+    def eval_uint(self, inputs: np.ndarray) -> np.ndarray:
+        """Simulate and decode outputs (LSB-first) into per-vector uints.
+
+        Returns int64 array of shape (W*64,).
+        """
+        outw = self.simulate(inputs)  # (n_out, W)
+        W = outw.shape[1]
+        bits = np.unpackbits(
+            outw.view(np.uint8).reshape(self.n_outputs, W, 8)[..., ::-1], axis=-1
+        )  # big-endian per u64 -> reverse byte order first
+        # bits: (n_out, W, 64) with bit index 63..0 -> flip to LSB-first order
+        bits = bits[..., ::-1].reshape(self.n_outputs, W * 64)
+        weights = (1 << np.arange(self.n_outputs, dtype=np.int64))[:, None]
+        return (bits.astype(np.int64) * weights).sum(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+class _Builder:
+    """Convenience netlist builder (ids flow through python ints)."""
+
+    def __init__(self, n_inputs: int):
+        self.n_inputs = n_inputs
+        self.ops: list[int] = []
+        self.i0: list[int] = []
+        self.i1: list[int] = []
+
+    def gate(self, op: int, a: int, b: int | None = None) -> int:
+        self.ops.append(int(op))
+        self.i0.append(int(a))
+        self.i1.append(int(b if b is not None else a))
+        return self.n_inputs + len(self.ops) - 1
+
+    def const(self, v: int) -> int:
+        return self.gate(Gate.CONST1 if v else Gate.CONST0, 0)
+
+    def half_adder(self, a: int, b: int) -> tuple[int, int]:
+        return self.gate(Gate.XOR, a, b), self.gate(Gate.AND, a, b)
+
+    def full_adder(self, a: int, b: int, c: int) -> tuple[int, int]:
+        x = self.gate(Gate.XOR, a, b)
+        s = self.gate(Gate.XOR, x, c)
+        g1 = self.gate(Gate.AND, a, b)
+        g2 = self.gate(Gate.AND, x, c)
+        cout = self.gate(Gate.OR, g1, g2)
+        return s, cout
+
+    def finish(self, outputs: list[int], name: str = "", meta: dict | None = None) -> Netlist:
+        nl = Netlist(
+            n_inputs=self.n_inputs,
+            op=np.array(self.ops, dtype=np.int16),
+            in0=np.array(self.i0, dtype=np.int32),
+            in1=np.array(self.i1, dtype=np.int32),
+            outputs=np.array(outputs, dtype=np.int32),
+            name=name,
+            meta=meta or {},
+        )
+        nl.validate()
+        return nl
+
+
+def popcount_width(n: int) -> int:
+    """Output bits needed to represent popcount of n inputs (0..n)."""
+    return max(1, int(np.ceil(np.log2(n + 1))))
+
+
+def _reduce_counter(b: _Builder, bits: list[int]) -> list[int]:
+    """Sum a list of equal-weight bits into a binary number (LSB-first ids).
+
+    Classic carry-save counter tree: fold triples through full adders, pairs
+    through half adders, recursing on the carries at the next weight.
+    """
+    layers: dict[int, list[int]] = {0: list(bits)}
+    result: list[int] = []
+    w = 0
+    while any(layers.get(k) for k in layers if k >= w):
+        cur = layers.setdefault(w, [])
+        while len(cur) >= 3:
+            s, co = b.full_adder(cur.pop(), cur.pop(), cur.pop())
+            cur.append(s)
+            layers.setdefault(w + 1, []).append(co)
+        if len(cur) == 2:
+            s, co = b.half_adder(cur.pop(), cur.pop())
+            cur.append(s)
+            layers.setdefault(w + 1, []).append(co)
+        result.append(cur[0] if cur else b.const(0))
+        w += 1
+        if w > 64:
+            raise RuntimeError("counter runaway")
+    return result
+
+
+def popcount_netlist(n: int) -> Netlist:
+    """Exact n-input popcount as a carry-save adder tree."""
+    b = _Builder(n)
+    outs = _reduce_counter(b, list(range(n)))
+    m = popcount_width(n)
+    while len(outs) < m:
+        outs.append(b.const(0))
+    return b.finish(outs[:m], name=f"pc{n}_exact", meta={"n": n, "exact": True})
+
+
+def truncated_popcount_netlist(n: int, drop: int) -> Netlist:
+    """Truncation baseline (Fig. 4): ignore the last `drop` inputs and add
+    a constant compensation of drop/2 (round-to-nearest expected value)."""
+    b = _Builder(n)
+    outs = _reduce_counter(b, list(range(n - drop)))
+    m = popcount_width(n)
+    comp = drop // 2
+    # add constant comp via wiring const-1s into the counter would be wasteful;
+    # instead add comp as extra const bits (synthesizable: they fold away).
+    if comp:
+        cbits = []
+        for k in range(m):
+            if (comp >> k) & 1:
+                cbits.append((k, b.const(1)))
+        # ripple-add the constant
+        res = list(outs) + [b.const(0)] * (m - len(outs))
+        carry = None
+        for k in range(m):
+            addend = None
+            for kk, cid in cbits:
+                if kk == k:
+                    addend = cid
+            terms = [t for t in (res[k] if k < len(res) else None, addend, carry) if t is not None]
+            if len(terms) == 3:
+                s, carry = b.full_adder(*terms)
+            elif len(terms) == 2:
+                s, carry = b.half_adder(*terms)
+            else:
+                s, carry = (terms[0] if terms else b.const(0)), None
+            if k < len(res):
+                res[k] = s
+            else:
+                res.append(s)
+        outs = res
+    m = popcount_width(n)
+    while len(outs) < m:
+        outs.append(b.const(0))
+    return b.finish(outs[:m], name=f"pc{n}_trunc{drop}", meta={"n": n, "drop": drop})
+
+
+def comparator_geq_netlist(j: int) -> Netlist:
+    """j-bit unsigned comparator: out = (a >= b).
+
+    Inputs: a_0..a_{j-1} (ids 0..j-1, LSB first), b_0..b_{j-1} (ids j..2j-1).
+    """
+    b = _Builder(2 * j)
+    ge = b.gate(Gate.ORN, 0, j)  # a0 OR NOT b0  == a0 >= b0
+    for k in range(1, j):
+        a_k, b_k = k, j + k
+        gt = b.gate(Gate.ANDN, a_k, b_k)
+        eq = b.gate(Gate.XNOR, a_k, b_k)
+        keep = b.gate(Gate.AND, eq, ge)
+        ge = b.gate(Gate.OR, gt, keep)
+    return b.finish([ge], name=f"cmp_geq{j}", meta={"j": j})
+
+
+def compose_pcc(pc_pos: Netlist, pc_neg: Netlist, n_pos: int, n_neg: int) -> Netlist:
+    """Popcount-compare circuit: out = (pc_pos(x_pos) >= pc_neg(x_neg)).
+
+    Inputs: first n_pos bits then n_neg bits.  The two PC netlists are
+    inlined, zero-extended to a common width j, followed by the comparator.
+    """
+    j = max(popcount_width(n_pos), popcount_width(n_neg))
+    b = _Builder(n_pos + n_neg)
+
+    def inline(nl: Netlist, input_map: list[int]) -> list[int]:
+        remap = list(input_map)  # id in nl -> id in b
+        for g in range(nl.n_gates):
+            o = int(nl.op[g])
+            a = remap[nl.in0[g]]
+            c = remap[nl.in1[g]]
+            remap.append(b.gate(o, a, c))
+        return [remap[int(i)] for i in nl.outputs]
+
+    pos_out = inline(pc_pos, list(range(n_pos)))
+    neg_out = inline(pc_neg, list(range(n_pos, n_pos + n_neg)))
+    zero = None
+
+    def pad(bits: list[int]) -> list[int]:
+        nonlocal zero
+        while len(bits) < j:
+            if zero is None:
+                zero = b.const(0)
+            bits.append(zero)
+        return bits[:j]
+
+    a_bits = pad(pos_out)
+    b_bits = pad(neg_out)
+    # inline comparator: ge = a >= b
+    ge = b.gate(Gate.ORN, a_bits[0], b_bits[0])
+    for k in range(1, j):
+        gt = b.gate(Gate.ANDN, a_bits[k], b_bits[k])
+        eq = b.gate(Gate.XNOR, a_bits[k], b_bits[k])
+        keep = b.gate(Gate.AND, eq, ge)
+        ge = b.gate(Gate.OR, gt, keep)
+    nl = b.finish(
+        [ge],
+        name=f"pcc_{n_pos}x{n_neg}[{pc_pos.name},{pc_neg.name}]",
+        meta={"n_pos": n_pos, "n_neg": n_neg, "pos": pc_pos.name, "neg": pc_neg.name},
+    )
+    return nl
+
+
+# ---------------------------------------------------------------------------
+# Test-vector generation (the BDD stand-in)
+# ---------------------------------------------------------------------------
+def pack_vectors(vectors: np.ndarray) -> np.ndarray:
+    """Pack boolean test vectors (S, n) into uint64 words (n, ceil(S/64)).
+
+    Vector s lands in bit (s % 64) of word (s // 64).
+    """
+    S, n = vectors.shape
+    W = (S + 63) // 64
+    padded = np.zeros((W * 64, n), dtype=np.uint8)
+    padded[:S] = vectors.astype(np.uint8)
+    # bit k of word w <- vector w*64+k  => within each 64 block, LSB-first
+    blocks = padded.reshape(W, 64, n)
+    weights = (np.uint64(1) << np.arange(64, dtype=np.uint64))[None, :, None]
+    words = (blocks.astype(np.uint64) * weights).sum(axis=1, dtype=np.uint64)  # (W, n)
+    return np.ascontiguousarray(words.T)
+
+
+def exhaustive_vectors(n: int) -> np.ndarray:
+    """All 2^n input vectors, packed: (n, 2^n/64) uint64."""
+    if n > 22:
+        raise ValueError("exhaustive sweep limited to n<=22")
+    S = 1 << n
+    idx = np.arange(S, dtype=np.uint64)
+    vecs = ((idx[:, None] >> np.arange(n, dtype=np.uint64)[None, :]) & np.uint64(1)).astype(np.uint8)
+    return pack_vectors(vecs)
+
+
+def stratified_vectors(n: int, n_samples: int, seed: int = 0) -> np.ndarray:
+    """Hamming-weight-stratified random vectors for n > exhaustive limit.
+
+    Popcount-circuit error depends on input weight, so uniform-bit sampling
+    under-covers extreme weights; stratify ~uniformly over weights 0..n plus
+    a uniform-bit tail (mirrors the paper's 1e6-random-pair methodology).
+    """
+    rng = np.random.default_rng(seed)
+    per_w = max(1, n_samples // (2 * (n + 1)))
+    rows = []
+    for w in range(n + 1):
+        m = np.zeros((per_w, n), dtype=np.uint8)
+        for r in range(per_w):
+            m[r, rng.choice(n, size=w, replace=False)] = 1
+        rows.append(m)
+    n_tail = max(0, n_samples - per_w * (n + 1))
+    if n_tail:
+        rows.append((rng.random((n_tail, n)) < 0.5).astype(np.uint8))
+    vecs = np.concatenate(rows, axis=0)
+    return pack_vectors(vecs)
+
+
+def eval_vectors(n: int, exhaustive_limit: int = 16, n_samples: int = 1 << 17,
+                 seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """(packed_inputs, true_popcounts) for error evaluation of an n-bit PC."""
+    if n <= exhaustive_limit:
+        packed = exhaustive_vectors(n)
+        S = 1 << n
+        idx = np.arange(S, dtype=np.uint64)
+        true = np.zeros(S, dtype=np.int64)
+        for k in range(n):
+            true += ((idx >> np.uint64(k)) & np.uint64(1)).astype(np.int64)
+        # pad up to word multiple with vector 0 replicas (weight 0)
+        W = packed.shape[1]
+        if W * 64 > S:
+            true = np.concatenate([true, np.zeros(W * 64 - S, dtype=np.int64)])
+        return packed, true
+    packed = stratified_vectors(n, n_samples, seed)
+    true = popcount_of_packed(packed)
+    return packed, true
+
+
+def popcount_of_packed(packed: np.ndarray) -> np.ndarray:
+    """True per-vector popcount from packed inputs (n, W) -> (W*64,)."""
+    n, W = packed.shape
+    bits = np.unpackbits(packed.view(np.uint8).reshape(n, W, 8)[..., ::-1], axis=-1)
+    bits = bits[..., ::-1].reshape(n, W * 64)
+    return bits.sum(axis=0).astype(np.int64)
+
+
+def pc_error(nl: Netlist, packed: np.ndarray, true: np.ndarray) -> tuple[float, float]:
+    """(mean_abs_error, worst_case_abs_error) of a popcount netlist."""
+    approx = nl.eval_uint(packed)
+    err = np.abs(approx - true)
+    return float(err.mean()), float(err.max())

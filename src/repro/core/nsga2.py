@@ -1,0 +1,179 @@
+"""Phase 3 — NSGA-II multi-objective integration (Deb et al. 2002).
+
+The paper encodes an approximate TNN as an integer chromosome: one gene per
+neuron, indexing into that neuron's candidate list (PCC library entries for
+hidden neurons, PC library entries for output neurons).  Objectives are
+(1 - accuracy, total estimated area), both minimized.  Operators follow the
+paper's pymoo setup: simulated-binary crossover + polynomial mutation adapted
+to integers (value rounded + clipped to the per-gene domain).
+
+This module is problem-agnostic: `nsga2(...)` takes per-gene domain sizes and
+a vectorized objective callback, so tests can drive it on synthetic problems
+and `core.tnn` uses it for the real TNN integration.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+
+@dataclass
+class NSGA2Config:
+    pop_size: int = 40
+    n_generations: int = 60
+    crossover_prob: float = 0.9
+    crossover_eta: float = 15.0
+    mutation_eta: float = 20.0
+    mutation_prob: float | None = None   # default 1/n_genes
+    seed: int = 0
+
+
+@dataclass
+class NSGA2Result:
+    pareto_x: np.ndarray     # (P, n_genes) int
+    pareto_f: np.ndarray     # (P, 2) objectives
+    history: list[tuple[int, float, float]] = field(default_factory=list)
+    # history rows: (generation, best obj0 on front, best obj1 on front)
+
+
+# ---------------------------------------------------------------------------
+# Core NSGA-II machinery
+# ---------------------------------------------------------------------------
+def fast_non_dominated_sort(F: np.ndarray) -> list[np.ndarray]:
+    """Return fronts (lists of indices), best first. F: (N, M) minimized."""
+    N = F.shape[0]
+    # dominates[i, j] = i dominates j
+    le = (F[:, None, :] <= F[None, :, :]).all(-1)
+    lt = (F[:, None, :] < F[None, :, :]).any(-1)
+    dom = le & lt
+    n_dominated = dom.sum(0)         # how many dominate each j
+    fronts = []
+    current = np.where(n_dominated == 0)[0]
+    assigned = np.zeros(N, dtype=bool)
+    while current.size:
+        fronts.append(current)
+        assigned[current] = True
+        n_dominated = n_dominated - dom[current].sum(0)
+        nxt = np.where((n_dominated == 0) & ~assigned)[0]
+        current = nxt
+    return fronts
+
+
+def crowding_distance(F: np.ndarray) -> np.ndarray:
+    N, M = F.shape
+    if N <= 2:
+        return np.full(N, np.inf)
+    dist = np.zeros(N)
+    for m in range(M):
+        order = np.argsort(F[:, m], kind="stable")
+        fmin, fmax = F[order[0], m], F[order[-1], m]
+        dist[order[0]] = dist[order[-1]] = np.inf
+        if fmax - fmin > 1e-15:
+            dist[order[1:-1]] += (F[order[2:], m] - F[order[:-2], m]) / (fmax - fmin)
+    return dist
+
+
+def _tournament(rank, crowd, rng, k=2):
+    cand = rng.integers(rank.shape[0], size=k)
+    best = cand[0]
+    for c in cand[1:]:
+        if (rank[c] < rank[best]) or (rank[c] == rank[best] and crowd[c] > crowd[best]):
+            best = c
+    return best
+
+
+def _sbx_int(p1, p2, domains, eta, prob, rng):
+    """Integer-adapted simulated binary crossover."""
+    c1, c2 = p1.astype(np.float64).copy(), p2.astype(np.float64).copy()
+    if rng.random() < prob:
+        for i in range(p1.shape[0]):
+            if rng.random() < 0.5 and abs(p1[i] - p2[i]) > 1e-12:
+                x1, x2 = sorted((float(p1[i]), float(p2[i])))
+                u = rng.random()
+                beta = (2 * u) ** (1 / (eta + 1)) if u <= 0.5 else (1 / (2 * (1 - u))) ** (1 / (eta + 1))
+                c1[i] = 0.5 * ((x1 + x2) - beta * (x2 - x1))
+                c2[i] = 0.5 * ((x1 + x2) + beta * (x2 - x1))
+    hi = domains.astype(np.float64) - 1
+    c1 = np.clip(np.rint(c1), 0, hi).astype(np.int64)
+    c2 = np.clip(np.rint(c2), 0, hi).astype(np.int64)
+    return c1, c2
+
+
+def _poly_mutate_int(x, domains, eta, prob, rng):
+    y = x.astype(np.float64).copy()
+    hi = domains.astype(np.float64) - 1
+    for i in range(x.shape[0]):
+        if hi[i] <= 0 or rng.random() >= prob:
+            continue
+        u = rng.random()
+        delta = (2 * u) ** (1 / (eta + 1)) - 1 if u < 0.5 else 1 - (2 * (1 - u)) ** (1 / (eta + 1))
+        y[i] = y[i] + delta * hi[i]
+    return np.clip(np.rint(y), 0, hi).astype(np.int64)
+
+
+def nsga2(domains: np.ndarray,
+          objective: Callable[[np.ndarray], np.ndarray],
+          cfg: NSGA2Config,
+          seed_population: np.ndarray | None = None) -> NSGA2Result:
+    """Minimize a 2-objective function over integer chromosomes.
+
+    domains:  (n_genes,) number of choices per gene (gene i in [0, domains[i})).
+    objective: (N, n_genes) int -> (N, 2) float, both minimized.
+    seed_population: optional known-good individuals (e.g. the all-exact TNN).
+    """
+    rng = np.random.default_rng(cfg.seed)
+    n_genes = domains.shape[0]
+    mut_prob = cfg.mutation_prob if cfg.mutation_prob is not None else 1.0 / max(1, n_genes)
+
+    pop = rng.integers(0, domains[None, :], size=(cfg.pop_size, n_genes))
+    if seed_population is not None:
+        k = min(seed_population.shape[0], cfg.pop_size)
+        pop[:k] = seed_population[:k]
+    F = objective(pop)
+
+    history: list[tuple[int, float, float]] = []
+    for gen in range(cfg.n_generations):
+        fronts = fast_non_dominated_sort(F)
+        rank = np.empty(cfg.pop_size, dtype=np.int64)
+        crowd = np.empty(cfg.pop_size)
+        for r, fr in enumerate(fronts):
+            rank[fr] = r
+            crowd[fr] = crowding_distance(F[fr])
+        history.append((gen, float(F[fronts[0], 0].min()), float(F[fronts[0], 1].min())))
+
+        children = []
+        while len(children) < cfg.pop_size:
+            i1 = _tournament(rank, crowd, rng)
+            i2 = _tournament(rank, crowd, rng)
+            c1, c2 = _sbx_int(pop[i1], pop[i2], domains, cfg.crossover_eta,
+                              cfg.crossover_prob, rng)
+            children.append(_poly_mutate_int(c1, domains, cfg.mutation_eta, mut_prob, rng))
+            if len(children) < cfg.pop_size:
+                children.append(_poly_mutate_int(c2, domains, cfg.mutation_eta, mut_prob, rng))
+        Q = np.stack(children)
+        FQ = objective(Q)
+
+        R = np.concatenate([pop, Q], axis=0)
+        FR = np.concatenate([F, FQ], axis=0)
+        fronts = fast_non_dominated_sort(FR)
+        new_idx: list[int] = []
+        for fr in fronts:
+            if len(new_idx) + fr.size <= cfg.pop_size:
+                new_idx.extend(fr.tolist())
+            else:
+                cd = crowding_distance(FR[fr])
+                order = np.argsort(-cd, kind="stable")
+                need = cfg.pop_size - len(new_idx)
+                new_idx.extend(fr[order[:need]].tolist())
+                break
+        pop, F = R[new_idx], FR[new_idx]
+
+    fronts = fast_non_dominated_sort(F)
+    fr0 = fronts[0]
+    # dedupe identical objective rows for a clean reported front
+    _, uniq = np.unique(np.round(F[fr0], 10), axis=0, return_index=True)
+    sel = fr0[np.sort(uniq)]
+    order = np.argsort(F[sel, 0], kind="stable")
+    return NSGA2Result(pareto_x=pop[sel[order]], pareto_f=F[sel[order]], history=history)

@@ -1,0 +1,149 @@
+"""Phase 2 — approximate popcount-compare (PCC) circuits + Pareto analysis.
+
+A hidden-layer ternary neuron computes Eq. (2):
+
+    popcount(inputs with w=+1)  >=  popcount(inputs with w=-1)
+
+A PCC circuit = PC(n_pos) + PC(n_neg) + j-bit comparator.  Approximating it
+with Hamming distance on the single-bit output is misleading (Sec. 4.1.2), so
+the paper defines the *distance metric*:
+
+    D(x, z) = 0      if rel(x,z) == rel'(x,z)
+              x - z  otherwise                                   (Eq. 4)
+
+and eps_mde / eps_wcde as mean/max |D| over the input domain G (Eq. 5),
+estimated over 1e6 random (x, z) pairs.  Pareto-optimal (eps_mde, est. area)
+combinations of approximate PCs form the PCC library used by Phase 3.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.circuits import (
+    Netlist,
+    compose_pcc,
+    pack_vectors,
+    popcount_netlist,
+    popcount_of_packed,
+)
+
+
+@dataclass
+class PCCEntry:
+    """One approximate PCC candidate (a pair of PC circuits + comparator)."""
+
+    n_pos: int
+    n_neg: int
+    pc_pos: Netlist
+    pc_neg: Netlist
+    est_area: float          # sum of PC areas (the paper's Phase-2 proxy)
+    mde: float               # eps_mde over the sampled domain
+    wcde: float              # eps_wcde
+    correct_frac: float      # fraction of error-free PCC decisions
+    netlist: Netlist | None = None   # composed circuit (built lazily)
+
+    def compose(self) -> Netlist:
+        if self.netlist is None:
+            self.netlist = compose_pcc(self.pc_pos, self.pc_neg, self.n_pos, self.n_neg)
+        return self.netlist
+
+    @property
+    def synth_area(self) -> float:
+        """'Post-synthesis' area: cost model applied to the composed netlist
+        (includes the comparator the Phase-2 estimate ignores, cf. Fig. 6)."""
+        return self.compose().cost().area_mm2
+
+
+@dataclass
+class PCCLibrary:
+    """Pareto-optimal PCC entries per (n_pos, n_neg) size."""
+
+    entries: dict[tuple[int, int], list[PCCEntry]] = field(default_factory=dict)
+
+    def sizes(self) -> list[tuple[int, int]]:
+        return sorted(self.entries)
+
+    def get(self, n_pos: int, n_neg: int) -> list[PCCEntry]:
+        return self.entries[(n_pos, n_neg)]
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self.entries.values())
+
+
+def _rand_bit_matrix(rng: np.random.Generator, n_samples: int, n: int) -> np.ndarray:
+    return (rng.random((n_samples, n)) < 0.5).astype(np.uint8)
+
+
+def evaluate_pcc_pair(pc_pos: Netlist, pc_neg: Netlist, n_pos: int, n_neg: int,
+                      n_samples: int = 100_000, seed: int = 0,
+                      ) -> tuple[float, float, float]:
+    """(eps_mde, eps_wcde, correct_frac) of a PC-pair over random samples.
+
+    x = true popcount of the positive vector, z = of the negative vector;
+    rel = (x >= z); rel' = (pc_pos'(v_pos) >= pc_neg'(v_neg)).
+    """
+    rng = np.random.default_rng(seed)
+    vp = _rand_bit_matrix(rng, n_samples, n_pos)
+    vn = _rand_bit_matrix(rng, n_samples, n_neg)
+    pp, pn = pack_vectors(vp), pack_vectors(vn)
+    x = popcount_of_packed(pp)[: n_samples]
+    z = popcount_of_packed(pn)[: n_samples]
+    xa = pc_pos.eval_uint(pp)[: n_samples]
+    za = pc_neg.eval_uint(pn)[: n_samples]
+    rel = x >= z
+    rel_a = xa >= za
+    D = np.where(rel == rel_a, 0, x - z)
+    abs_d = np.abs(D)
+    return float(abs_d.mean()), float(abs_d.max()), float((rel == rel_a).mean())
+
+
+def _pareto_front(points: list[tuple[float, float, int]]) -> list[int]:
+    """Indices of the Pareto front minimizing both coords (mde, area)."""
+    order = sorted(range(len(points)), key=lambda i: (points[i][0], points[i][1]))
+    front, best_area = [], float("inf")
+    for i in order:
+        if points[i][1] < best_area - 1e-12:
+            front.append(i)
+            best_area = points[i][1]
+    return front
+
+
+def build_pcc_library(sizes: list[tuple[int, int]],
+                      pc_libs: dict[int, list[Netlist]],
+                      n_samples: int = 100_000,
+                      seed: int = 0,
+                      max_per_size: int = 10) -> PCCLibrary:
+    """For every (n_pos, n_neg) size used by the target TNNs: evaluate all
+    combinations of approximate PC circuits and keep the Pareto front on
+    (eps_mde, estimated area).  Exact PC circuits are the zero-error members.
+    """
+    lib = PCCLibrary()
+    for (n_pos, n_neg) in sizes:
+        pos_cands = pc_libs.get(n_pos) or [popcount_netlist(n_pos)]
+        neg_cands = pc_libs.get(n_neg) or [popcount_netlist(n_neg)]
+        cands: list[PCCEntry] = []
+        for i, pp in enumerate(pos_cands):
+            for k, pn in enumerate(neg_cands):
+                mde, wcde, cf = evaluate_pcc_pair(
+                    pp, pn, n_pos, n_neg, n_samples=n_samples,
+                    seed=seed + 7919 * i + 104729 * k)
+                est = pp.cost().area_mm2 + pn.cost().area_mm2
+                cands.append(PCCEntry(n_pos, n_neg, pp, pn, est, mde, wcde, cf))
+        pts = [(c.mde, c.est_area, idx) for idx, c in enumerate(cands)]
+        front = _pareto_front(pts)[:max_per_size]
+        sel = sorted((cands[i] for i in front), key=lambda c: c.mde)
+        # index 0 must be the exact PCC (mde == 0 always exists: exact+exact)
+        assert sel and sel[0].mde == 0.0
+        lib.entries[(n_pos, n_neg)] = sel
+    return lib
+
+
+def pc_pareto(pc_lib: list[Netlist]) -> list[Netlist]:
+    """Pareto filter a PC library on (mae, area) — used for output neurons."""
+    pts = [(nl.meta.get("mae", 0.0), nl.cost().area_mm2, i) for i, nl in enumerate(pc_lib)]
+    front = _pareto_front(pts)
+    sel = sorted((pc_lib[i] for i in front), key=lambda nl: nl.meta.get("mae", 0.0))
+    assert sel and sel[0].meta.get("mae", 0.0) == 0.0
+    return sel

@@ -1,0 +1,108 @@
+"""Ternary / binary quantizers + the ABC input interface — JAX.
+
+Faithful mode (the paper, Sec. 3.2.1):
+  * weights  -> ternary {-1, 0, 1} via a fixed threshold (qkeras `ternary`
+    with alpha=1; default threshold 1/3),
+  * hidden activations -> binary step on the popcount sum ({-1,+1} encoding),
+  * first-layer inputs -> ABC binarization at the per-feature *median* of the
+    normalized training distribution (V_q; not learnable).
+
+LM mode (framework scale, BitNet-b1.58-style): same ternary codes plus a
+per-output-channel scale alpha = mean|W| so large transformers train stably.
+Both share the 2-bit packing used by the Pallas serving kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TERNARY_THRESHOLD = 1.0 / 3.0
+
+
+# ---------------------------------------------------------------------------
+# Quantizers (straight-through estimators)
+# ---------------------------------------------------------------------------
+def ternarize(w: jax.Array, threshold: float = TERNARY_THRESHOLD) -> jax.Array:
+    """Hard ternarization to {-1, 0, +1} (no gradient)."""
+    return jnp.sign(w) * (jnp.abs(w) > threshold)
+
+
+def ternary_ste(w: jax.Array, threshold: float = TERNARY_THRESHOLD) -> jax.Array:
+    """Ternary forward, identity backward inside [-1, 1] (clipped STE)."""
+    q = ternarize(w, threshold)
+    # gradient window: pass-through where the latent weight is in [-1, 1]
+    gate = (jnp.abs(w) <= 1.0).astype(w.dtype)
+    return w * gate + jax.lax.stop_gradient(q - w * gate)
+
+
+def binary_step_ste(a: jax.Array, grad_width: float = 1.0) -> jax.Array:
+    """sign(a) in {-1,+1} with a>=0 -> +1; hard-tanh surrogate gradient.
+
+    Matches the hardware comparator semantics (sum >= 0 -> output 1).
+    """
+    h = jnp.where(a >= 0, 1.0, -1.0).astype(a.dtype)
+    surrogate = jnp.clip(a / grad_width, -1.0, 1.0)
+    return surrogate + jax.lax.stop_gradient(h - surrogate)
+
+
+def ternary_quantize_lm(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """BitNet-style absmean ternarization: returns (codes {-1,0,1}, scale).
+
+    scale alpha is per-output-channel (last dim); W ~= alpha * codes.
+    """
+    alpha = jnp.mean(jnp.abs(w), axis=tuple(range(w.ndim - 1)), keepdims=True) + 1e-8
+    codes = jnp.clip(jnp.round(w / alpha), -1, 1)
+    return codes, alpha
+
+
+def ternary_ste_lm(w: jax.Array) -> jax.Array:
+    """Absmean-scaled ternary forward with STE backward (LM training path)."""
+    codes, alpha = ternary_quantize_lm(w)
+    q = codes * alpha
+    return w + jax.lax.stop_gradient(q - w)
+
+
+# ---------------------------------------------------------------------------
+# ABC — analog-to-binary converter (Sec. 3.1)
+# ---------------------------------------------------------------------------
+def abc_fit_thresholds(x_train: np.ndarray) -> np.ndarray:
+    """Per-feature V_q = median of the normalized training distribution.
+
+    In hardware, V_q is realized by the R1/R2 divider ratio of each ABC.
+    """
+    return np.median(x_train, axis=0)
+
+
+def abc_binarize(x: jax.Array | np.ndarray, thresholds: np.ndarray) -> jax.Array:
+    """Comparator output: 1 when the sensor voltage exceeds V_q."""
+    return (jnp.asarray(x) > jnp.asarray(thresholds)[None, :]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# 2-bit packing (shared by core + Pallas serving kernels)
+#   code 0b00 -> 0, 0b01 -> +1, 0b10 -> -1 ; 4 codes per int8, along axis 0 (K)
+# ---------------------------------------------------------------------------
+def pack_ternary(codes: jax.Array) -> jax.Array:
+    """Pack {-1,0,1} codes (K, N) -> (K//4, N) int8.  K must be %4 == 0."""
+    K = codes.shape[0]
+    if K % 4:
+        raise ValueError(f"K={K} not a multiple of 4")
+    u = jnp.where(codes > 0, 1, jnp.where(codes < 0, 2, 0)).astype(jnp.uint8)
+    u = u.reshape(K // 4, 4, *codes.shape[1:])
+    packed = (u[:, 0] | (u[:, 1] << 2) | (u[:, 2] << 4) | (u[:, 3] << 6))
+    return packed.astype(jnp.int8)
+
+
+def unpack_ternary(packed: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Inverse of `pack_ternary`: (K//4, N) int8 -> (K, N) dtype in {-1,0,1}."""
+    u = packed.astype(jnp.uint8)
+    parts = [(u >> (2 * i)) & 0x3 for i in range(4)]
+    stacked = jnp.stack(parts, axis=1)           # (K//4, 4, N...)
+    vals = (stacked == 1).astype(dtype) - (stacked == 2).astype(dtype)
+    return vals.reshape(-1, *packed.shape[1:])
+
+
+def zero_fraction(codes: jax.Array) -> jax.Array:
+    """Sparsity of a ternary tensor — drives the paper's wire-removal gains."""
+    return jnp.mean((codes == 0).astype(jnp.float32))

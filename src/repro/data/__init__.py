@@ -1,0 +1,2 @@
+from repro.data.tabular import DATASETS, TabularDataset, make_dataset  # noqa: F401
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig  # noqa: F401

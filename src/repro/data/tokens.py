@@ -1,0 +1,62 @@
+"""Deterministic, stateless, resumable synthetic token pipeline.
+
+Fault-tolerance property the train loop relies on: batch(step) is a pure
+function of (seed, step, shape) — a restarted/elastically-resized job
+regenerates exactly the token stream it would have seen, with no iterator
+state to checkpoint.  Sharded hosts slice their rows of the same global
+batch (host i takes rows [i*per_host, (i+1)*per_host)).
+
+The stream is a Zipf-ish unigram mix with induced bigram structure so small
+LMs have something learnable (examples/train_lm.py reaches well below the
+uniform-entropy floor within a few hundred steps).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TokenPipelineConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2          # unigram skew
+    bigram_period: int = 16      # deterministic bigram structure strength
+
+
+def _unigram_logits(cfg: TokenPipelineConfig) -> np.ndarray:
+    ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+    p = 1.0 / np.power(ranks, cfg.zipf_a)
+    return np.log(p / p.sum()).astype(np.float32)
+
+
+class TokenPipeline:
+    def __init__(self, cfg: TokenPipelineConfig):
+        self.cfg = cfg
+        self._logits = jnp.asarray(_unigram_logits(cfg))
+
+    def batch_at(self, step: int | jax.Array) -> dict:
+        """Global batch for `step`: {"tokens", "labels"} (B, S) int32."""
+        cfg = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+        draw = jax.random.categorical(
+            key, self._logits, shape=(cfg.global_batch, cfg.seq_len + 1))
+        # induce learnable bigram structure: every k-th token repeats a
+        # deterministic function of its predecessor
+        prev = jnp.roll(draw, 1, axis=1)
+        idx = jnp.arange(cfg.seq_len + 1)[None, :]
+        use_bigram = (idx % cfg.bigram_period) == (cfg.bigram_period - 1)
+        mapped = (prev * 31 + 7) % cfg.vocab
+        seq = jnp.where(use_bigram, mapped, draw).astype(jnp.int32)
+        return {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+
+    def host_batch_at(self, step: int, host_id: int, n_hosts: int) -> dict:
+        full = self.batch_at(step)
+        per = self.cfg.global_batch // n_hosts
+        sl = slice(host_id * per, (host_id + 1) * per)
+        return {k: v[sl] for k, v in full.items()}

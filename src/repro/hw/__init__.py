@@ -1,0 +1,8 @@
+"""Hardware cost models for the printed-electronics (EGFET) target."""
+from repro.hw.egfet import (  # noqa: F401
+    Gate,
+    HwCost,
+    gate_cost,
+    interface_cost,
+    power_source,
+)

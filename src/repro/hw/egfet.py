@@ -1,0 +1,140 @@
+"""EGFET (electrolyte-gated FET) printed-technology cost model.
+
+The paper evaluates every circuit on the EGFET PDK [Bleier et al., ISCA'20]
+at 0.6 V / 5 Hz with Synopsys DC + PrimeTime.  Offline we replace synthesis
+with an analytical per-gate cost model applied to the *actual* netlists we
+generate (adder trees, comparators, CGP-evolved circuits).
+
+Anchors used to fit the constants (all from the paper / its references):
+  * 4-bit flash ADC:             12    mm^2, 1.0  mW      (Sec. 3.1, [6])
+  * proposed ABC:                 0.07 mm^2, 0.03 mW      (Sec. 3.1)
+  * BreastCancer exact TNN
+    (10,10,2):                   29    mm^2, 0.31 mW      (Table 3)
+  * sensor power overhead:      ~5 uW                     (Sec. 5, [12])
+
+EGFET digital logic is n-type-only resistive-load ("ratioed") logic: an
+inverter is 1 EGT + 1 printed resistor, NAND2/NOR2 are 2 EGT + 1 R, and an
+XOR needs a two-level network.  Area scales with (transistor + resistor)
+count; power at these frequencies is static-dominated (current through the
+pull-up resistor), so it scales with resistor count weighted by duty.  The
+constants below reproduce the paper's Table-3 magnitudes within ~1.5x and —
+more importantly — preserve *ratios* between exact and approximate designs,
+which is what the paper's evaluation is about.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+
+class Gate(enum.IntEnum):
+    """Gate/function opcodes shared by the netlist + CGP genome."""
+
+    INPUT = 0
+    CONST0 = 1
+    CONST1 = 2
+    BUF = 3     # wire / identity(a)
+    NOT = 4
+    AND = 5
+    OR = 6
+    XOR = 7
+    NAND = 8
+    NOR = 9
+    XNOR = 10
+    ANDN = 11   # a AND (NOT b)  -- cheap in ratioed logic, used by comparators
+    ORN = 12    # a OR  (NOT b)
+
+
+# mm^2 per gate.  (INPUT/CONST are free: they are wires / rails.)
+GATE_AREA_MM2: dict[int, float] = {
+    Gate.INPUT: 0.0,
+    Gate.CONST0: 0.0,
+    Gate.CONST1: 0.0,
+    Gate.BUF: 0.0,          # a wire in a bespoke (hardwired) design
+    Gate.NOT: 0.045,
+    Gate.AND: 0.11,
+    Gate.OR: 0.11,
+    Gate.XOR: 0.22,
+    Gate.NAND: 0.08,
+    Gate.NOR: 0.08,
+    Gate.XNOR: 0.22,
+    Gate.ANDN: 0.13,
+    Gate.ORN: 0.13,
+}
+
+# uW per gate (static-dominated at 0.6 V / 5 Hz).
+GATE_POWER_UW: dict[int, float] = {
+    Gate.INPUT: 0.0,
+    Gate.CONST0: 0.0,
+    Gate.CONST1: 0.0,
+    Gate.BUF: 0.0,
+    Gate.NOT: 0.40,
+    Gate.AND: 1.00,
+    Gate.OR: 1.00,
+    Gate.XOR: 1.90,
+    Gate.NAND: 0.70,
+    Gate.NOR: 0.70,
+    Gate.XNOR: 1.90,
+    Gate.ANDN: 1.15,
+    Gate.ORN: 1.15,
+}
+
+# ---------------------------------------------------------------------------
+# Sensor interface costs (Sec. 3.1 / Table 3 "w/ ADC cost" columns).
+# ---------------------------------------------------------------------------
+ADC4_AREA_MM2 = 12.0     # 4-bit flash ADC, per input feature
+ADC4_POWER_MW = 1.0
+ABC_AREA_MM2 = 0.07      # proposed analog-to-binary converter, per feature
+ABC_POWER_MW = 0.03
+SENSOR_POWER_MW = 0.005  # ~5 uW per sensor
+
+# v/f operating point (kept for documentation & power-budget checks)
+VDD_V = 0.6
+FREQ_HZ = 5.0
+
+# Printed power sources (Sec. 5): can the design be powered?
+HARVESTER_BUDGET_MW = 2.0     # printed energy harvester [4]
+ZINERGY_BATTERY_MW = 15.0
+MOLEX_BATTERY_MW = 30.0
+
+
+@dataclass(frozen=True)
+class HwCost:
+    """Area (mm^2) / power (mW) aggregate for a circuit or system."""
+
+    area_mm2: float
+    power_mw: float
+
+    def __add__(self, other: "HwCost") -> "HwCost":
+        return HwCost(self.area_mm2 + other.area_mm2, self.power_mw + other.power_mw)
+
+    def scale(self, k: float) -> "HwCost":
+        return HwCost(self.area_mm2 * k, self.power_mw * k)
+
+    @property
+    def area_cm2(self) -> float:
+        return self.area_mm2 / 100.0
+
+
+def gate_cost(op: int) -> HwCost:
+    return HwCost(GATE_AREA_MM2[op], GATE_POWER_UW[op] * 1e-3)
+
+
+def interface_cost(n_features: int, kind: str) -> HwCost:
+    """Sensor-processor interface cost for `n_features` analog inputs."""
+    if kind == "adc4":
+        return HwCost(ADC4_AREA_MM2 * n_features, ADC4_POWER_MW * n_features)
+    if kind == "abc":
+        return HwCost(ABC_AREA_MM2 * n_features, ABC_POWER_MW * n_features)
+    raise ValueError(f"unknown interface kind: {kind!r}")
+
+
+def power_source(total_power_mw: float) -> str:
+    """Which printed power source can drive the design (Sec. 5 discussion)."""
+    if total_power_mw <= HARVESTER_BUDGET_MW:
+        return "energy-harvester"
+    if total_power_mw <= ZINERGY_BATTERY_MW:
+        return "zinergy-battery"
+    if total_power_mw <= MOLEX_BATTERY_MW:
+        return "molex-battery"
+    return "exceeds-printed-budget"

@@ -1,0 +1,56 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy: Pallas (compiled) on TPU; interpret-mode or the pure-jnp
+reference elsewhere.  Model code imports from here so the same graph lowers
+on every backend (the CPU dry-run sees the reference HLO; a TPU run sees
+the kernels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.packed_popcount import packed_popcount as _pp_kernel
+from repro.kernels.ternary_matmul import ternary_matmul as _tm_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def ternary_matmul(x: jax.Array, w2: jax.Array, scale: jax.Array,
+                   use_kernel: bool | None = None,
+                   interpret: bool = False) -> jax.Array:
+    """(M, K) x packed (K//4, N) ternary -> (M, N) f32."""
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use:
+        return _tm_kernel(x, w2, scale, interpret=interpret or not _on_tpu())
+    return ref.ternary_matmul_ref(x, w2, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def packed_popcount(words: jax.Array, use_kernel: bool | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """(B, W) uint32 -> (B,) int32."""
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use:
+        return _pp_kernel(words, interpret=interpret or not _on_tpu())
+    return ref.packed_popcount_ref(words)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel", "interpret"))
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, chunk: int = 32,
+               use_kernel: bool | None = None,
+               interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Chunked WKV-6: (BH, T, dh) x4 + u (BH, dh) -> (y, final_state)."""
+    from repro.kernels.rwkv6_scan import rwkv6_chunked
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use:
+        return rwkv6_chunked(r, k, v, w, u, chunk=chunk,
+                             interpret=interpret or not _on_tpu())
+    return ref.rwkv6_scan_ref(r, k, v, w, u)

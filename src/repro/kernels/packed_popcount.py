@@ -1,0 +1,39 @@
+"""Pallas TPU kernel: popcount over bit-packed uint32 lanes (SWAR on VPU).
+
+Used by the circuit-accurate TNN inference path and the CGP fitness
+simulator's hot loop: inputs are (B, W) words of packed binary features,
+output is the per-row popcount — i.e. the paper's popcount unit, vectorized
+over a batch.  Bit-twiddling runs on the VPU (8x128 lanes); each grid step
+processes a (bb, W) block resident in VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, o_ref):
+    v = w_ref[...].astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    v = (v * jnp.uint32(0x01010101)) >> 24
+    o_ref[...] = v.astype(jnp.int32).sum(axis=-1, keepdims=True)
+
+
+def packed_popcount(words: jax.Array, *, bb: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """words: (B, W) uint32 -> (B,) int32 popcounts."""
+    B, W = words.shape
+    bb = min(bb, B)
+    assert B % bb == 0, (B, bb)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(B // bb,),
+        in_specs=[pl.BlockSpec((bb, W), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        interpret=interpret,
+    )(words)
+    return out[:, 0]

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (and the CPU/dry-run lowering).
+
+`ops.py` dispatches: Pallas on TPU, these references elsewhere.  Tests sweep
+shapes/dtypes and assert the interpret-mode kernels match these bit-exactly
+(integer paths) or to fp tolerance (matmul paths).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ternary import unpack_ternary
+
+
+def ternary_matmul_ref(x: jax.Array, w2: jax.Array, scale: jax.Array
+                       ) -> jax.Array:
+    """x: (M, K) float; w2: (K//4, N) int8 2-bit codes; scale: (1, N).
+
+    Returns (M, N) f32 = (x @ unpack(w2)) * scale.
+    """
+    w = unpack_ternary(w2, dtype=jnp.float32)
+    y = x.astype(jnp.float32) @ w
+    return y * scale.astype(jnp.float32)
+
+
+def packed_popcount_ref(words: jax.Array) -> jax.Array:
+    """words: (B, W) uint32 bit-packed -> (B,) int32 popcount (SWAR)."""
+    v = words.astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    v = (v * jnp.uint32(0x01010101)) >> 24
+    return v.astype(jnp.int32).sum(axis=-1)
+
+
+def rwkv6_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                   u: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sequential WKV-6 oracle.  r,k,v,w: (BH, T, dh); u: (BH, dh).
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t ;  y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    """
+    BH, T, dh = r.shape
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                           # (BH, dh) each
+        kv = kt[..., :, None] * vt[..., None, :]       # (BH, dh, dh)
+        y = jnp.einsum("bk,bkv->bv", rt, S + u[..., :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(x.transpose(1, 0, 2).astype(jnp.float32) for x in (r, k, v, w))
+    S0 = jnp.zeros((BH, dh, dh), jnp.float32)
+    S_fin, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2), S_fin
+
+
+def binary_ternary_matvec_ref(xbits: jax.Array, w2: jax.Array) -> jax.Array:
+    """TNN neuron batch: xbits (M, K) in {0,1}; w2 (K//4, N) ternary codes.
+
+    Returns (M, N) int32 = popcount-accumulate sum_k x_k * w_kn — the
+    integer semantics of the paper's hidden-layer accumulation.
+    """
+    w = unpack_ternary(w2, dtype=jnp.int32)
+    return xbits.astype(jnp.int32) @ w

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: chunked RWKV-6 WKV recurrence (matmul form).
+
+The per-token recurrence  S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)  is sequential and VPU-bound.  The
+TPU-native reformulation processes chunks of T_c tokens as dense matmuls
+(MXU work, DESIGN.md §4):
+
+  W_t   = prod_{s<=t} w_s                     (cumulative decay, per k-dim)
+  a_t   = r_t * W_{t-1},   b_s = k_s / W_s
+  A     = strict_lower(a @ b^T) + diag(r_t . (u * k_t))     (T_c x T_c)
+  y     = A @ V + a @ S_0
+  S_end = W_T * S_0 + (b * W_T)^T @ V
+
+The cumulative product is computed as exp(L @ log w) with L the lower-
+triangular ones matrix — a single MXU matmul, avoiding cumprod lowering.
+Chunks iterate sequentially per (batch, head) via the innermost grid dim;
+the running state lives in a VMEM scratch.
+
+Numerical note: b_s = k_s / W_s grows like prod w^-1 within a chunk, so
+T_c must keep max |log w| * T_c well inside f32 range; with RWKV-6 decays
+(w >= ~0.6) T_c <= 64 is safe (tested).  ref.py / models/ssm.py hold the
+sequential oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, state_ref,
+            *, tc: int, n_chunks: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)          # (tc, dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # (1, dh)
+
+    logw = jnp.log(jnp.maximum(w, 1e-12))
+    tri = (jnp.arange(tc)[:, None] >= jnp.arange(tc)[None, :]).astype(jnp.float32)
+    cum = jax.lax.dot_general(tri, logw, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    W = jnp.exp(cum)                          # (tc, dh): prod_{s<=t} w_s
+    W_prev = jnp.exp(cum - logw)              # prod_{s<t}  w_s
+    a = r * W_prev
+    b = k / jnp.maximum(W, 1e-30)
+
+    A = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    strict = (jnp.arange(tc)[:, None] > jnp.arange(tc)[None, :]).astype(jnp.float32)
+    diag = jnp.sum(r * (u * k), axis=-1)      # (tc,)
+    A = A * strict + jnp.diag(diag)
+
+    S0 = state_ref[...]                       # (dh, dh)
+    y = (jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+         + jax.lax.dot_general(a, S0, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32))
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    WT = W[tc - 1]                            # (dh,)
+    bw = b * WT[None, :]
+    S_new = WT[:, None] * S0 + jax.lax.dot_general(
+        bw, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    state_ref[...] = S_new
+
+    @pl.when(c == n_chunks - 1)
+    def _done():
+        s_out_ref[0] = S_new.astype(s_out_ref.dtype)
+
+
+def rwkv6_chunked(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                  u: jax.Array, *, chunk: int = 32,
+                  interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """r,k,v,w: (BH, T, dh) f32; u: (BH, dh). T % chunk == 0.
+
+    Returns (y (BH, T, dh), final_state (BH, dh, dh))."""
+    BH, T, dh = r.shape
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    u3 = u[:, None, :]                        # (BH, 1, dh)
+
+    y, s_out = pl.pallas_call(
+        functools.partial(_kernel, tc=chunk, n_chunks=nc),
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, dh), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, dh, dh), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, dh), jnp.float32),
+            jax.ShapeDtypeStruct((BH, dh, dh), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u3)
+    return y, s_out

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: 2-bit-packed ternary matmul.
+
+The TPU realization of the paper's multiplier-free ternary neuron
+(DESIGN.md §3): weights live in HBM as 2-bit codes (4 per int8 byte,
+code 01 -> +1, 10 -> -1, 00 -> 0), are unpacked inside VMEM, and the ±1/0
+matrix feeds the MXU.  Weight traffic is 8x lower than bf16 — on a
+decode-shaped (memory-bound) workload that moves the *memory roofline term*
+the way bespoke wiring moves printed-circuit area.
+
+Tiling: grid (M/bm, N/bn, K/bk); the packed block is (bk//4, bn) int8.
+bm, bn multiples of 128 (MXU-aligned), bk a multiple of 512 so the packed
+rows stay 128-aligned.  f32 accumulation in a VMEM scratch across the K
+grid dimension (revisiting semantics: K is the innermost grid dim).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _unpack_block(w2: jax.Array, bk: int, dtype) -> jax.Array:
+    """(bk//4, bn) int8 -> (bk, bn) ±1/0 in `dtype` (VMEM-local)."""
+    u = w2.astype(jnp.uint8)
+    parts = [(u >> (2 * i)) & jnp.uint8(0x3) for i in range(4)]
+    st = jnp.stack(parts, axis=1)                      # (bk//4, 4, bn)
+    w = (st == 1).astype(dtype) - (st == 2).astype(dtype)
+    return w.reshape(bk, -1)
+
+
+def _kernel(x_ref, w2_ref, o_ref, acc_ref, *, bk: int, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    w = _unpack_block(w2_ref[...], bk, x.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def ternary_matmul(x: jax.Array, w2: jax.Array, scale: jax.Array, *,
+                   bm: int = 128, bk: int = 512, bn: int = 128,
+                   interpret: bool = False) -> jax.Array:
+    """x: (M, K); w2: (K//4, N) int8 codes; scale: (1, N) f32 -> (M, N) f32."""
+    M, K = x.shape
+    K4, N = w2.shape
+    assert K4 * 4 == K, (K4, K)
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0, (M, K, N, bm, bk, bn)
+    assert bk % 4 == 0
+    grid = (M // bm, N // bn, K // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk, n_k=K // bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // 4, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w2)
+    return out * scale.astype(jnp.float32)

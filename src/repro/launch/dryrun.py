@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first (before any jax-importing module): jax
+locks the device count at first init, and the production meshes need 512
+placeholder host devices.  Do not set that flag anywhere global — smoke
+tests and benches see 1 device.
+
+Per cell this driver:
+  1. builds abstract params/optimizer/batch (ShapeDtypeStruct, no alloc),
+  2. jits the step with explicit in/out shardings and lowers it,
+  3. compiles — success proves the distribution config is coherent,
+  4. prints compiled.memory_analysis()  (fits-in-HBM evidence) and
+     cost_analysis() + parsed collective bytes (the §Roofline inputs),
+  5. appends a JSON record to reports/dryrun.jsonl.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --mesh both
+  python -m repro.launch.dryrun ... --quant ternary_packed   (perf variants)
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as TF
+from repro.models.params import active_param_count, param_count
+from repro.models.sharding import ShardCtx
+from repro.roofline.analysis import model_flops, roofline_from_compiled
+from repro.train.loop import TrainLoopConfig, make_train_step
+
+
+def _default_microbatches(cfg, shape, mesh) -> int:
+    dsz = SP.data_size(mesh)
+    per_shard = max(1, shape.global_batch // dsz)
+    want = 16 if cfg.d_model >= 7000 else 8
+    mb = min(want, per_shard)
+    while per_shard % mb:
+        mb -= 1
+    return max(1, mb)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               quant: str | None = None, microbatches: int | None = None,
+               remat: bool | None = None, accum_dtype: str | None = None,
+               moe_fsdp: str | None = None, serve_tp_only: bool = False,
+               kv_dtype: str | None = None) -> dict:
+    cfg = get_config(arch)
+    if quant:
+        cfg = cfg.replace(quant=quant)
+    if remat is not None:
+        cfg = cfg.replace(remat=remat)
+    if accum_dtype:
+        cfg = cfg.replace(accum_dtype=accum_dtype)
+    if moe_fsdp:
+        cfg = cfg.replace(moe_fsdp=moe_fsdp)
+    if serve_tp_only:
+        cfg = cfg.replace(serve_fsdp=False)
+    if kv_dtype:
+        cfg = cfg.replace(kv_cache_dtype=kv_dtype)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "quant": cfg.quant, "remat": cfg.remat,
+                 "accum_dtype": cfg.accum_dtype, "moe_fsdp": cfg.moe_fsdp,
+                 "params": param_count(cfg),
+                 "active_params": active_param_count(cfg.replace(quant="dense"))}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = ShardCtx(mesh)
+    sh = lambda s: SP.to_shardings(mesh, s)
+    t0 = time.monotonic()
+
+    with mesh:
+        if shape.kind == "train":
+            mb = microbatches or _default_microbatches(cfg, shape, mesh)
+            rec["microbatches"] = mb
+            params_s, pspecs, opt_s, ospecs = SP.abstract_state(cfg, mesh)
+            batch_s, bspecs = SP.train_batch_specs(cfg, shape, mesh)
+            step_fn = make_train_step(cfg, TrainLoopConfig(microbatches=mb), ctx)
+
+            def train_step(params, opt, batch):
+                p, o, metrics, _ = step_fn(params, opt, batch, None)
+                return p, o, metrics["loss"]
+
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(sh(pspecs), sh(ospecs), sh(bspecs)),
+                out_shardings=(sh(pspecs), sh(ospecs), None),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(params_s, opt_s, batch_s)
+            tokens = shape.global_batch * shape.seq_len
+        elif shape.kind == "prefill":
+            params_s, pspecs, _, _ = SP.abstract_state(cfg, mesh)
+            batch_s, bspecs = SP.train_batch_specs(cfg, shape, mesh,
+                                                   with_labels=False)
+
+            def prefill_fn(params, batch):
+                return TF.prefill(cfg, params, batch, cache_len=shape.seq_len,
+                                  ctx=ctx)
+
+            jitted = jax.jit(prefill_fn,
+                             in_shardings=(sh(pspecs), sh(bspecs)))
+            lowered = jitted.lower(params_s, batch_s)
+            tokens = shape.global_batch * shape.seq_len
+        else:   # decode
+            params_s, pspecs, _, _ = SP.abstract_state(cfg, mesh)
+            if not cfg.serve_fsdp:
+                from repro.models.params import strip_fsdp_tree
+                pspecs = strip_fsdp_tree(pspecs)
+            (structs, dspecs) = SP.decode_inputs(cfg, shape, mesh)
+
+            if cfg.rope == "mrope":
+                def serve_step(params, cache, tok, pos, positions):
+                    return TF.decode_step(cfg, params, cache, tok, pos, ctx,
+                                          positions=positions)
+            else:
+                def serve_step(params, cache, tok, pos):
+                    return TF.decode_step(cfg, params, cache, tok, pos, ctx)
+
+            cache_spec = dspecs[0]
+            jitted = jax.jit(serve_step,
+                             in_shardings=(sh(pspecs),) + tuple(
+                                 sh(s) for s in dspecs),
+                             out_shardings=(None, sh(cache_spec)),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_s, *structs)
+            tokens = shape.global_batch
+
+        rec["lower_s"] = round(time.monotonic() - t0, 1)
+        t1 = time.monotonic()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.monotonic() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "peak_estimate_bytes": int(mem.argument_size_in_bytes
+                                   + mem.output_size_in_bytes
+                                   + mem.temp_size_in_bytes
+                                   - mem.alias_size_in_bytes),
+    }
+    roof = roofline_from_compiled(compiled)
+    rec["roofline"] = roof.summary()
+    mf = model_flops(rec["active_params"], tokens, shape.kind)
+    rec["model_flops_total"] = mf
+    n_dev = 512 if multi_pod else 256
+    rec["model_flops_per_device"] = mf / n_dev
+    rec["useful_flops_ratio"] = (mf / n_dev) / max(roof.flops, 1.0)
+    rec["status"] = "ok"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--quant", default=None,
+                    choices=[None, "dense", "ternary", "ternary_packed"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", default=None, choices=[None, "on", "off"])
+    ap.add_argument("--accum-dtype", default=None,
+                    choices=[None, "float32", "bfloat16"])
+    ap.add_argument("--moe-fsdp", default=None, choices=[None, "d", "f", "none"])
+    ap.add_argument("--serve-tp-only", action="store_true")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=[None, "compute", "float8_e4m3fn"])
+    ap.add_argument("--out", default="reports/dryrun.jsonl")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    remat = None if args.remat is None else (args.remat == "on")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    n_fail = 0
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    label = (f"{arch} x {shape} x "
+                             f"{'2x16x16' if mp else '16x16'}")
+                    try:
+                        rec = lower_cell(arch, shape, multi_pod=mp,
+                                         quant=args.quant,
+                                         microbatches=args.microbatches,
+                                         remat=remat,
+                                         accum_dtype=args.accum_dtype,
+                                         moe_fsdp=args.moe_fsdp,
+                                         serve_tp_only=args.serve_tp_only,
+                                         kv_dtype=args.kv_dtype)
+                    except Exception as e:   # noqa: BLE001 — report & continue
+                        rec = {"arch": arch, "shape": shape,
+                               "mesh": "2x16x16" if mp else "16x16",
+                               "status": "error",
+                               "error": f"{type(e).__name__}: {e}",
+                               "trace": traceback.format_exc()[-2000:]}
+                        n_fail += 1
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    if rec["status"] == "ok":
+                        m = rec["memory"]
+                        r = rec["roofline"]
+                        print(f"[ok] {label}: compile {rec['compile_s']}s | "
+                              f"args {m['argument_bytes']/2**30:.2f} GiB/dev, "
+                              f"temp {m['temp_bytes']/2**30:.2f} GiB/dev | "
+                              f"compute {r['compute_s']*1e3:.1f} ms, "
+                              f"memory {r['memory_s']*1e3:.1f} ms, "
+                              f"collective {r['collective_s']*1e3:.1f} ms "
+                              f"-> {r['dominant']}-bound")
+                    elif rec["status"] == "skipped":
+                        print(f"[skip] {label}: {rec['reason']}")
+                    else:
+                        print(f"[FAIL] {label}: {rec['error']}")
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

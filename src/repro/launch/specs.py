@@ -1,0 +1,124 @@
+"""Input/ state specs for every (arch x shape) dry-run cell.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every model
+input (weak-type-correct, shardable, no device allocation) together with
+PartitionSpecs; `abstract_state` does the same for params + optimizer state.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as TF
+from repro.models.params import abstract_params, partition_specs
+from repro.optim import adamw, adamw8bit
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_size(mesh: Mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      with_labels: bool = True) -> tuple[dict, dict]:
+    """(ShapeDtypeStruct dict, PartitionSpec dict) for a train/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    bax = batch_axes(mesh) if B % data_size(mesh) == 0 else None
+    structs: dict = {"tokens": _sds((B, S), jnp.int32)}
+    specs: dict = {"tokens": P(bax, None)}
+    if with_labels:
+        structs["labels"] = _sds((B, S), jnp.int32)
+        specs["labels"] = P(bax, None)
+    if cfg.rope == "mrope":
+        structs["positions"] = _sds((B, 3, S), jnp.int32)
+        specs["positions"] = P(bax, None, None)
+        structs["vision_embeds"] = _sds((B, cfg.n_vision_tokens, cfg.d_model),
+                                        jnp.bfloat16)
+        specs["vision_embeds"] = P(bax, None, None)
+    if cfg.enc_layers:
+        structs["enc_frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        specs["enc_frames"] = P(bax, None, None)
+    return structs, specs
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                  ) -> tuple[tuple, tuple]:
+    """(cache, tokens, pos) structs + specs for a serve_step cell."""
+    B, S = shape.global_batch, shape.seq_len
+    dsz = data_size(mesh)
+    msz = mesh.shape["model"]
+    bax = batch_axes(mesh) if B % dsz == 0 and B > 1 else None
+
+    cache_struct = jax.eval_shape(lambda: TF.init_cache(cfg, B, S))
+    cache_specs_raw = TF.cache_partition_specs(cfg, B, S, dsz, msz)
+    # remap "data" -> (pod, data) batch axes for the multi-pod mesh
+    def remap(p: P) -> P:
+        parts = []
+        for ax in p:
+            if ax == "data":
+                parts.append(batch_axes(mesh))
+            else:
+                parts.append(ax)
+        return P(*parts)
+    cache_specs = jax.tree.map(
+        remap, cache_specs_raw,
+        is_leaf=lambda s: isinstance(s, P))
+
+    tok_struct = _sds((B, 1), jnp.int32)
+    tok_spec = P(bax, None)
+    pos_struct = _sds((), jnp.int32)
+    pos_spec = P()
+    structs = (cache_struct, tok_struct, pos_struct)
+    specs = (cache_specs, tok_spec, pos_spec)
+    if cfg.rope == "mrope":
+        structs += (_sds((B, 3, 1), jnp.int32),)
+        specs += (P(bax, None, None),)
+    return structs, specs
+
+
+def opt_partition_specs(cfg: ModelConfig, pspecs: Any) -> Any:
+    """Optimizer state specs congruent with adamw/adamw8bit state trees.
+
+    f32 moments inherit the parameter specs (ZeRO via the FSDP dim);
+    int8 codes inherit the param spec, per-block scales drop the last axis.
+    """
+    if not cfg.opt_8bit:
+        return adamw.AdamWState(step=P(), mu=pspecs, nu=pspecs)
+
+    def q8spec(ps: P) -> adamw8bit.Q8Tensor:
+        axes = tuple(ps) if len(ps) else (None,)
+        scale_axes = axes[:-1] + (None,) if len(axes) else (None,)
+        return adamw8bit.Q8Tensor(codes=P(*axes), scales=P(*scale_axes))
+
+    q = jax.tree.map(q8spec, pspecs, is_leaf=lambda s: isinstance(s, P))
+    return adamw8bit.AdamW8bitState(step=P(), mu=q, nu=q)
+
+
+def abstract_state(cfg: ModelConfig, mesh: Mesh) -> tuple[Any, Any, Any, Any]:
+    """(params_struct, params_specs, opt_struct, opt_specs) — no allocation."""
+    msz = mesh.shape["model"]
+    params = abstract_params(cfg, msz)
+    pspecs = partition_specs(cfg, msz)
+    opt_mod = adamw8bit if cfg.opt_8bit else adamw
+    opt = jax.eval_shape(lambda: opt_mod.init(params))
+    ospecs = opt_partition_specs(cfg, pspecs)
+    return params, pspecs, opt, ospecs
+
+
+def to_shardings(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

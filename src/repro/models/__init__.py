@@ -1,0 +1,1 @@
+"""Model zoo: layers, attention, MoE, SSM, transformer assembly."""

@@ -1,0 +1,109 @@
+"""Shared model layers: norms, rotary embeddings (incl. M-RoPE), linears.
+
+Every projection supports three quantization modes, selected statically by
+the arch config:
+  * "dense"          — plain bf16/f32 matmul,
+  * "ternary"        — QAT: absmean-scaled ternary STE (the paper's neuron,
+                       BitNet-b1.58-style scaling for LM trainability),
+  * "ternary_packed" — serving: weights stored as 2-bit codes (4/int8 byte)
+                       + per-channel scale; unpacked at use.  On TPU the
+                       unpack+matmul is the `kernels/ternary_matmul` Pallas
+                       kernel; the jnp path here is its reference and the
+                       CPU/dry-run lowering.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ternary import ternary_ste_lm, unpack_ternary
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear with static quant-mode dispatch
+# ---------------------------------------------------------------------------
+def linear(p: dict, x: jax.Array, quant: str = "dense") -> jax.Array:
+    """p holds {"w": (K, N)} [+ "b"] or packed {"w2": (K//4, N), "scale": (1, N)}."""
+    if quant == "ternary_packed":
+        w = unpack_ternary(p["w2"], dtype=x.dtype) * p["scale"].astype(x.dtype)
+        y = x @ w
+    elif quant == "ternary":
+        y = x @ ternary_ste_lm(p["w"]).astype(x.dtype)
+    else:
+        y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def _rope_freqs(d_head: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float32) / d_head))
+
+
+def rope_cos_sin(positions: jax.Array, d_head: int, theta: float
+                 ) -> tuple[jax.Array, jax.Array]:
+    """positions (..., S) -> cos/sin (..., S, d_head//2) f32."""
+    freqs = jnp.asarray(_rope_freqs(d_head, theta))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, dh); cos/sin: (B, S, dh//2) (broadcast over heads)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dtype)
+
+
+def mrope_cos_sin(positions: jax.Array, d_head: int, theta: float,
+                  sections: tuple[int, ...]) -> tuple[jax.Array, jax.Array]:
+    """Multimodal RoPE (Qwen2-VL): positions (B, 3, S) carry (t, h, w) ids.
+
+    The dh//2 frequency dims are split into `sections` (sum == dh//2); each
+    section takes its angle from the corresponding position stream.
+    """
+    assert sum(sections) == d_head // 2, (sections, d_head)
+    freqs = jnp.asarray(_rope_freqs(d_head, theta))          # (dh//2,)
+    ang_all = positions.astype(jnp.float32)[..., None] * freqs  # (B, 3, S, dh//2)
+    parts, start = [], 0
+    for si, sec in enumerate(sections):
+        parts.append(ang_all[:, si, :, start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)                    # (B, S, dh//2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+def embed(table: jax.Array, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return jnp.take(table, tokens, axis=0).astype(compute_dtype)
+
+
+def lm_head(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Logits in f32 (softmax stability at 152k vocab)."""
+    return (x.astype(jnp.float32) @ table.astype(jnp.float32))

@@ -1,0 +1,117 @@
+"""Mixture-of-Experts FFN with group-local (dropping) token dispatch.
+
+Scale design (arctic-480b: 128 experts, 1M tokens/step):
+  * The classic one-hot dispatch einsum materializes a (T, E, C) tensor —
+    2.5e12 elements at that scale.  A global argsort-based dispatch avoids
+    that but makes XLA run a *distributed sort* and replicate the scatter
+    update tensor across shards (measured: 70 GiB/dev temp on mixtral).
+  * So dispatch is GROUP-LOCAL: tokens reshape to (G, Tg, D) with G
+    sharded over the data axis.  Position-in-expert comes from a per-group
+    one-hot cumsum (O(Tg*k*E) int32), and the only scatter is vmapped over
+    G — GSPMD partitions scatters cleanly along batch dims, so no
+    replication.  Expert weights are shared across groups; with E sharded
+    on "model" (EP) the (G-sharded -> E-sharded) buffer handoff lowers to
+    the expected all-to-all family.
+  * EP vs TP fallback: experts shard over "model" when E % model_size == 0
+    (arctic 128e); otherwise the expert FFN hidden dim shards over "model"
+    and experts are co-located (mixtral 8e on a 16-way model axis).
+Top-k weighting is renormalized; Switch-style load-balancing aux loss.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import ShardCtx, shard
+
+
+def capacity(n_tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(math.ceil(n_tokens * top_k * factor / n_experts))
+    return max(8, -(-c // 8) * 8)   # round up to a multiple of 8
+
+
+def moe_ffn(p: dict, x: jax.Array, *, n_experts: int, top_k: int,
+            capacity_factor: float, quant: str, ctx: ShardCtx | None,
+            ep: bool, n_groups: int | None = None, moe_fsdp: str = "d"
+            ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss).
+
+    p: router {"w": (D, E)}, experts {"w_gate","w_up": (E, D, F),
+    "w_down": (E, F, D)} (stacked over experts).
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, k = n_experts, top_k
+    G = n_groups if n_groups is not None else (ctx.data_size if ctx else 1)
+    if G < 1 or T % G or (T // G) < 1:
+        G = 1
+    Tg = T // G
+    C = capacity(Tg, E, k, capacity_factor)
+    bax = (ctx.batch_axes if ctx is not None and G % ctx.data_size == 0
+           else None)
+
+    xg = x.reshape(G, Tg, D)
+    if ctx is not None:
+        xg = shard(xg, ctx, P(bax, None, None))
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G, Tg, E)
+    topw, tope = jax.lax.top_k(probs, k)                       # (G, Tg, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balancing aux loss (global)
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(jax.nn.one_hot(tope[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # ---- group-local positions: exclusive cumsum of assignment one-hots ----
+    fe = tope.reshape(G, Tg * k)                               # token-major
+    onehot = jax.nn.one_hot(fe, E, dtype=jnp.int32)            # (G, Tg*k, E)
+    pos_all = jnp.cumsum(onehot, axis=1) - onehot              # exclusive
+    seg_pos = jnp.take_along_axis(pos_all, fe[..., None], -1)[..., 0]
+    keep = seg_pos < C
+    dst = jnp.where(keep, fe * C + seg_pos, E * C)             # overflow slot
+
+    # ---- dispatch: batched scatter over G (partitions along batch dims) ----
+    xin = jnp.repeat(xg, k, axis=1)                            # (G, Tg*k, D)
+    zeros = jnp.zeros((G, E * C + 1, D), x.dtype)
+    buf = jax.vmap(lambda z, d, u: z.at[d].set(u))(zeros, dst, xin)
+    eb = buf[:, : E * C].reshape(G, E, C, D)
+    # weight-stationary ("f"): gather the small token buffer across data
+    # instead of the huge FSDP-sharded expert weights — expert weights stay
+    # resident (E on model, F on data); outputs reduce over the F shards.
+    act_stationary = ep and moe_fsdp == "f"
+    if act_stationary:
+        espec = P(None, "model", None, None)
+    else:
+        espec = (P(bax, "model", None, None) if ep
+                 else P(bax, None, None, None))
+    if ctx is not None:
+        eb = shard(eb, ctx, espec)
+
+    # ---- expert FFN (SwiGLU), batched over the expert dim ----
+    wg, wu, wd = (p["experts"]["w_gate"], p["experts"]["w_up"],
+                  p["experts"]["w_down"])
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", eb, wg.astype(x.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", eb, wu.astype(x.dtype))
+    if ctx is not None:
+        if act_stationary:
+            h = shard(h, ctx, P(None, "model", None, "data"))
+        elif not ep:
+            h = shard(h, ctx, P(bax, None, None, "model"))
+    out = jnp.einsum("gecf,efd->gecd", h, wd.astype(x.dtype))  # (G, E, C, D)
+    if ctx is not None:
+        out = shard(out, ctx, espec)
+
+    # ---- combine: gather back + weighted sum over the k assignments ----
+    flat = jnp.concatenate(
+        [out.reshape(G, E * C, D), jnp.zeros((G, 1, D), x.dtype)], axis=1)
+    contrib = jnp.take_along_axis(flat, dst[..., None], axis=1)  # (G, Tg*k, D)
+    contrib = contrib * topw.reshape(G, Tg * k)[..., None].astype(x.dtype)
+    y = contrib.reshape(G, Tg, k, D).sum(axis=2)
+    return y.reshape(B, S, D), aux.astype(jnp.float32)

@@ -1,0 +1,325 @@
+"""Parameter definitions: shapes, dtypes, initializers, partition specs.
+
+Each architecture's parameter tree is declared once as a tree of ParamDef;
+from it we derive (a) real initialized params (smoke tests / real training),
+(b) ShapeDtypeStruct trees for AOT lowering (dry-run: no allocation), and
+(c) the PartitionSpec tree consumed by pjit in_shardings.
+
+Sharding scheme (DESIGN.md §6): TP ("model") on attention heads / FFN hidden
+/ vocab; FSDP ("data") on the other matrix dim of every large projection;
+experts on "model" when divisible (EP) else TP inside experts.  Layer-stacked
+params carry a leading L dim with spec None (scanned).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+FSDP = "data"
+TP = "model"
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    dtype: Any
+    spec: P
+    init: str = "normal"       # normal | zeros | ones | small_normal
+    init_scale: float | None = None
+
+
+def _dt(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def _lin(cfg: ModelConfig, K: int, N: int, spec: P, *, L: int | None = None,
+         bias: bool = False, quant: str | None = None) -> dict:
+    """Linear param defs honoring the quant mode (packed stores 2-bit codes)."""
+    quant = cfg.quant if quant is None else quant
+    dt = _dt(cfg.param_dtype)
+    lead = () if L is None else (L,)
+    lead_spec = () if L is None else (None,)
+    d: dict = {}
+    if quant == "ternary_packed":
+        assert K % 4 == 0, f"K={K} not packable"
+        d["w2"] = ParamDef(lead + (K // 4, N), jnp.int8, P(*lead_spec, *spec), "zeros")
+        d["scale"] = ParamDef(lead + (1, N), jnp.float32,
+                              P(*lead_spec, None, spec[-1]), "ones")
+    else:
+        d["w"] = ParamDef(lead + (K, N), dt, P(*lead_spec, *spec),
+                          "normal", 1.0 / np.sqrt(K))
+    if bias:
+        d["b"] = ParamDef(lead + (N,), dt, P(*lead_spec, spec[-1]), "zeros")
+    return d
+
+
+def _vec(shape, spec, dtype, init="ones") -> ParamDef:
+    return ParamDef(tuple(shape), dtype, spec, init)
+
+
+# ---------------------------------------------------------------------------
+# Per-family layer stacks
+# ---------------------------------------------------------------------------
+def _attn_defs(cfg: ModelConfig, L: int) -> dict:
+    D, H, K, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = _dt(cfg.param_dtype)
+    kv_spec = P(FSDP, None) if cfg.replicate_kv else P(FSDP, TP)
+    d = {
+        "wq": _lin(cfg, D, H * dh, P(FSDP, TP), L=L, bias=cfg.qkv_bias),
+        "wk": _lin(cfg, D, K * dh, kv_spec, L=L, bias=cfg.qkv_bias),
+        "wv": _lin(cfg, D, K * dh, kv_spec, L=L, bias=cfg.qkv_bias),
+        "wo": _lin(cfg, H * dh, D, P(TP, FSDP), L=L),
+    }
+    if cfg.qk_norm:
+        d["q_norm"] = _vec((L, dh), P(None, None), dt)
+        d["k_norm"] = _vec((L, dh), P(None, None), dt)
+    return d
+
+
+def _mlp_defs(cfg: ModelConfig, L: int, d_ff: int) -> dict:
+    D = cfg.d_model
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": _lin(cfg, D, d_ff, P(FSDP, TP), L=L),
+            "w_up": _lin(cfg, D, d_ff, P(FSDP, TP), L=L),
+            "w_down": _lin(cfg, d_ff, D, P(TP, FSDP), L=L),
+        }
+    return {   # gelu MLP (whisper)
+        "w_in": _lin(cfg, D, d_ff, P(FSDP, TP), L=L, bias=True),
+        "w_out": _lin(cfg, d_ff, D, P(TP, FSDP), L=L, bias=True),
+    }
+
+
+def _moe_defs(cfg: ModelConfig, L: int, ep: bool) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    dt = _dt(cfg.param_dtype)
+    # expert weight sharding: E on "model" when divisible (EP) else the FFN
+    # hidden F on "model" (TP).  cfg.moe_fsdp picks which remaining dim (if
+    # any) additionally shards over "data" — a §Perf knob: "d" trades
+    # weight-gather collectives for memory, "f"/"none" the reverse.
+    if ep:
+        if cfg.moe_fsdp == "d":
+            espec_in, espec_out = P(TP, FSDP, None), P(TP, None, FSDP)
+        elif cfg.moe_fsdp == "f":
+            espec_in, espec_out = P(TP, None, FSDP), P(TP, FSDP, None)
+        else:
+            espec_in, espec_out = P(TP, None, None), P(TP, None, None)
+    else:
+        if cfg.moe_fsdp == "d":
+            espec_in, espec_out = P(None, FSDP, TP), P(None, TP, FSDP)
+        else:
+            espec_in, espec_out = P(None, None, TP), P(None, TP, None)
+    return {
+        "router": {"w": ParamDef((L, D, E), jnp.float32, P(None, None, None),
+                                 "normal", 0.02)},
+        "experts": {
+            "w_gate": ParamDef((L, E, D, F), dt, P(None, *espec_in),
+                               "normal", 1.0 / np.sqrt(D)),
+            "w_up": ParamDef((L, E, D, F), dt, P(None, *espec_in),
+                             "normal", 1.0 / np.sqrt(D)),
+            "w_down": ParamDef((L, E, F, D), dt, P(None, *espec_out),
+                               "normal", 1.0 / np.sqrt(F)),
+        },
+    }
+
+
+def _mamba_defs(cfg: ModelConfig, L: int) -> dict:
+    D = cfg.d_model
+    di = cfg.ssm.expand * D
+    N = cfg.ssm.state_size
+    W = cfg.ssm.conv_width
+    dt = _dt(cfg.param_dtype)
+    return {
+        "in_proj": _lin(cfg, D, 2 * di, P(FSDP, TP), L=L),
+        "conv_w": ParamDef((L, W, di), dt, P(None, None, TP), "normal", 0.2),
+        "conv_b": ParamDef((L, di), dt, P(None, TP), "zeros"),
+        "w_dt": ParamDef((L, di, di), dt, P(None, None, TP), "normal",
+                         1.0 / np.sqrt(di)),
+        "dt_bias": ParamDef((L, di), dt, P(None, TP), "zeros"),
+        "w_B": ParamDef((L, di, N), dt, P(None, TP, None), "normal",
+                        1.0 / np.sqrt(di)),
+        "w_C": ParamDef((L, di, N), dt, P(None, TP, None), "normal",
+                        1.0 / np.sqrt(di)),
+        "A_log": ParamDef((L, di, N), jnp.float32, P(None, TP, None), "zeros"),
+        "d_skip": ParamDef((L, di), jnp.float32, P(None, TP), "ones"),
+        "out_proj": _lin(cfg, di, D, P(TP, FSDP), L=L),
+    }
+
+
+def _rwkv_defs(cfg: ModelConfig, L: int) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    r = cfg.ssm.lora_rank
+    dt = _dt(cfg.param_dtype)
+    tm = {
+        "lora_A": ParamDef((L, D, r), dt, P(None, None, None), "normal",
+                           1.0 / np.sqrt(D)),
+        "w0": ParamDef((L, D), jnp.float32, P(None, TP), "zeros"),
+        "wA": ParamDef((L, D, r), dt, P(None, None, None), "normal",
+                       1.0 / np.sqrt(D)),
+        "wB": ParamDef((L, r, D), dt, P(None, None, TP), "normal",
+                       1.0 / np.sqrt(r)),
+        "u": ParamDef((L, D), jnp.float32, P(None, TP), "zeros"),
+        "gn_scale": ParamDef((L, D), dt, P(None, TP), "ones"),
+        "w_r": _lin(cfg, D, D, P(FSDP, TP), L=L),
+        "w_k": _lin(cfg, D, D, P(FSDP, TP), L=L),
+        "w_v": _lin(cfg, D, D, P(FSDP, TP), L=L),
+        "w_g": _lin(cfg, D, D, P(FSDP, TP), L=L),
+        "w_o": _lin(cfg, D, D, P(TP, FSDP), L=L),
+    }
+    for n in ("r", "k", "v", "w", "g"):
+        tm[f"mu_{n}"] = ParamDef((L, D), dt, P(None, None), "zeros")
+        tm[f"lora_B_{n}"] = ParamDef((L, r, D), dt, P(None, None, None),
+                                     "normal", 1.0 / np.sqrt(r))
+    cm = {
+        "mu_k": ParamDef((L, D), dt, P(None, None), "zeros"),
+        "mu_r": ParamDef((L, D), dt, P(None, None), "zeros"),
+        "w_in": _lin(cfg, D, F, P(FSDP, TP), L=L),
+        "w_recv": _lin(cfg, D, D, P(FSDP, None), L=L),
+        "w_out": _lin(cfg, F, D, P(TP, FSDP), L=L),
+    }
+    return {"tm": tm, "cm": cm}
+
+
+def _norm_def(cfg: ModelConfig, L: int | None, name: str) -> dict:
+    dt = _dt(cfg.param_dtype)
+    shape = (cfg.d_model,) if L is None else (L, cfg.d_model)
+    spec = P(None) if L is None else P(None, None)
+    d = {"scale": ParamDef(shape, dt, spec, "ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamDef(shape, dt, spec, "zeros")
+    return d
+
+
+def moe_is_ep(cfg: ModelConfig, model_axis_size: int) -> bool:
+    return (cfg.moe is not None
+            and cfg.moe.n_experts % max(model_axis_size, 1) == 0)
+
+
+def param_defs(cfg: ModelConfig, model_axis_size: int = 16) -> dict:
+    """Full parameter tree of ParamDef for one architecture."""
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    dt = _dt(cfg.param_dtype)
+    # vocab TP only when divisible (whisper 51865 / hymba 32001 stay
+    # replicated on the model axis; they are small)
+    vtp = TP if V % max(model_axis_size, 1) == 0 else None
+    tree: dict = {
+        "embed": {"tokens": ParamDef((V, D), dt, P(vtp, None), "normal", 0.02)},
+        "final_norm": _norm_def(cfg, None, "final"),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = {"w": ParamDef((D, V), dt, P(FSDP, vtp), "normal",
+                                         1.0 / np.sqrt(D))}
+
+    layer: dict = {"ln1": _norm_def(cfg, L, "ln1"), "ln2": _norm_def(cfg, L, "ln2")}
+    if cfg.family == "ssm" and cfg.ssm.kind == "rwkv6":
+        layer.update(_rwkv_defs(cfg, L))
+    else:
+        layer["attn"] = _attn_defs(cfg, L)
+        if cfg.family == "hybrid":
+            layer["mamba"] = _mamba_defs(cfg, L)
+            layer["attn_out_norm"] = _norm_def(cfg, L, "aon")
+            layer["mamba_out_norm"] = _norm_def(cfg, L, "mon")
+        if cfg.moe is not None:
+            layer["moe"] = _moe_defs(cfg, L, moe_is_ep(cfg, model_axis_size))
+            if cfg.moe.dense_residual:
+                layer["mlp"] = _mlp_defs(cfg, L, cfg.moe.d_ff_dense or cfg.d_ff)
+        else:
+            layer["mlp"] = _mlp_defs(cfg, L, cfg.d_ff)
+    tree["layers"] = layer
+
+    if cfg.enc_layers:    # whisper encoder stack + positional tables
+        Le = cfg.enc_layers
+        enc = {
+            "ln1": _norm_def(cfg, Le, "eln1"),
+            "ln2": _norm_def(cfg, Le, "eln2"),
+            "attn": _attn_defs(cfg, Le),
+            "mlp": _mlp_defs(cfg, Le, cfg.d_ff),
+        }
+        tree["enc_layers"] = enc
+        tree["enc_pos"] = ParamDef((cfg.enc_seq, D), dt, P(None, None),
+                                   "normal", 0.02)
+        tree["dec_pos"] = ParamDef((32768, D), dt, P(None, None), "normal", 0.02)
+        tree["enc_final_norm"] = _norm_def(cfg, None, "efn")
+        # decoder cross-attention
+        tree["layers"]["xattn"] = _attn_defs(cfg, L)
+        tree["layers"]["ln_x"] = _norm_def(cfg, L, "lnx")
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Materialization
+# ---------------------------------------------------------------------------
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig, model_axis_size: int = 16):
+    defs = param_defs(cfg, model_axis_size)
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(rng, len(leaves))
+
+    def mk(d: ParamDef, key):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        scale = d.init_scale if d.init_scale is not None else 0.02
+        return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(d.dtype)
+
+    return jax.tree.unflatten(treedef, [mk(d, k) for d, k in zip(leaves, keys)])
+
+
+def abstract_params(cfg: ModelConfig, model_axis_size: int = 16):
+    """ShapeDtypeStruct tree — dry-run stand-in, zero allocation."""
+    defs = param_defs(cfg, model_axis_size)
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+                        defs, is_leaf=is_def)
+
+
+def partition_specs(cfg: ModelConfig, model_axis_size: int = 16):
+    defs = param_defs(cfg, model_axis_size)
+    return jax.tree.map(lambda d: d.spec, defs, is_leaf=is_def)
+
+
+def strip_fsdp_tree(spec_tree):
+    """Drop the FSDP ("data") axis from every PartitionSpec — used for
+    TP-only serving layouts (cfg.serve_fsdp=False): weights stay resident
+    per device instead of being re-gathered every decode step."""
+    def fix(p: P) -> P:
+        out = []
+        for ax in tuple(p):
+            if ax == FSDP:
+                out.append(None)
+            elif isinstance(ax, tuple):
+                kept = tuple(a for a in ax if a != FSDP)
+                out.append(kept if kept else None)
+            else:
+                out.append(ax)
+        return P(*out)
+    return jax.tree.map(fix, spec_tree, is_leaf=lambda s: isinstance(s, P))
+
+
+def param_count(cfg: ModelConfig, model_axis_size: int = 16) -> int:
+    defs = param_defs(cfg, model_axis_size)
+    return sum(int(np.prod(d.shape)) for d in
+               jax.tree.leaves(defs, is_leaf=is_def))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top_k of E experts) for 6*N*D."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    defs = param_defs(cfg)
+    expert_total = sum(int(np.prod(d.shape)) for d in
+                       jax.tree.leaves(defs["layers"]["moe"]["experts"],
+                                       is_leaf=is_def))
+    active_frac = cfg.moe.top_k / cfg.moe.n_experts
+    return int(total - expert_total * (1.0 - active_frac))

@@ -1,0 +1,64 @@
+"""Sharding context threaded through model code.
+
+Model functions never hard-code mesh axis names; they request logical
+placements through a ShardCtx.  With ctx=None (CPU smoke tests) every
+constraint is a no-op, so the same code runs unsharded.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+
+    @property
+    def batch_axes(self) -> tuple[str, ...]:
+        ax = tuple(self.mesh.axis_names)
+        return ("pod", "data") if "pod" in ax else ("data",)
+
+    @property
+    def model_axis(self) -> str:
+        return "model"
+
+    @property
+    def fsdp_axis(self) -> str:
+        return "data"
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape["model"]
+
+    @property
+    def data_size(self) -> int:
+        n = self.mesh.shape["data"]
+        if "pod" in self.mesh.axis_names:
+            n *= self.mesh.shape["pod"]
+        return n
+
+    def spec(self, *axes) -> P:
+        return P(*axes)
+
+    def batch_spec(self, *rest) -> P:
+        return P(self.batch_axes, *rest)
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def shard(x: jax.Array, ctx: ShardCtx | None, spec) -> jax.Array:
+    """with_sharding_constraint when a ctx is present, else identity."""
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def batch_shard(x: jax.Array, ctx: ShardCtx | None, *rest) -> jax.Array:
+    """Shard leading (batch) dim over (pod?, data); rest as given."""
+    if ctx is None:
+        return x
+    return shard(x, ctx, P(ctx.batch_axes, *rest))

@@ -1,0 +1,180 @@
+"""State-space sequence mixers: Mamba (hymba's parallel head) and RWKV-6.
+
+TPU adaptation notes (DESIGN.md §3): both recurrences are *diagonal* linear
+state updates, so training/prefill uses `jax.lax.associative_scan` (Mamba)
+or a length-S `lax.scan` (RWKV-6, whose per-step outer product k v^T makes
+the associative form rank-growing; the sequential scan keeps the HLO small
+and the state in registers/VMEM).  Decode is a single fused state update —
+O(1) per token, which is what makes the long_500k cells runnable for the
+ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM, diagonal A) — hymba's parallel head
+# ---------------------------------------------------------------------------
+class MambaState(NamedTuple):
+    h: jax.Array        # (B, d_inner, N)
+    conv: jax.Array     # (B, conv_w - 1, d_inner) rolling window
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C); w: (W, C); b: (C,)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    # gather W shifted views — cheap, avoids conv lowering issues on CPU
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return y + b
+
+
+def mamba_forward(p: dict, x: jax.Array, state: MambaState | None = None
+                  ) -> tuple[jax.Array, MambaState]:
+    """Full-sequence selective scan. x: (B, S, D) -> (B, S, D).
+
+    Params: in_proj (D, 2*di), conv_w (W, di), conv_b (di), x_dt (di, dt_rank->di)
+    simplified: dt_proj (di,), W_dt (D_or_di ...) — see param builder.
+    """
+    B, S, D = x.shape
+    xz = x @ p["in_proj"]["w"].astype(x.dtype)                 # (B, S, 2*di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    di = xi.shape[-1]
+    xi_preconv = xi
+    xi = _causal_conv(xi, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    xi = jax.nn.silu(xi)
+
+    N = p["A_log"].shape[-1]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (di, N)
+    dt = jax.nn.softplus(xi @ p["w_dt"].astype(x.dtype)
+                         + p["dt_bias"].astype(x.dtype))       # (B, S, di)
+    Bm = (xi @ p["w_B"].astype(x.dtype)).astype(jnp.float32)   # (B, S, N)
+    Cm = (xi @ p["w_C"].astype(x.dtype)).astype(jnp.float32)   # (B, S, N)
+
+    dtf = dt.astype(jnp.float32)
+    Abar = jnp.exp(dtf[..., None] * A)                         # (B, S, di, N)
+    Bu = (dtf * xi.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    if state is not None:
+        Bu = Bu.at[:, 0].add(Abar[:, 0] * state.h)
+    a_cum, h_all = jax.lax.associative_scan(combine, (Abar, Bu), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, Cm)                 # (B, S, di)
+    y = y + xi.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]["w"].astype(x.dtype)
+    W = p["conv_w"].shape[0]
+    new_state = MambaState(h=h_all[:, -1], conv=xi_preconv[:, S - (W - 1):, :])
+    return out, new_state
+
+
+def mamba_decode(p: dict, x: jax.Array, state: MambaState
+                 ) -> tuple[jax.Array, MambaState]:
+    """One-token step. x: (B, 1, D)."""
+    B = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"]["w"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    di = xi.shape[-1]
+    W = p["conv_w"].shape[0]
+    window = jnp.concatenate([state.conv, xi[:, None, :]], axis=1)  # (B, W, di)
+    xi = (window * p["conv_w"].astype(x.dtype)[None]).sum(axis=1) \
+        + p["conv_b"].astype(x.dtype)
+    xi = jax.nn.silu(xi)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(xi @ p["w_dt"].astype(x.dtype) + p["dt_bias"].astype(x.dtype))
+    Bm = (xi @ p["w_B"].astype(x.dtype)).astype(jnp.float32)
+    Cm = (xi @ p["w_C"].astype(x.dtype)).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Abar = jnp.exp(dtf[:, :, None] * A)                        # (B, di, N)
+    h = Abar * state.h + (dtf * xi.astype(jnp.float32))[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cm)
+    y = y + xi.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"]["w"].astype(x.dtype))[:, None, :]
+    return out, MambaState(h=h, conv=window[:, 1:, :])
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 "Finch" — data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+class RWKVState(NamedTuple):
+    shift_tm: jax.Array   # (B, D) previous token (time-mix)
+    shift_cm: jax.Array   # (B, D) previous token (channel-mix)
+    wkv: jax.Array        # (B, H, dh, dh) f32 outer-product state
+
+
+def _ddlerp(x, xx, mu, A, Bm):
+    """Data-dependent lerp (v6): x + (xx-x) * (mu + tanh((x+(xx-x)*mu0)@A)@B).
+
+    Simplified single-stream variant; A: (D, r), Bm: (r, D)."""
+    d = xx - x
+    lora = jnp.tanh((x + d * mu) @ A.astype(x.dtype)) @ Bm.astype(x.dtype)
+    return x + d * (mu + lora)
+
+
+def rwkv6_timemix(p: dict, x: jax.Array, n_heads: int,
+                  state: RWKVState | None) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, last_x, new_wkv).  Sequential scan over S."""
+    B, S, D = x.shape
+    dh = D // n_heads
+    prev = jnp.zeros((B, D), x.dtype) if state is None else state.shift_tm
+    xx = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+    def stream(name):
+        return _ddlerp(x, xx, p[f"mu_{name}"].astype(x.dtype),
+                       p["lora_A"], p[f"lora_B_{name}"])
+
+    xr, xk, xv, xw, xg = (stream(n) for n in ("r", "k", "v", "w", "g"))
+    r = (xr @ p["w_r"]["w"].astype(x.dtype)).reshape(B, S, n_heads, dh)
+    k = (xk @ p["w_k"]["w"].astype(x.dtype)).reshape(B, S, n_heads, dh)
+    v = (xv @ p["w_v"]["w"].astype(x.dtype)).reshape(B, S, n_heads, dh)
+    g = jax.nn.silu(xg @ p["w_g"]["w"].astype(x.dtype))
+    # data-dependent decay per channel, in (0, 1)
+    wdec = p["w0"].astype(x.dtype) + jnp.tanh(xw @ p["wA"].astype(x.dtype)) \
+        @ p["wB"].astype(x.dtype)
+    wdec = jnp.exp(-jnp.exp(wdec.astype(jnp.float32))).reshape(B, S, n_heads, dh)
+    u = p["u"].astype(jnp.float32).reshape(n_heads, dh)         # bonus
+
+    s0 = (jnp.zeros((B, n_heads, dh, dh), jnp.float32)
+          if state is None else state.wkv)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                    # (B, H, dh) f32
+        kv = kt[..., :, None] * vt[..., None, :]                # (B, H, dh, dh)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    rs = r.transpose(1, 0, 2, 3).astype(jnp.float32)
+    ks = k.transpose(1, 0, 2, 3).astype(jnp.float32)
+    vs = v.transpose(1, 0, 2, 3).astype(jnp.float32)
+    ws = wdec.transpose(1, 0, 2, 3).astype(jnp.float32)
+    s_fin, ys = jax.lax.scan(step, s0, (rs, ks, vs, ws))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, D)               # (B, S, D)
+    y = rms_norm(y.astype(x.dtype), p["gn_scale"], eps=1e-5)    # per-head groupnorm ~ rms
+    out = (y * g) @ p["w_o"]["w"].astype(x.dtype)
+    return out, x[:, -1, :], s_fin
+
+
+def rwkv6_channelmix(p: dict, x: jax.Array, state: RWKVState | None
+                     ) -> tuple[jax.Array, jax.Array]:
+    B, S, D = x.shape
+    prev = jnp.zeros((B, D), x.dtype) if state is None else state.shift_cm
+    xx = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    xk = x + (xx - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (xx - x) * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["w_in"]["w"].astype(x.dtype)))
+    y = jax.nn.sigmoid(xr @ p["w_recv"]["w"].astype(x.dtype)) \
+        * (k @ p["w_out"]["w"].astype(x.dtype))
+    return y, x[:, -1, :]

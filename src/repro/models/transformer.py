@@ -1,0 +1,532 @@
+"""Model assembly: all 10 assigned architectures from one set of blocks.
+
+Structure:
+  * layer stacks are `lax.scan` over (L, ...)-stacked params — HLO size and
+    compile time are depth-independent (essential for the 80L/56L dry-runs);
+  * `jax.checkpoint` (full remat) wraps the scanned body when cfg.remat;
+  * decode threads the per-layer cache through the same scan as xs/ys;
+  * the LM loss is computed in sequence chunks so the (B, S, 152k) logits
+    tensor never materializes (chunked softmax-CE).
+
+Batch dict keys by family:
+  tokens (B,S) i32, labels (B,S) i32 (pad = -1)
+  vlm:   + positions (B,3,S) i32 (M-RoPE), vision_embeds (B,Nv,D)
+  audio: + enc_frames (B,enc_seq,D)   [conv frontend stub]
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as ATT
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.layers import (
+    apply_rope, embed, layer_norm, linear, mrope_cos_sin, rms_norm,
+    rope_cos_sin,
+)
+from repro.models.params import moe_is_ep
+from repro.models.sharding import ShardCtx, batch_shard, shard
+
+MOE_AUX_COEF = 0.01
+
+
+def _cdt(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.compute_dtype]
+
+
+def _kv_dt(cfg: ModelConfig):
+    """KV-cache storage dtype (fp8 halves cache traffic; math stays f32)."""
+    if cfg.kv_cache_dtype == "float8_e4m3fn":
+        return jnp.float8_e4m3fn
+    return _cdt(cfg)
+
+
+def _norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def _qkv(cfg: ModelConfig, p: dict, x: jax.Array):
+    B, S, _ = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(p["wq"], x, cfg.quant).reshape(B, S, H, dh)
+    k = linear(p["wk"], x, cfg.quant).reshape(B, S, K, dh)
+    v = linear(p["wv"], x, cfg.quant).reshape(B, S, K, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _attn_full(cfg: ModelConfig, p: dict, x: jax.Array, cos, sin, ctx,
+               *, causal: bool = True, window: int | None = None,
+               kv_override: tuple | None = None):
+    """Full-sequence attention (train/prefill). Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    q, k, v = _qkv(cfg, p, x)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if kv_override is not None:          # cross attention
+        k, v = kv_override
+    if ctx is not None:
+        q = shard(q, ctx, P(ctx.batch_axes, None, "model", None))
+        k = shard(k, ctx, P(ctx.batch_axes, None, None, None))
+        v = shard(v, ctx, P(ctx.batch_axes, None, None, None))
+    o = ATT.blockwise_attention(q, k, v, causal=causal, window=window,
+                                block_k=cfg.attn_block_k)
+    out = linear(p["wo"], o.reshape(B, S, H * dh), cfg.quant)
+    return out, (k, v)
+
+
+def _cross_kv(cfg: ModelConfig, p: dict, enc_out: jax.Array):
+    B, Se, _ = enc_out.shape
+    K, dh = cfg.n_kv_heads, cfg.head_dim
+    k = linear(p["wk"], enc_out, cfg.quant).reshape(B, Se, K, dh)
+    v = linear(p["wv"], enc_out, cfg.quant).reshape(B, Se, K, dh)
+    return k, v
+
+
+def _mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu" and "w_gate" in p:
+        h = jax.nn.silu(linear(p["w_gate"], x, cfg.quant)) \
+            * linear(p["w_up"], x, cfg.quant)
+        return linear(p["w_down"], h, cfg.quant)
+    h = jax.nn.gelu(linear(p["w_in"], x, cfg.quant))
+    return linear(p["w_out"], h, cfg.quant)
+
+
+# ---------------------------------------------------------------------------
+# Train/prefill blocks (return (x, aux, cache_entry))
+# ---------------------------------------------------------------------------
+def _block_dense(cfg, lp, x, cos, sin, ctx):
+    a, kv = _attn_full(cfg, lp["attn"], _norm(cfg, lp["ln1"], x), cos, sin, ctx,
+                       window=cfg.swa_window)
+    x = x + a
+    h = _norm(cfg, lp["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        ep = moe_is_ep(cfg, 16)
+        y, aux = MOE.moe_ffn(lp["moe"], h, n_experts=cfg.moe.n_experts,
+                             top_k=cfg.moe.top_k,
+                             capacity_factor=cfg.moe.capacity_factor,
+                             quant=cfg.quant, ctx=ctx, ep=ep,
+                             moe_fsdp=cfg.moe_fsdp)
+        if cfg.moe.dense_residual:
+            y = y + _mlp(cfg, lp["mlp"], h)
+        x = x + y
+    else:
+        x = x + _mlp(cfg, lp["mlp"], h)
+    return x, aux, kv
+
+
+def _block_hybrid(cfg, lp, x, cos, sin, ctx, mamba_state=None):
+    h = _norm(cfg, lp["ln1"], x)
+    a, kv = _attn_full(cfg, lp["attn"], h, cos, sin, ctx, window=cfg.swa_window)
+    m, mstate = SSM.mamba_forward(lp["mamba"], h, mamba_state)
+    mix = 0.5 * (_norm(cfg, lp["attn_out_norm"], a)
+                 + _norm(cfg, lp["mamba_out_norm"], m))
+    x = x + mix
+    x = x + _mlp(cfg, lp["mlp"], _norm(cfg, lp["ln2"], x))
+    return x, jnp.zeros((), jnp.float32), (kv, mstate)
+
+
+def _block_rwkv(cfg, lp, x, state=None):
+    h = _norm(cfg, lp["ln1"], x)
+    tm_out, last_tm, wkv = SSM.rwkv6_timemix(lp["tm"], h, cfg.n_heads, state)
+    x = x + tm_out
+    h2 = _norm(cfg, lp["ln2"], x)
+    cm_out, last_cm = SSM.rwkv6_channelmix(lp["cm"], h2, state)
+    x = x + cm_out
+    return x, jnp.zeros((), jnp.float32), (last_tm, last_cm, wkv)
+
+
+def _block_enc(cfg, lp, x, ctx):
+    a, _ = _attn_full(cfg, lp["attn"], _norm(cfg, lp["ln1"], x), None, None,
+                      ctx, causal=False)
+    x = x + a
+    x = x + _mlp(cfg, lp["mlp"], _norm(cfg, lp["ln2"], x))
+    return x
+
+
+def _block_dec_xattn(cfg, lp, x, enc_out, cos, sin, ctx):
+    a, kv = _attn_full(cfg, lp["attn"], _norm(cfg, lp["ln1"], x), cos, sin, ctx)
+    x = x + a
+    xk, xv = _cross_kv(cfg, lp["xattn"], enc_out)
+    hq = _norm(cfg, lp["ln_x"], x)
+    B, S, _ = hq.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    q = linear(lp["xattn"]["wq"], hq, cfg.quant).reshape(B, S, H, dh)
+    o = ATT.blockwise_attention(q, xk, xv, causal=False,
+                                block_k=cfg.attn_block_k)
+    x = x + linear(lp["xattn"]["wo"], o.reshape(B, S, H * dh), cfg.quant)
+    x = x + _mlp(cfg, lp["mlp"], _norm(cfg, lp["ln2"], x))
+    return x, jnp.zeros((), jnp.float32), (kv, (xk, xv))
+
+
+def apply_block(cfg: ModelConfig, lp: dict, x: jax.Array, *,
+                cos=None, sin=None, ctx: ShardCtx | None = None,
+                enc_out: jax.Array | None = None):
+    """One full-sequence layer application (the scanned body), standalone.
+
+    Used by roofline/component_costing.py to compile a single layer
+    loop-free (XLA's cost analysis counts while-loop bodies once, so
+    per-layer costs must be measured outside the scan)."""
+    if cfg.family == "ssm" and cfg.ssm is not None and cfg.ssm.kind == "rwkv6":
+        return _block_rwkv(cfg, lp, x)
+    if cfg.family == "hybrid":
+        return _block_hybrid(cfg, lp, x, cos, sin, ctx)
+    if cfg.enc_layers and enc_out is not None:
+        return _block_dec_xattn(cfg, lp, x, enc_out, cos, sin, ctx)
+    return _block_dense(cfg, lp, x, cos, sin, ctx)
+
+
+def apply_block_decode(cfg: ModelConfig, lp: dict, cl: dict, x: jax.Array,
+                       pos, cos, sin, mask, slot,
+                       ctx: ShardCtx | None = None):
+    """One decode-step layer application (the scanned body), standalone."""
+    B = x.shape[0]
+    kind = ("rwkv" if (cfg.family == "ssm" and cfg.ssm is not None
+                       and cfg.ssm.kind == "rwkv6")
+            else "hybrid" if cfg.family == "hybrid"
+            else "encdec" if cfg.enc_layers else "attn")
+    ncl = dict(cl)
+    if kind == "rwkv":
+        st = SSM.RWKVState(cl["shift_tm"], cl["shift_cm"], cl["wkv"])
+        x, _, (ltm, lcm, wkv) = _block_rwkv(cfg, lp, x, state=st)
+        ncl["shift_tm"], ncl["shift_cm"], ncl["wkv"] = ltm, lcm, wkv
+        return x, ncl
+    h = _norm(cfg, lp["ln1"], x)
+    a, nk, nv = _attn_decode(cfg, lp["attn"], h, cl["k"], cl["v"],
+                             pos, cos, sin, mask, slot)
+    ncl["k"], ncl["v"] = nk, nv
+    if kind == "hybrid":
+        m, mstate = SSM.mamba_decode(
+            lp["mamba"], h, SSM.MambaState(cl["mamba_h"], cl["mamba_conv"]))
+        ncl["mamba_h"], ncl["mamba_conv"] = mstate.h, mstate.conv
+        a = 0.5 * (_norm(cfg, lp["attn_out_norm"], a)
+                   + _norm(cfg, lp["mamba_out_norm"], m))
+    x = x + a
+    if kind == "encdec":
+        hq = _norm(cfg, lp["ln_x"], x)
+        H, dh = cfg.n_heads, cfg.head_dim
+        q = linear(lp["xattn"]["wq"], hq, cfg.quant).reshape(B, 1, H, dh)
+        xo = ATT.decode_attention(q, cl["xk"], cl["xv"],
+                                  jnp.ones((cl["xk"].shape[1],), bool))
+        x = x + linear(lp["xattn"]["wo"], xo.reshape(B, 1, H * dh), cfg.quant)
+    h2 = _norm(cfg, lp["ln2"], x)
+    if cfg.moe is not None:
+        y, _ = MOE.moe_ffn(lp["moe"], h2, n_experts=cfg.moe.n_experts,
+                           top_k=cfg.moe.top_k,
+                           capacity_factor=cfg.moe.capacity_factor,
+                           quant=cfg.quant, ctx=ctx, ep=moe_is_ep(cfg, 16),
+                           moe_fsdp=cfg.moe_fsdp)
+        if cfg.moe.dense_residual:
+            y = y + _mlp(cfg, lp["mlp"], h2)
+        x = x + y
+    else:
+        x = x + _mlp(cfg, lp["mlp"], h2)
+    return x, ncl
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+def _scan_stack(cfg, layer_params, x, body, ctx, collect_cache: bool):
+    """Scan `body(x, lp) -> (x, aux, cache_entry)` over stacked layers."""
+
+    def f(carry, lp):
+        xx, aux = carry
+        xx = batch_shard(xx, ctx, None, None) if (
+            ctx is not None and xx.shape[0] % ctx.data_size == 0) else xx
+        xx, aux_l, cache_entry = body(xx, lp)
+        return (xx, aux + aux_l), (cache_entry if collect_cache else None)
+
+    if cfg.remat:
+        f = jax.checkpoint(f)
+    (x, aux), caches = jax.lax.scan(f, (x, jnp.zeros((), jnp.float32)),
+                                    layer_params)
+    return x, aux, caches
+
+
+def _rope_for(cfg: ModelConfig, batch: dict, S: int, B: int):
+    if cfg.rope == "none":
+        return None, None
+    if cfg.rope == "mrope":
+        pos = batch.get("positions")
+        if pos is None:
+            pos = jnp.broadcast_to(jnp.arange(S)[None, None, :], (B, 3, S))
+        return mrope_cos_sin(pos, cfg.head_dim, cfg.rope_theta,
+                             cfg.mrope_sections)
+    pos = batch.get("positions")
+    if pos is None:
+        pos = jnp.arange(S)[None, :]
+    return rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict,
+            ctx: ShardCtx | None = None, *, collect_cache: bool = False):
+    """Full-sequence forward. Returns (hidden (B,S,D), aux, caches|None)."""
+    comp = _cdt(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(params["embed"]["tokens"], tokens, comp)
+    if cfg.frontend == "vision" and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(comp)
+        x = jax.lax.dynamic_update_slice(x, ve, (0, 0, 0))
+    x = batch_shard(x, ctx, None, None) if (
+        ctx is not None and B % ctx.data_size == 0) else x
+    cos, sin = _rope_for(cfg, batch, S, B)
+
+    enc_out = None
+    if cfg.enc_layers:
+        enc = batch["enc_frames"].astype(comp) + params["enc_pos"][None].astype(comp)
+
+        def enc_body(xx, lp):
+            return _block_enc(cfg, lp, xx, ctx), jnp.zeros((), jnp.float32), None
+
+        enc_out, _, _ = _scan_stack(cfg, params["enc_layers"], enc, enc_body,
+                                    ctx, collect_cache=False)
+        enc_out = _norm(cfg, params["enc_final_norm"], enc_out)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], 0, S, axis=0)[None].astype(comp)
+
+    if cfg.family == "ssm" and cfg.ssm.kind == "rwkv6":
+        body = lambda xx, lp: _block_rwkv(cfg, lp, xx)
+    elif cfg.family == "hybrid":
+        body = lambda xx, lp: _block_hybrid(cfg, lp, xx, cos, sin, ctx)
+    elif cfg.enc_layers:
+        body = lambda xx, lp: _block_dec_xattn(cfg, lp, xx, enc_out, cos, sin, ctx)
+    else:
+        body = lambda xx, lp: _block_dense(cfg, lp, xx, cos, sin, ctx)
+
+    x, aux, caches = _scan_stack(cfg, params["layers"], x, body, ctx,
+                                 collect_cache)
+    x = _norm(cfg, params["final_norm"], x)
+    return x, aux, caches
+
+
+def logits_from_hidden(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x.astype(jnp.float32) @ params["embed"]["tokens"].astype(jnp.float32).T
+    return linear(params["lm_head"], x.astype(jnp.float32), "dense")
+
+
+def chunked_ce_loss(cfg: ModelConfig, params: dict, x: jax.Array,
+                    labels: jax.Array, n_chunks: int = 8):
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    Scans over S chunks; each chunk computes logits, logZ, and the label
+    log-prob.  Returns (sum_nll, n_valid_tokens)."""
+    B, S, D = x.shape
+    n_chunks = max(1, min(n_chunks, S))
+    while S % n_chunks:
+        n_chunks -= 1
+    Sc = S // n_chunks
+    xs = x.reshape(B, n_chunks, Sc, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n_chunks, Sc).transpose(1, 0, 2)
+
+    def body(acc, inp):
+        xc, lc = inp
+        logits = logits_from_hidden(cfg, params, xc)           # (B, Sc, V) f32
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(lc, 0)[..., None],
+                                 axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        nll = ((logz - ll) * mask).sum()
+        return (acc[0] + nll, acc[1] + mask.sum()), None
+
+    (nll, n_tok), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xs, ls))
+    return nll, n_tok
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict,
+            ctx: ShardCtx | None = None):
+    """Scalar LM loss + metrics (the train_step objective)."""
+    x, aux, _ = forward(cfg, params, batch, ctx)
+    nll, n_tok = chunked_ce_loss(cfg, params, x, batch["labels"])
+    loss = nll / jnp.maximum(n_tok, 1.0) + MOE_AUX_COEF * aux
+    return loss, {"loss": loss, "nll": nll, "tokens": n_tok, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode: cache init + single step
+# ---------------------------------------------------------------------------
+class CacheSpec(NamedTuple):
+    kind: str            # attn | hybrid | rwkv | encdec
+    cache_len: int       # self-attn cache slots (window for SWA)
+
+
+def cache_spec(cfg: ModelConfig, seq_len: int) -> CacheSpec:
+    if cfg.family == "ssm" and cfg.ssm.kind == "rwkv6":
+        return CacheSpec("rwkv", 0)
+    eff = min(seq_len, cfg.swa_window) if cfg.swa_window else seq_len
+    if cfg.family == "hybrid":
+        return CacheSpec("hybrid", eff)
+    if cfg.enc_layers:
+        return CacheSpec("encdec", eff)
+    return CacheSpec("attn", eff)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, seq_len: int) -> dict:
+    """Zero-filled cache sized for `seq_len` context."""
+    spec = cache_spec(cfg, seq_len)
+    L, B = cfg.n_layers, batch_size
+    K, dh, D = cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    comp = _cdt(cfg)
+    kvdt = _kv_dt(cfg)
+    c: dict = {}
+    if spec.kind in ("attn", "hybrid", "encdec"):
+        c["k"] = jnp.zeros((L, B, spec.cache_len, K, dh), kvdt)
+        c["v"] = jnp.zeros((L, B, spec.cache_len, K, dh), kvdt)
+    if spec.kind == "hybrid":
+        di = cfg.ssm.expand * D
+        c["mamba_h"] = jnp.zeros((L, B, di, cfg.ssm.state_size), jnp.float32)
+        c["mamba_conv"] = jnp.zeros((L, B, cfg.ssm.conv_width - 1, di), comp)
+    if spec.kind == "rwkv":
+        c["shift_tm"] = jnp.zeros((L, B, D), comp)
+        c["shift_cm"] = jnp.zeros((L, B, D), comp)
+        c["wkv"] = jnp.zeros((L, B, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                             jnp.float32)
+    if spec.kind == "encdec":
+        c["xk"] = jnp.zeros((L, B, cfg.enc_seq, K, dh), kvdt)
+        c["xv"] = jnp.zeros((L, B, cfg.enc_seq, K, dh), kvdt)
+    return c
+
+
+def cache_partition_specs(cfg: ModelConfig, batch_size: int, seq_len: int,
+                          data_size: int, model_size: int) -> dict:
+    """PartitionSpecs matching init_cache's tree, divisibility-aware."""
+    spec = cache_spec(cfg, seq_len)
+    bax = ("data",) if batch_size % data_size == 0 and batch_size > 1 else None
+    sax = "model" if spec.cache_len % model_size == 0 and spec.cache_len > 0 else None
+    c: dict = {}
+    if spec.kind in ("attn", "hybrid", "encdec"):
+        c["k"] = P(None, bax, sax, None, None)
+        c["v"] = P(None, bax, sax, None, None)
+    if spec.kind == "hybrid":
+        di = cfg.ssm.expand * cfg.d_model
+        dax = "model" if di % model_size == 0 else None
+        c["mamba_h"] = P(None, bax, dax, None)
+        c["mamba_conv"] = P(None, bax, None, dax)
+    if spec.kind == "rwkv":
+        hax = "model" if cfg.n_heads % model_size == 0 else None
+        c["shift_tm"] = P(None, bax, None)
+        c["shift_cm"] = P(None, bax, None)
+        c["wkv"] = P(None, bax, hax, None, None)
+    if spec.kind == "encdec":
+        c["xk"] = P(None, bax, None, None, None)
+        c["xv"] = P(None, bax, None, None, None)
+    return c
+
+
+def _attn_decode(cfg, lp, x, cache_k, cache_v, pos, cos, sin, mask, slot):
+    B = x.shape[0]
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _qkv(cfg, lp, x)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, slot, 0, 0))
+    o = ATT.decode_attention(q, cache_k, cache_v, mask)
+    out = linear(lp["wo"], o.reshape(B, 1, H * dh), cfg.quant)
+    return out, cache_k, cache_v
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array,
+                pos: jax.Array, ctx: ShardCtx | None = None,
+                positions: jax.Array | None = None):
+    """One decode step for the whole batch at absolute position `pos`.
+
+    tokens: (B, 1) i32; pos: scalar i32.  Returns (logits (B,1,V), cache)."""
+    comp = _cdt(cfg)
+    B = tokens.shape[0]
+    x = embed(params["embed"]["tokens"], tokens, comp)
+    cspec = cache_spec(cfg, int(cache["k"].shape[2]) if "k" in cache else 0)
+    Sc = cspec.cache_len
+
+    if cfg.rope == "mrope":
+        p3 = positions if positions is not None else \
+            jnp.broadcast_to(pos[None, None, None] if jnp.ndim(pos) else
+                             jnp.full((B, 3, 1), pos), (B, 3, 1))
+        cos, sin = mrope_cos_sin(p3, cfg.head_dim, cfg.rope_theta,
+                                 cfg.mrope_sections)
+    elif cfg.rope == "std":
+        p1 = jnp.full((1, 1), pos)
+        cos, sin = rope_cos_sin(p1, cfg.head_dim, cfg.rope_theta)
+    else:
+        cos = sin = None
+
+    rolling = cfg.swa_window is not None and Sc == cfg.swa_window
+    if Sc:
+        slot = jnp.mod(pos, Sc) if rolling else pos
+        mask = ATT.rolling_mask(pos, Sc) if rolling else ATT.linear_mask(pos, Sc)
+    else:
+        slot = mask = None
+
+    def body(xx, xs):
+        lp, cl = xs
+        return apply_block_decode(cfg, lp, cl, xx, pos, cos, sin, mask, slot,
+                                  ctx)
+
+    if cfg.enc_layers:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], pos, 1, axis=0)[None].astype(comp)
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = _norm(cfg, params["final_norm"], x)
+    logits = logits_from_hidden(cfg, params, x)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, cache_len: int,
+            ctx: ShardCtx | None = None):
+    """Full-context forward that also materializes the decode cache.
+
+    Returns (hidden (B,S,D), cache dict ready for decode_step at pos=S).
+    For SWA archs requires S % window == 0 (slot order == position order)."""
+    x, aux, caches = forward(cfg, params, batch, ctx, collect_cache=True)
+    B, S, _ = x.shape
+    spec = cache_spec(cfg, cache_len)
+    Sc = spec.cache_len
+    c: dict = {}
+
+    def fit(k):   # (L, B, S, K, dh) -> (L, B, Sc, K, dh)
+        if Sc == S:
+            return k
+        if Sc < S:     # rolling window: keep the last Sc positions
+            assert S % Sc == 0, "SWA prefill requires S % window == 0"
+            return k[:, :, S - Sc:]
+        pad = [(0, 0)] * k.ndim
+        pad[2] = (0, Sc - S)
+        return jnp.pad(k, pad)
+
+    kvdt = _kv_dt(cfg)
+
+    if spec.kind == "attn":
+        k, v = caches
+        c["k"], c["v"] = fit(k).astype(kvdt), fit(v).astype(kvdt)
+    elif spec.kind == "hybrid":
+        (k, v), mstate = caches
+        c["k"], c["v"] = fit(k).astype(kvdt), fit(v).astype(kvdt)
+        c["mamba_h"] = mstate.h
+        c["mamba_conv"] = mstate.conv.astype(_cdt(cfg))
+    elif spec.kind == "rwkv":
+        ltm, lcm, wkv = caches
+        c["shift_tm"], c["shift_cm"], c["wkv"] = ltm, lcm, wkv
+    elif spec.kind == "encdec":
+        (k, v), (xk, xv) = caches
+        c["k"], c["v"] = fit(k).astype(kvdt), fit(v).astype(kvdt)
+        c["xk"], c["xv"] = xk.astype(kvdt), xv.astype(kvdt)
+    return x, c

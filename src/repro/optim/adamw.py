@@ -1,0 +1,92 @@
+"""AdamW with warmup-cosine schedule — pure-JAX, pytree-native.
+
+No optax in this environment, so the framework carries its own optimizer.
+States are stored as a pytree congruent with params, so the distributed
+layer can shard them with the same partition rules as the parameters
+(ZeRO-1: see `repro.launch.train` which additionally shards the states'
+FSDP dim over the data axis).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray          # scalar int32
+    mu: Any                    # first moment, pytree like params
+    nu: Any                    # second moment, pytree like params
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float | None = 1.0
+    warmup_steps: int = 0
+    total_steps: int | None = None     # enables cosine decay when set
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + (optional) cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.warmup_steps > 0:
+        warm = jnp.minimum(1.0, (step + 1.0) / cfg.warmup_steps)
+    else:
+        warm = 1.0
+    if cfg.total_steps is not None:
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    else:
+        decay = 1.0
+    return lr * warm * decay
+
+
+def init(params: Any) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def apply_updates(params: Any, grads: Any, state: AdamWState,
+                  cfg: AdamWConfig) -> tuple[Any, AdamWState]:
+    """One AdamW step.  Returns (new_params, new_state)."""
+    step = state.step + 1
+    if cfg.grad_clip is not None:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                      state.nu, grads)
+    stepf = step.astype(jnp.float32)
+    mu_hat_scale = 1.0 / (1.0 - b1 ** stepf)
+    nu_hat_scale = 1.0 / (1.0 - b2 ** stepf)
+    lr = schedule(cfg, state.step)
+
+    def upd(p, m, v):
+        u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,115 @@
+"""Block-wise int8 AdamW moments (8-bit-optimizer style).
+
+Why: arctic-480b on one 256-chip v5e pod cannot hold f32 Adam moments
+(480e9 * 8 B = 3.8 TB ~ the whole pod's HBM before params/grads).  Storing
+m and v as int8 with per-block f32 absmax scales cuts moment memory ~4x and
+fits (DESIGN.md §6).
+
+Sharding-compatible layout: the int8 codes keep the *parameter's shape*, so
+they shard with the parameter's own PartitionSpec (ZeRO-1 falls out of the
+FSDP dim for free).  Scales are per-block along the last axis:
+shape[:-1] + (ceil(last/BLOCK),), sharded like the param minus its last
+axis.  `opt_partition_specs` in launch/steps.py builds exactly that tree.
+
+Dynamics match f32 AdamW to quantization error (parity-tested in
+tests/test_optim.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, schedule, global_norm
+
+BLOCK = 512
+
+
+class Q8Tensor(NamedTuple):
+    codes: jax.Array     # int8, same shape as the parameter
+    scales: jax.Array    # f32, shape[:-1] + (n_blocks,)
+
+
+class AdamW8bitState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any              # pytree of Q8Tensor
+    nu: Any
+
+
+def _nblocks(last: int) -> int:
+    return -(-last // BLOCK)
+
+
+def _quantize(x: jax.Array) -> Q8Tensor:
+    *lead, last = x.shape
+    nb = _nblocks(last)
+    pad = nb * BLOCK - last
+    xp = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    blocks = xp.reshape(*lead, nb, BLOCK)
+    scales = jnp.max(jnp.abs(blocks), axis=-1) / 127.0 + 1e-12   # (*lead, nb)
+    codes = jnp.clip(jnp.round(blocks / scales[..., None]), -127, 127)
+    codes = codes.reshape(*lead, nb * BLOCK)[..., :last].astype(jnp.int8)
+    return Q8Tensor(codes, scales)
+
+
+def _dequantize(q: Q8Tensor) -> jax.Array:
+    *lead, last = q.codes.shape
+    nb = q.scales.shape[-1]
+    pad = nb * BLOCK - last
+    cp = jnp.pad(q.codes.astype(jnp.float32),
+                 [(0, 0)] * len(lead) + [(0, pad)])
+    blocks = cp.reshape(*lead, nb, BLOCK) * q.scales[..., None]
+    return blocks.reshape(*lead, nb * BLOCK)[..., :last]
+
+
+def init(params: Any) -> AdamW8bitState:
+    def zq(p):
+        shape = p.shape if p.ndim > 0 else (1,)
+        return _quantize(jnp.zeros(shape, jnp.float32))
+    z = jax.tree.map(zq, params)
+    z2 = jax.tree.map(zq, params)
+    return AdamW8bitState(step=jnp.zeros((), jnp.int32), mu=z, nu=z2)
+
+
+def _is_q8(t) -> bool:
+    return isinstance(t, Q8Tensor)
+
+
+def apply_updates(params: Any, grads: Any, state: AdamW8bitState,
+                  cfg: AdamWConfig) -> tuple[Any, AdamW8bitState]:
+    step = state.step + 1
+    if cfg.grad_clip is not None:
+        gnorm = global_norm(grads)
+        cscale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * cscale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    stepf = step.astype(jnp.float32)
+    mu_hat_scale = 1.0 / (1.0 - b1 ** stepf)
+    nu_hat_scale = 1.0 / (1.0 - b2 ** stepf)
+    lr = schedule(cfg, state.step)
+
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = jax.tree.leaves(state.mu, is_leaf=_is_q8)
+    v_leaves = jax.tree.leaves(state.nu, is_leaf=_is_q8)
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, mq, vq in zip(p_leaves, g_leaves, m_leaves, v_leaves):
+        shape = p.shape if p.ndim > 0 else (1,)
+        g32 = g.astype(jnp.float32).reshape(shape)
+        m = b1 * _dequantize(mq) + (1 - b1) * g32
+        v = b2 * _dequantize(vq) + (1 - b2) * jnp.square(g32)
+        u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p.astype(jnp.float32).reshape(shape)
+        newp = (p.astype(jnp.float32).reshape(shape) - lr * u).astype(p.dtype)
+        new_p.append(newp.reshape(p.shape))
+        new_m.append(_quantize(m))
+        new_v.append(_quantize(v))
+
+    return (jax.tree.unflatten(treedef, new_p),
+            AdamW8bitState(step=step,
+                           mu=jax.tree.unflatten(treedef, new_m),
+                           nu=jax.tree.unflatten(treedef, new_v)))

@@ -1,0 +1,136 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+All quantities are PER DEVICE: XLA's cost_analysis and the optimized HLO
+text both describe the post-SPMD per-device program, so
+
+    compute_s    = flops / PEAK_FLOPS
+    memory_s     = bytes_accessed / HBM_BW
+    collective_s = collective_output_bytes / ICI_BW
+
+Hardware constants (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  collective bytes are not in cost_analysis, so we parse
+the optimized HLO and sum the *output* tensor bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.:  %all-gather.7 = bf16[8,512,128]{2,1,0} all-gather(...)
+#        ROOT %t = (f32[8]{0}, f32[8]{0}) all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum output tensor bytes of every collective in optimized HLO."""
+    stats = CollectiveStats()
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shapes_str, kind = m.group(1), m.group(2)
+        # async pairs: -start carries the shape; skip double counting -done
+        span_text = hlo_text[max(0, m.start() - 120): m.start()]
+        if f"{kind}-done" in m.group(0):
+            continue
+        b = sum(_shape_bytes(dt, dims)
+                for dt, dims in _SHAPE_RE.findall(shapes_str))
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    coll_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def summary(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes_per_device": self.collective_bytes,
+            "collective_by_kind": self.coll_by_kind,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def roofline_from_compiled(compiled) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):            # older API returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byt = float(ca.get("bytes accessed", 0.0))
+    stats = parse_collectives(compiled.as_text())
+    return Roofline(flops=flops, bytes_accessed=byt,
+                    collective_bytes=float(stats.total_bytes),
+                    coll_by_kind=dict(stats.bytes_by_kind))
+
+
+def model_flops(active_params: int, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference) with N = active."""
+    per_tok = 6 if kind == "train" else 2
+    return float(per_tok * active_params * tokens)

@@ -1,0 +1,378 @@
+"""Trip-count-correct roofline costing via loop-free component compiles.
+
+Why this exists: XLA's `cost_analysis()` counts a while-loop body ONCE,
+regardless of trip count (verified empirically: a scan of 50 matmuls
+reports the flops of 1).  Our production builds scan over layers,
+microbatches, attention KV blocks and loss chunks, so whole-program
+cost_analysis underestimates by orders of magnitude.
+
+Methodology (EXPERIMENTS.md §Roofline):
+  * compile each REPEATED UNIT standalone and loop-free, with the same
+    shardings as the production build, on the same 256/512-device mesh:
+      - train:   layer fwd+bwd (vjp, remat honored), embed fwd+bwd,
+                 head+loss fwd+bwd (1 chunk), optimizer update
+      - prefill: layer fwd, embed, head
+      - decode:  layer decode step, embed+head
+    with attention block_k = full KV length (=> its scan has 1 trip).
+  * total = sum(component x exact trip count); trip counts are static
+    (L layers, mb microbatches, ...).
+  * recurrent time-scans (RWKV, which cannot be made trip-1) are costed at
+    two short sequence lengths and extrapolated linearly in S — the
+    recurrence body is S-invariant so cost is affine in S.
+  * collective bytes are parsed from each component's optimized HLO and
+    composed the same way.
+Known approximation: cross-layer CSE (e.g. hoisted all-gathers) is lost,
+so collective totals are slightly conservative (upper bounds).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as TF
+from repro.models.params import param_defs, is_def
+from repro.models.sharding import ShardCtx
+from repro.optim import adamw, adamw8bit
+from repro.roofline.analysis import Roofline, parse_collectives
+from repro.launch import specs as SP
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: float = 0.0
+    coll_by_kind: dict = field(default_factory=dict)
+
+    def __mul__(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, self.coll * k,
+                    {kk: v * k for kk, v in self.coll_by_kind.items()})
+
+    def __add__(self, o: "Cost") -> "Cost":
+        kinds = dict(self.coll_by_kind)
+        for k, v in o.coll_by_kind.items():
+            kinds[k] = kinds.get(k, 0) + v
+        return Cost(self.flops + o.flops, self.bytes + o.bytes,
+                    self.coll + o.coll, kinds)
+
+
+def _cost_of(fn, args, shardings, mesh) -> Cost:
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    stats = parse_collectives(compiled.as_text())
+    return Cost(float(ca.get("flops", 0.0)),
+                float(ca.get("bytes accessed", 0.0)),
+                float(stats.total_bytes), dict(stats.bytes_by_kind))
+
+
+def _layer_tree(cfg: ModelConfig, which: str = "layers", serve: bool = False):
+    """(abstract single-layer params, shardings) — leading L dim dropped."""
+    defs = param_defs(cfg, 16)[which]
+    structs = jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape[1:], d.dtype), defs,
+        is_leaf=is_def)
+    specs = jax.tree.map(lambda d: P(*tuple(d.spec)[1:]), defs, is_leaf=is_def)
+    if serve and not cfg.serve_fsdp:
+        from repro.models.params import strip_fsdp_tree
+        specs = strip_fsdp_tree(specs)
+    return structs, specs
+
+
+def _sh(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def _rope_structs(cfg: ModelConfig, S: int):
+    if cfg.rope == "none":
+        return (), ()
+    half = cfg.head_dim // 2
+    cs = jax.ShapeDtypeStruct((1, S, half), jnp.float32)
+    return (cs, cs), (P(None, None, None), P(None, None, None))
+
+
+def _x_struct(cfg, B, S, mesh):
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.compute_dtype]
+    bax = SP.batch_axes(mesh) if B % SP.data_size(mesh) == 0 and B > 1 else None
+    return (jax.ShapeDtypeStruct((B, S, cfg.d_model), dt), P(bax, None, None))
+
+
+# ---------------------------------------------------------------------------
+# Per-kind cell costing
+# ---------------------------------------------------------------------------
+def _cost_layer_train(cfg, mesh, ctx, B, S, enc=False) -> Cost:
+    costing_cfg = cfg.replace(attn_block_k=max(S, 1024))
+    lp_struct, lp_spec = _layer_tree(costing_cfg,
+                                     "enc_layers" if enc else "layers")
+    x_struct, x_spec = _x_struct(costing_cfg, B, S, mesh)
+    rope_structs, rope_specs = _rope_structs(costing_cfg, S)
+    enc_struct = None
+    extra_structs: tuple = ()
+    extra_specs: tuple = ()
+    if costing_cfg.enc_layers and not enc:
+        enc_struct = jax.ShapeDtypeStruct(
+            (B, costing_cfg.enc_seq, costing_cfg.d_model), x_struct.dtype)
+        extra_structs = (enc_struct,)
+        extra_specs = (x_spec[1] if False else P(None, None, None),)
+
+    def f(lp, x, ct, *rest):
+        cos, sin = (rest[0], rest[1]) if costing_cfg.rope != "none" else (None, None)
+        eo = rest[-1] if enc_struct is not None else None
+
+        def body(lp, x):
+            if enc:
+                return TF._block_enc(costing_cfg, lp, x, ctx)
+            return TF.apply_block(costing_cfg, lp, x, cos=cos, sin=sin,
+                                  ctx=ctx, enc_out=eo)[0]
+
+        if costing_cfg.remat:
+            body = jax.checkpoint(body)
+        y, vjp = jax.vjp(body, lp, x)
+        dlp, dx = vjp(ct)
+        return y, dlp, dx
+
+    args = (lp_struct, x_struct, x_struct) + rope_structs + extra_structs
+    sh = (_sh(mesh, lp_spec), NamedSharding(mesh, x_spec),
+          NamedSharding(mesh, x_spec)) + tuple(
+        NamedSharding(mesh, s) for s in rope_specs) + tuple(
+        NamedSharding(mesh, s) for s in extra_specs)
+    return _cost_of(f, args, sh, mesh)
+
+
+def _cost_layer_fwd(cfg, mesh, ctx, B, S, enc=False) -> Cost:
+    costing_cfg = cfg.replace(attn_block_k=max(S, 1024))
+    lp_struct, lp_spec = _layer_tree(costing_cfg,
+                                     "enc_layers" if enc else "layers")
+    x_struct, x_spec = _x_struct(costing_cfg, B, S, mesh)
+    rope_structs, rope_specs = _rope_structs(costing_cfg, S)
+    enc_struct = None
+    extra_structs: tuple = ()
+    extra_specs: tuple = ()
+    if costing_cfg.enc_layers and not enc:
+        enc_struct = jax.ShapeDtypeStruct(
+            (B, costing_cfg.enc_seq, costing_cfg.d_model), x_struct.dtype)
+        extra_structs = (enc_struct,)
+        extra_specs = (P(None, None, None),)
+
+    def f(lp, x, *rest):
+        cos, sin = (rest[0], rest[1]) if costing_cfg.rope != "none" else (None, None)
+        eo = rest[-1] if enc_struct is not None else None
+        if enc:
+            return TF._block_enc(costing_cfg, lp, x, ctx)
+        return TF.apply_block(costing_cfg, lp, x, cos=cos, sin=sin, ctx=ctx,
+                              enc_out=eo)[0]
+
+    args = (lp_struct, x_struct) + rope_structs + extra_structs
+    sh = (_sh(mesh, lp_spec), NamedSharding(mesh, x_spec)) + tuple(
+        NamedSharding(mesh, s) for s in rope_specs) + tuple(
+        NamedSharding(mesh, s) for s in extra_specs)
+    return _cost_of(f, args, sh, mesh)
+
+
+def _cost_embed_head_train(cfg, mesh, ctx, B, S) -> Cost:
+    """embed fwd+bwd + final norm + head + CE (1 chunk) fwd+bwd."""
+    defs = param_defs(cfg, 16)
+    emb_struct = jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+        {"embed": defs["embed"], "final_norm": defs["final_norm"],
+         **({"lm_head": defs["lm_head"]} if "lm_head" in defs else {})},
+        is_leaf=is_def)
+    emb_spec = jax.tree.map(lambda d: d.spec, {
+        "embed": defs["embed"], "final_norm": defs["final_norm"],
+        **({"lm_head": defs["lm_head"]} if "lm_head" in defs else {})},
+        is_leaf=is_def)
+    x_struct, x_spec = _x_struct(cfg, B, S, mesh)
+    bax = tuple(x_spec)[0]
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+    def f(p, tokens, labels, x_mid, ct_mid):
+        def g(p, tokens, x_mid):
+            comp = x_mid.dtype
+            x0 = TF.embed(p["embed"]["tokens"], tokens, comp)
+            xs = x_mid + 0 * x0   # couple: embedding feeds the stack
+            xf = TF._norm(cfg, p["final_norm"], xs)
+            nll, ntok = TF.chunked_ce_loss(cfg, p, xf, labels, n_chunks=1)
+            return nll / jnp.maximum(ntok, 1.0)
+
+        loss, vjp = jax.vjp(lambda p, xm: g(p, tokens, xm), p, x_mid)
+        dp, dxm = vjp(jnp.ones((), jnp.float32))
+        return loss, dp, dxm, ct_mid
+
+    args = (emb_struct, tok, tok, x_struct, x_struct)
+    sh = (_sh(mesh, emb_spec), NamedSharding(mesh, P(bax, None)),
+          NamedSharding(mesh, P(bax, None)), NamedSharding(mesh, x_spec),
+          NamedSharding(mesh, x_spec))
+    return _cost_of(f, args, sh, mesh)
+
+
+def _cost_embed_head_infer(cfg, mesh, ctx, B, S) -> Cost:
+    defs = param_defs(cfg, 16)
+    sub = {"embed": defs["embed"], "final_norm": defs["final_norm"],
+           **({"lm_head": defs["lm_head"]} if "lm_head" in defs else {})}
+    emb_struct = jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), sub, is_leaf=is_def)
+    emb_spec = jax.tree.map(lambda d: d.spec, sub, is_leaf=is_def)
+    x_struct, x_spec = _x_struct(cfg, B, S, mesh)
+    bax = tuple(x_spec)[0]
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+    def f(p, tokens, x_mid):
+        comp = x_mid.dtype
+        x0 = TF.embed(p["embed"]["tokens"], tokens, comp)
+        xf = TF._norm(cfg, p["final_norm"], x_mid + 0 * x0)
+        return TF.logits_from_hidden(cfg, p, xf)
+
+    args = (emb_struct, tok, x_struct)
+    sh = (_sh(mesh, emb_spec), NamedSharding(mesh, P(bax, None)),
+          NamedSharding(mesh, x_spec))
+    if cfg.serve_sharded_logits and cfg.vocab % 16 == 0:
+        out_sh = NamedSharding(mesh, P(bax, None, "model"))
+        with mesh:
+            lowered = jax.jit(f, in_shardings=sh,
+                              out_shardings=out_sh).lower(*args)
+            compiled = lowered.compile()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        stats = parse_collectives(compiled.as_text())
+        return Cost(float(ca.get("flops", 0.0)),
+                    float(ca.get("bytes accessed", 0.0)),
+                    float(stats.total_bytes), dict(stats.bytes_by_kind))
+    return _cost_of(f, args, sh, mesh)
+
+
+def _cost_optimizer(cfg, mesh) -> Cost:
+    params, pspecs, opt, ospecs = SP.abstract_state(cfg, mesh)
+    opt_mod = adamw8bit if cfg.opt_8bit else adamw
+    from repro.optim.adamw import AdamWConfig
+
+    def f(p, g, s):
+        return opt_mod.apply_updates(p, g, s, AdamWConfig(lr=1e-3))
+
+    sh = (SP.to_shardings(mesh, pspecs), SP.to_shardings(mesh, pspecs),
+          SP.to_shardings(mesh, ospecs))
+    return _cost_of(f, (params, params, opt), sh, mesh)
+
+
+def _cost_decode_layer(cfg, mesh, ctx, B, cache_len) -> Cost:
+    lp_struct, lp_spec = _layer_tree(cfg, serve=True)
+    cache_full = jax.eval_shape(lambda: TF.init_cache(cfg, B, cache_len))
+    cl_struct = {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype)
+                 for k, v in cache_full.items()}
+    specs_full = TF.cache_partition_specs(cfg, B, cache_len, 16,
+                                          mesh.shape["model"])
+    def remap(p):
+        parts = [SP.batch_axes(mesh) if ax == "data" else ax
+                 for ax in tuple(p)[1:]]
+        return P(*parts)
+    cl_spec = {k: remap(v) for k, v in specs_full.items()}
+    x_struct, x_spec = _x_struct(cfg, B, 1, mesh)
+    rope_structs, rope_specs = _rope_structs(cfg, 1)
+    spec_obj = TF.cache_spec(cfg, cache_len)
+    Sc = spec_obj.cache_len
+    rolling = cfg.swa_window is not None and Sc == cfg.swa_window
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def f(lp, cl, x, pos, *rope):
+        cos, sin = (rope[0], rope[1]) if cfg.rope != "none" else (None, None)
+        if Sc:
+            slot = jnp.mod(pos, Sc) if rolling else pos
+            mask = (TF.ATT.rolling_mask(pos, Sc) if rolling
+                    else TF.ATT.linear_mask(pos, Sc))
+        else:
+            slot = mask = None
+        return TF.apply_block_decode(cfg, lp, cl, x, pos, cos, sin, mask,
+                                     slot, ctx)
+
+    args = (lp_struct, cl_struct, x_struct, pos_struct) + rope_structs
+    sh = (_sh(mesh, lp_spec), _sh(mesh, cl_spec),
+          NamedSharding(mesh, x_spec), NamedSharding(mesh, P())) + tuple(
+        NamedSharding(mesh, s) for s in rope_specs)
+    return _cost_of(f, args, sh, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Public: corrected roofline per cell
+# ---------------------------------------------------------------------------
+def _rwkv_affine(cost_fn, s_lo=64, s_hi=128):
+    """Affine-in-S extrapolation for recurrent time scans."""
+    c_lo = cost_fn(s_lo)
+    c_hi = cost_fn(s_hi)
+    def at(S):
+        slope = (c_hi + c_lo * -1.0) * (1.0 / (s_hi - s_lo))
+        return c_lo + slope * (S - s_lo)
+    return at
+
+
+def cost_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+              microbatches: int = 1) -> dict:
+    """Corrected per-device roofline for one (arch x shape) cell."""
+    ctx = ShardCtx(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    L = cfg.n_layers
+    comps: dict[str, tuple[Cost, float]] = {}   # name -> (unit cost, trips)
+
+    recurrent = (cfg.family == "ssm" and cfg.ssm is not None
+                 and cfg.ssm.kind == "rwkv6")
+
+    if shape.kind == "train":
+        mb = microbatches
+        Bm = max(B // mb, 1)
+        if recurrent:
+            aff = _rwkv_affine(lambda s: _cost_layer_train(cfg, mesh, ctx, Bm, s))
+            comps["layer_fwd_bwd"] = (aff(S), L * mb)
+        else:
+            comps["layer_fwd_bwd"] = (
+                _cost_layer_train(cfg, mesh, ctx, Bm, S), L * mb)
+        if cfg.enc_layers:
+            comps["enc_layer_fwd_bwd"] = (
+                _cost_layer_train(cfg, mesh, ctx, Bm, cfg.enc_seq, enc=True),
+                cfg.enc_layers * mb)
+        comps["embed_head_loss"] = (
+            _cost_embed_head_train(cfg, mesh, ctx, Bm, S), mb)
+        comps["optimizer"] = (_cost_optimizer(cfg, mesh), 1)
+        # gradient accumulation traffic (analytic): read+write accum buffer
+        if mb > 1:
+            from repro.models.params import param_count
+            n = param_count(cfg, 16)
+            bpe = 4 if cfg.accum_dtype == "float32" else 2
+            acc = Cost(flops=n, bytes=3.0 * n * bpe / 256)
+            comps["grad_accum(analytic)"] = (acc, mb)
+        tokens = B * S
+    elif shape.kind == "prefill":
+        if recurrent:
+            aff = _rwkv_affine(lambda s: _cost_layer_fwd(cfg, mesh, ctx, B, s))
+            comps["layer_fwd"] = (aff(S), L)
+        else:
+            comps["layer_fwd"] = (_cost_layer_fwd(cfg, mesh, ctx, B, S), L)
+        if cfg.enc_layers:
+            comps["enc_layer_fwd"] = (
+                _cost_layer_fwd(cfg, mesh, ctx, B, cfg.enc_seq, enc=True),
+                cfg.enc_layers)
+        comps["embed_head"] = (_cost_embed_head_infer(cfg, mesh, ctx, B, S), 1)
+        tokens = B * S
+    else:  # decode
+        comps["layer_decode"] = (_cost_decode_layer(cfg, mesh, ctx, B, S), L)
+        comps["embed_head"] = (_cost_embed_head_infer(cfg, mesh, ctx, B, 1), 1)
+        tokens = B
+
+    total = Cost()
+    breakdown = {}
+    for name, (c, trips) in comps.items():
+        tc = c * trips
+        total = total + tc
+        breakdown[name] = {"flops": tc.flops, "bytes": tc.bytes,
+                           "coll_bytes": tc.coll, "trips": trips}
+    roof = Roofline(flops=total.flops, bytes_accessed=total.bytes,
+                    collective_bytes=total.coll,
+                    coll_by_kind=total.coll_by_kind)
+    return {"roofline": roof.summary(), "breakdown": breakdown,
+            "tokens": tokens}

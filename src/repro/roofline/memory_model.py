@@ -1,0 +1,141 @@
+"""Analytic (fusion-aware) HBM traffic model — the realistic memory term.
+
+XLA's cost_analysis "bytes accessed" sums operand+output bytes of every HLO
+op with no fusion model: it reports ~TB/step/device where a fused TPU
+program moves ~GB.  For bottleneck identification we therefore compute a
+first-principles per-device traffic estimate alongside the XLA number
+(which is kept in the tables as the stated upper bound):
+
+train, per device per step:
+    weights  : mb * L * 2 * W_layer            (FSDP gather-write + read)
+    grads    : mb * L * W_layer                (+ reduce-scatter write)
+    optimizer: (2 + moments_bpe/2) * P_shard   (read/write params + moments)
+    acts     : mb * L * act_tok * B_mb * S / n_dev
+    logits/CE: 2 * B * S * V * 4 / n_dev       (chunk write + read)
+    accum    : mb * 3 * P_shard_accum
+decode, per device per step:
+    weights  : full active param bytes / n_dev (every weight read once)
+               x2 when FSDP-sharded (gather-write + read)
+    cache    : full cache bytes / n_dev (read) + one slot write
+    logits   : 2 * B * V * 4 / n_dev
+
+act_tok (bytes/token/layer) counts the remat-boundary stash (2D), the
+recomputed MLP/MoE intermediates (2*F_active), attention projections
+(4*H*dh) and flash-attention KV reads (amortized) at bf16.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.params import param_defs, param_count, is_def
+
+_BPE = {"bfloat16": 2, "float32": 4}
+
+
+def _layer_param_bytes(cfg: ModelConfig) -> float:
+    """Full (unsharded) per-layer parameter bytes."""
+    defs = param_defs(cfg, 16)["layers"]
+    total = sum(int(np.prod(d.shape)) * np.dtype(d.dtype).itemsize
+                for d in jax.tree.leaves(defs, is_leaf=is_def))
+    return total / cfg.n_layers
+
+
+def _active_layer_param_bytes(cfg: ModelConfig) -> float:
+    """Per-layer bytes actually touched per token batch (MoE: only the
+    experts that receive tokens — at large batch every expert is hit, so
+    train uses the full bytes; decode at small batch touches ~top_k experts
+    per token group).  Returned as (train_bytes, decode_bytes)."""
+    full = _layer_param_bytes(cfg)
+    if cfg.moe is None:
+        return full, full
+    defs = param_defs(cfg, 16)["layers"]
+    expert_bytes = sum(
+        int(np.prod(d.shape)) * np.dtype(d.dtype).itemsize
+        for d in jax.tree.leaves(defs["moe"]["experts"], is_leaf=is_def)
+    ) / cfg.n_layers
+    dense_rest = full - expert_bytes
+    frac = cfg.moe.top_k / cfg.moe.n_experts
+    return full, dense_rest + expert_bytes * frac
+
+
+def _act_token_bytes(cfg: ModelConfig) -> float:
+    D, H, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    F = cfg.d_ff * (cfg.moe.top_k if cfg.moe else 1)
+    if cfg.moe and cfg.moe.dense_residual:
+        F += cfg.moe.d_ff_dense or cfg.d_ff
+    bpe = _BPE[cfg.compute_dtype]
+    if cfg.family == "ssm" and cfg.ssm is not None and cfg.ssm.kind == "rwkv6":
+        mix = 6 * D            # r,k,v,g,w streams + wkv state traffic
+        return bpe * (2 * D + 2 * cfg.d_ff + mix)
+    extra = 0.0
+    if cfg.family == "hybrid" and cfg.ssm is not None:
+        di = cfg.ssm.expand * D
+        extra = 2 * di + 2 * di * cfg.ssm.state_size / 16  # ssm scan traffic
+    return bpe * (2 * D + 2 * F + 4 * H * dh + 2 * cfg.n_kv_heads * dh + extra)
+
+
+def analytic_memory_bytes(cfg: ModelConfig, shape: ShapeConfig,
+                          microbatches: int, n_dev: int = 256) -> dict:
+    """Per-device HBM traffic estimate (bytes) with component breakdown."""
+    B, S, L = shape.global_batch, shape.seq_len, cfg.n_layers
+    V = cfg.vocab
+    P_total = param_count(cfg, 16)
+    bpe_p = _BPE[cfg.param_dtype]
+    W_layer_full, W_layer_active = _active_layer_param_bytes(cfg)
+    out: dict = {}
+
+    if shape.kind == "train":
+        mb = microbatches
+        Bm = max(B // mb, 1)
+        fsdp = 2.0     # gather-write + read of FSDP-sharded weights
+        out["weights"] = mb * L * fsdp * W_layer_full / 1.0 / 16  # model-shard
+        # NOTE: with EP/TP, each device only touches its weight shard after
+        # the FSDP gather along data; model-axis sharding divides by 16.
+        out["grads"] = mb * L * W_layer_full / 16
+        moments_bpe = 2 if cfg.opt_8bit else 8
+        out["optimizer"] = (2 * bpe_p + moments_bpe) * (P_total / n_dev)
+        out["activations"] = mb * L * _act_token_bytes(cfg) * Bm * S / n_dev
+        out["logits_ce"] = 2.0 * B * S * V * 4 / n_dev
+        acc_bpe = _BPE[cfg.accum_dtype]
+        out["grad_accum"] = (mb * 2 + 1) * acc_bpe * (P_total / n_dev) \
+            if mb > 1 else 0.0
+        if cfg.enc_layers:
+            out["encoder"] = (mb * cfg.enc_layers * _act_token_bytes(cfg)
+                              * Bm * cfg.enc_seq / n_dev)
+    elif shape.kind == "prefill":
+        out["weights"] = L * 2.0 * W_layer_full / 16
+        out["activations"] = L * _act_token_bytes(cfg) * B * S / n_dev / 2
+        out["logits"] = 2.0 * B * S * V * 4 / n_dev
+        out["cache_write"] = (2 * L * B * min(S, cfg.swa_window or S)
+                              * cfg.n_kv_heads * cfg.head_dim
+                              * _BPE[cfg.compute_dtype] / n_dev)
+    else:   # decode
+        W_active_total = L * W_layer_active + (P_total * bpe_p
+                                               - L * W_layer_full)
+        if cfg.quant == "ternary_packed":
+            # 2-bit packed layer weights (embeddings/head stay bf16)
+            W_active_total = (L * W_layer_active * (0.25 / bpe_p)
+                              + (P_total * bpe_p - L * W_layer_full))
+        # FSDP-sharded serving re-gathers weights per token (factor 2:
+        # gather-write + read); TP-only serving reads the resident shard.
+        gather = 2.0 if cfg.serve_fsdp else 1.0
+        out["weights"] = gather * W_active_total / n_dev * 16  # /16 model only
+        eff = min(S, cfg.swa_window) if cfg.swa_window else S
+        kv_bpe = 1 if cfg.kv_cache_dtype == "float8_e4m3fn" \
+            else _BPE[cfg.compute_dtype]
+        if cfg.family == "ssm" and cfg.ssm is not None and cfg.ssm.kind == "rwkv6":
+            cache_bytes = L * B * cfg.n_heads * cfg.head_dim ** 2 * 4
+        else:
+            cache_bytes = 2 * L * B * eff * cfg.n_kv_heads * cfg.head_dim \
+                * kv_bpe
+            if cfg.enc_layers:
+                cache_bytes += 2 * L * B * cfg.enc_seq * cfg.n_kv_heads \
+                    * cfg.head_dim * kv_bpe
+        out["cache"] = cache_bytes / n_dev
+        out["activations"] = L * _act_token_bytes(cfg) * B / n_dev
+        out["logits"] = 2.0 * B * V * 4 / n_dev
+    out["total"] = sum(out.values())
+    return out

@@ -1,0 +1,92 @@
+"""Batched serving engine: prefill + decode with slot-based batching.
+
+Requests are bucketed by prompt length (the decode step is batch-uniform in
+position — see models/transformer.decode_step), padded into a fixed batch,
+prefilled once, then decoded greedily until max_new_tokens or EOS.  This is
+the single-host reference engine; at pod scale the same prefill/decode
+functions lower under pjit with the cache sharded per
+`cache_partition_specs` (launch/serve.py drives that path).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as TF
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    output: list[int] = field(default_factory=list)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
+                 cache_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self._prefill = jax.jit(
+            lambda p, b: TF.prefill(cfg, p, b, cache_len=cache_len))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: TF.decode_step(cfg, p, c, t, pos))
+
+    def _make_batch(self, group: list[Request], plen: int) -> dict:
+        B = len(group)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(group):
+            toks[i, : len(r.prompt)] = r.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.frontend == "vision":
+            batch["vision_embeds"] = jnp.zeros(
+                (B, self.cfg.n_vision_tokens, self.cfg.d_model), jnp.float32)
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(plen)[None, None, :], (B, 3, plen)).astype(jnp.int32)
+        if self.cfg.enc_layers:
+            batch["enc_frames"] = jnp.zeros(
+                (B, self.cfg.enc_seq, self.cfg.d_model), jnp.float32)
+        return batch
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Process all requests; returns them with .output filled."""
+        # bucket by prompt length so positions stay batch-uniform
+        buckets: dict[int, list[Request]] = {}
+        for r in requests:
+            buckets.setdefault(len(r.prompt), []).append(r)
+        for plen, group in sorted(buckets.items()):
+            for s in range(0, len(group), self.max_batch):
+                self._run_group(group[s: s + self.max_batch], plen)
+        return requests
+
+    def _run_group(self, group: list[Request], plen: int) -> None:
+        batch = self._make_batch(group, plen)
+        hidden, cache = self._prefill(self.params, batch)
+        logits = TF.logits_from_hidden(self.cfg, self.params,
+                                       hidden[:, -1:, :])
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # (B, 1)
+        max_new = max(r.max_new_tokens for r in group)
+        done = np.zeros(len(group), bool)
+        for step in range(max_new):
+            toks_np = np.asarray(tok[:, 0])
+            for i, r in enumerate(group):
+                if not done[i] and len(r.output) < r.max_new_tokens:
+                    t = int(toks_np[i])
+                    r.output.append(t)
+                    if r.eos_id is not None and t == r.eos_id:
+                        done[i] = True
+                elif len(r.output) >= r.max_new_tokens:
+                    done[i] = True
+            if done.all() or step == max_new - 1:
+                break
+            pos = jnp.int32(plen + step)
+            logits, cache = self._decode(self.params, cache, tok, pos)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)

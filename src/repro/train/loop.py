@@ -1,0 +1,185 @@
+"""Fault-tolerant training loop.
+
+Large-scale runnability features (DESIGN.md §6):
+  * resume      — restores the latest checkpoint; the token pipeline is
+    stateless in (seed, step) so the data stream continues exactly;
+  * preemption  — SIGTERM/SIGINT triggers a synchronous checkpoint before
+    exit (cluster evictions lose at most the in-flight step);
+  * stragglers  — per-step wall time is monitored; steps slower than
+    `straggler_factor` x the running median are logged with their step id
+    (on real fleets this feeds the scheduler's replace/restart policy);
+  * periodic checkpoints with retention, optional background writes;
+  * microbatching — gradient accumulation over `microbatches` chunks
+    (scan), so the 256-seq global batches fit memory;
+  * gradient compression — optional int8 error-feedback (DP all-reduce
+    traffic 4x down vs f32).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.checkpoint import CheckpointManager
+from repro.models import transformer as TF
+from repro.models.sharding import ShardCtx
+from repro.optim import adamw, adamw8bit
+from repro.optim.grad_compress import compress_grads
+
+
+@dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    microbatches: int = 1
+    ckpt_every: int = 50
+    log_every: int = 10
+    keep_ckpts: int = 3
+    straggler_factor: float = 3.0
+    grad_compress: bool = False
+    background_ckpt: bool = False
+    optimizer: adamw.AdamWConfig = field(default_factory=adamw.AdamWConfig)
+
+
+def make_train_step(cfg: ModelConfig, loop_cfg: TrainLoopConfig,
+                    ctx: ShardCtx | None = None) -> Callable:
+    """Builds the (jit-able) train_step(params, opt_state, batch) function.
+
+    Gradient accumulation scans over microbatches; the optimizer is AdamW
+    (f32 or int8 moments per cfg.opt_8bit); optional int8 error-feedback
+    gradient compression sits between accumulation and the update.
+    """
+    opt_mod = adamw8bit if cfg.opt_8bit else adamw
+    ocfg = loop_cfg.optimizer
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: TF.loss_fn(cfg, p, batch, ctx), has_aux=True)(params)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch, err_buf=None):
+        n_mb = loop_cfg.microbatches
+        if n_mb > 1:
+            B = batch["tokens"].shape[0]
+            assert B % n_mb == 0, (B, n_mb)
+            mb = jax.tree.map(
+                lambda x: x.reshape(n_mb, B // n_mb, *x.shape[1:]), batch)
+
+            acc_dt = {"float32": jnp.float32,
+                      "bfloat16": jnp.bfloat16}[cfg.accum_dtype]
+
+            def acc_body(carry, mbatch):
+                gacc, nll_acc, tok_acc = carry
+                g, met = grads_of(params, mbatch)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(acc_dt), gacc, g)
+                return (gacc, nll_acc + met["nll"], tok_acc + met["tokens"]), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (gsum, nll, ntok), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros(()), jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / n_mb, gsum)
+            metrics = {"loss": nll / jnp.maximum(ntok, 1.0),
+                       "nll": nll, "tokens": ntok,
+                       "moe_aux": jnp.zeros(())}
+        else:
+            grads, metrics = grads_of(params, batch)
+
+        if loop_cfg.grad_compress and err_buf is not None:
+            grads, err_buf = compress_grads(grads, err_buf)
+
+        params, opt_state = opt_mod.apply_updates(params, grads, opt_state, ocfg)
+        return params, opt_state, metrics, err_buf
+
+    return train_step
+
+
+@dataclass
+class StepStats:
+    times: list = field(default_factory=list)
+    stragglers: list = field(default_factory=list)
+
+    def record(self, step: int, dt: float, factor: float) -> bool:
+        self.times.append(dt)
+        med = float(np.median(self.times[-50:]))
+        slow = len(self.times) > 5 and dt > factor * med
+        if slow:
+            self.stragglers.append((step, dt, med))
+        return slow
+
+
+class Trainer:
+    """Orchestrates train_step + checkpointing + fault handling."""
+
+    def __init__(self, cfg: ModelConfig, loop_cfg: TrainLoopConfig,
+                 pipeline, ckpt_dir: str, ctx: ShardCtx | None = None):
+        self.cfg = cfg
+        self.loop_cfg = loop_cfg
+        self.pipeline = pipeline
+        self.ctx = ctx
+        self.ckpt = CheckpointManager(ckpt_dir, keep=loop_cfg.keep_ckpts)
+        self.stats = StepStats()
+        self._preempted = False
+        self.train_step = jax.jit(
+            make_train_step(cfg, loop_cfg, ctx),
+            donate_argnums=(0, 1)) if loop_cfg.grad_compress is False else \
+            jax.jit(make_train_step(cfg, loop_cfg, ctx))
+
+    def _install_signal_handlers(self):
+        def handler(signum, frame):
+            self._preempted = True
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, handler)
+            except ValueError:
+                pass   # non-main thread (tests)
+
+    def run(self, params, opt_state, start_step: int = 0, err_buf=None,
+            log: Callable[[str], None] = print):
+        self._install_signal_handlers()
+        lc = self.loop_cfg
+        step = start_step
+        losses = []
+        while step < lc.total_steps:
+            t0 = time.monotonic()
+            batch = self.pipeline.batch_at(step)
+            params, opt_state, metrics, err_buf = self.train_step(
+                params, opt_state, batch, err_buf)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.monotonic() - t0
+            if self.stats.record(step, dt, lc.straggler_factor):
+                log(f"[straggler] step {step}: {dt:.2f}s "
+                    f"(median {np.median(self.stats.times[-50:]):.2f}s)")
+            losses.append(float(metrics["loss"]))
+            step += 1
+            if step % lc.log_every == 0:
+                log(f"step {step}: loss={losses[-1]:.4f} ({dt:.2f}s/step)")
+            if step % lc.ckpt_every == 0 or step == lc.total_steps:
+                self.ckpt.save(step, {"params": params, "opt": opt_state},
+                               extra={"loss": losses[-1]},
+                               background=lc.background_ckpt)
+            if self._preempted:
+                log(f"[preempt] checkpointing at step {step} and exiting")
+                self.ckpt.wait()
+                self.ckpt.save(step, {"params": params, "opt": opt_state},
+                               extra={"loss": losses[-1], "preempted": True})
+                break
+        self.ckpt.wait()
+        return params, opt_state, {"losses": losses,
+                                   "stragglers": self.stats.stragglers,
+                                   "last_step": step}
+
+    def resume_or_init(self, init_fn: Callable[[], tuple]):
+        """Restore latest checkpoint if present, else initialize fresh."""
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            params, opt_state = init_fn()
+            return params, opt_state, 0
+        params0, opt0 = init_fn()
+        step, state, _ = self.ckpt.restore({"params": params0, "opt": opt0})
+        return state["params"], state["opt"], step

@@ -1,0 +1,28 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on 1 CPU device;
+only launch/dryrun.py (separate process) requests 512 placeholder devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_lm_batch(cfg, B=2, S=16, seed=0):
+    import jax.numpy as jnp
+    r = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(r.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(r.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.rope == "mrope":
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None, :], (B, 3, S)).astype(jnp.int32)
+        batch["vision_embeds"] = jnp.asarray(
+            r.normal(0, 0.02, (B, cfg.n_vision_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.enc_layers:
+        batch["enc_frames"] = jnp.asarray(
+            r.normal(0, 0.02, (B, cfg.enc_seq, cfg.d_model)), jnp.float32)
+    return batch

@@ -1,0 +1,49 @@
+"""Phase-1 CGP: the evolved circuits respect the Eq.(3) constraint and
+beat the exact circuit's area."""
+import numpy as np
+import pytest
+
+from repro.core.cgp import CGPConfig, evolve_popcount, evolve_pc_library, tau_schedule
+from repro.core.circuits import eval_vectors, pc_error, popcount_netlist, popcount_width
+
+
+def test_cgp_respects_error_bound_and_shrinks():
+    n, tau = 8, 0.5
+    exact = popcount_netlist(n)
+    cfg = CGPConfig(n_inputs=n, n_outputs=popcount_width(n), n_nodes=50,
+                    tau=tau, error_metric="mae", max_iters=800, seed=3)
+    res = evolve_popcount(cfg)
+    assert np.isfinite(res.best_area)
+    assert res.best_area <= exact.area()
+    packed, true = eval_vectors(n)
+    mae, _ = pc_error(res.best, packed, true)
+    assert mae <= tau + 1e-9
+
+
+def test_cgp_wcae_mode():
+    n, tau = 6, 2.0
+    cfg = CGPConfig(n_inputs=n, n_outputs=popcount_width(n), n_nodes=40,
+                    tau=tau, error_metric="wcae", max_iters=500, seed=1)
+    res = evolve_popcount(cfg)
+    packed, true = eval_vectors(n)
+    _, wcae = pc_error(res.best, packed, true)
+    assert wcae <= tau
+
+
+def test_library_monotone_tradeoff():
+    lib = evolve_pc_library(8, n_points=3, max_iters=300, seed=0)
+    assert lib[0].meta["metric"] == "exact"
+    areas = [nl.cost().area_mm2 for nl in lib]
+    maes = [nl.meta["mae"] for nl in lib]
+    # the exact circuit is the largest; some approximation strictly smaller
+    assert min(areas[1:]) < areas[0]
+    assert all(m >= 0 for m in maes)
+
+
+def test_tau_schedule_shape():
+    sched = tau_schedule(16, n_points=4)
+    assert len(sched) == 8
+    mets = {m for m, _ in sched}
+    assert mets == {"mae", "wcae"}
+    taus = [t for m, t in sched if m == "mae"]
+    assert taus == sorted(taus) and taus[0] == pytest.approx(0.1)

@@ -1,0 +1,76 @@
+"""Netlist substrate: builders, bit-parallel simulation, cost model."""
+import numpy as np
+import pytest
+
+from repro.core.circuits import (
+    comparator_geq_netlist, compose_pcc, eval_vectors, exhaustive_vectors,
+    pc_error, popcount_netlist, popcount_of_packed, popcount_width,
+    truncated_popcount_netlist, pack_vectors,
+)
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 8, 11, 16])
+def test_popcount_exact(n):
+    nl = popcount_netlist(n)
+    packed, true = eval_vectors(n)
+    mae, wce = pc_error(nl, packed, true)
+    assert mae == 0 and wce == 0
+
+
+def test_popcount_large_stratified():
+    nl = popcount_netlist(47)
+    packed, true = eval_vectors(47, n_samples=1 << 13)
+    mae, wce = pc_error(nl, packed, true)
+    assert mae == 0 and wce == 0
+
+
+@pytest.mark.parametrize("j", [1, 2, 4, 5])
+def test_comparator(j):
+    cmp_nl = comparator_geq_netlist(j)
+    vecs = exhaustive_vectors(2 * j)
+    out = cmp_nl.eval_uint(vecs)
+    S = 1 << (2 * j)
+    idx = np.arange(S)
+    a, b = idx & ((1 << j) - 1), idx >> j
+    assert (out[:S] == (a >= b)).all()
+
+
+@pytest.mark.parametrize("npos,nneg", [(3, 3), (5, 4), (2, 7)])
+def test_pcc_semantics(npos, nneg):
+    pcc = compose_pcc(popcount_netlist(npos), popcount_netlist(nneg),
+                      npos, nneg)
+    vecs = exhaustive_vectors(npos + nneg)
+    out = pcc.eval_uint(vecs)
+    S = 1 << (npos + nneg)
+    idx = np.arange(S)
+    pos = sum((idx >> k) & 1 for k in range(npos))
+    neg = sum((idx >> (npos + k)) & 1 for k in range(nneg))
+    assert (out[:S] == (pos >= neg)).all()
+
+
+def test_truncation_baseline_bounds():
+    n, drop = 8, 4
+    nl = truncated_popcount_netlist(n, drop)
+    packed, true = eval_vectors(n)
+    mae, wce = pc_error(nl, packed, true)
+    exact = popcount_netlist(n)
+    assert nl.area() < exact.area()
+    assert wce <= drop                      # at most the dropped bits +- comp
+    assert abs(mae - 0.75) < 1e-9           # E|Binom(4,.5) - 2| analytically
+
+
+def test_pack_vectors_roundtrip():
+    r = np.random.default_rng(0)
+    vecs = (r.random((100, 9)) < 0.5).astype(np.uint8)
+    packed = pack_vectors(vecs)
+    assert packed.shape == (9, 2)
+    assert (popcount_of_packed(packed)[:100] == vecs.sum(1)).all()
+
+
+def test_cost_model_anchors():
+    """EGFET anchors: exact TNN-ish circuits land in the paper's magnitude."""
+    # a breast-cancer-scale hidden neuron (5,5) should cost a few mm^2
+    pcc = compose_pcc(popcount_netlist(5), popcount_netlist(5), 5, 5)
+    c = pcc.cost()
+    assert 1.0 < c.area_mm2 < 15.0
+    assert 0.001 < c.power_mw < 0.1

@@ -1,0 +1,56 @@
+"""Per-kernel shape/dtype sweeps: interpret-mode Pallas vs jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ternary import pack_ternary
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 512, 128), (256, 512, 256),
+                                   (128, 1024, 384), (384, 2048, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ternary_matmul_sweep(M, K, N, dtype):
+    x = jnp.asarray(RNG.normal(0, 1, (M, K)), dtype)
+    codes = jnp.asarray(RNG.integers(-1, 2, (K, N)), jnp.int8)
+    w2 = pack_ternary(codes)
+    scale = jnp.asarray(np.abs(RNG.normal(1, 0.1, (1, N))), jnp.float32)
+    got = ops.ternary_matmul(x, w2, scale, use_kernel=True, interpret=True)
+    want = ref.ternary_matmul_ref(x, w2, scale)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_ternary_matmul_exactness_vs_unpacked():
+    """Kernel semantics == dense matmul over the unpacked codes."""
+    M, K, N = 128, 512, 128
+    x = jnp.asarray(RNG.normal(0, 1, (M, K)), jnp.float32)
+    codes = jnp.asarray(RNG.integers(-1, 2, (K, N)), jnp.int8)
+    w2 = pack_ternary(codes)
+    scale = jnp.ones((1, N), jnp.float32)
+    got = ops.ternary_matmul(x, w2, scale, use_kernel=True, interpret=True)
+    want = x @ codes.astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,W", [(256, 1), (256, 8), (512, 17), (1024, 3)])
+def test_packed_popcount_sweep(B, W):
+    words = jnp.asarray(
+        RNG.integers(0, 2**32, (B, W), dtype=np.uint64).astype(np.uint32))
+    got = ops.packed_popcount(words, use_kernel=True, interpret=True)
+    want = ref.packed_popcount_ref(words)
+    bits = np.unpackbits(
+        np.asarray(words).view(np.uint8).reshape(B, -1), axis=1).sum(axis=1)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    assert (np.asarray(want) == bits).all()
+
+
+def test_popcount_edge_values():
+    words = jnp.asarray(np.array([[0, 0xFFFFFFFF, 1, 0x80000000]],
+                                 dtype=np.uint32))
+    got = ops.packed_popcount(words, use_kernel=True, interpret=True)
+    assert int(got[0]) == 0 + 32 + 1 + 1

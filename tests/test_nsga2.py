@@ -1,0 +1,79 @@
+"""NSGA-II machinery + hypothesis property tests on its invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.nsga2 import (NSGA2Config, crowding_distance,
+                              fast_non_dominated_sort, nsga2)
+
+
+def test_non_dominated_sort_simple():
+    F = np.array([[0.0, 1.0], [1.0, 0.0], [0.5, 0.5], [1.0, 1.0], [2.0, 2.0]])
+    fronts = fast_non_dominated_sort(F)
+    assert set(fronts[0].tolist()) == {0, 1, 2}
+    assert set(fronts[1].tolist()) == {3}
+    assert set(fronts[2].tolist()) == {4}
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 10), st.floats(0, 10)),
+                min_size=3, max_size=30))
+def test_sort_front0_is_truly_nondominated(points):
+    F = np.array(points)
+    fronts = fast_non_dominated_sort(F)
+    f0 = fronts[0]
+    for i in f0:
+        for j in range(F.shape[0]):
+            dominates = ((F[j] <= F[i]).all() and (F[j] < F[i]).any())
+            assert not dominates
+    # every index appears exactly once across fronts
+    allidx = np.concatenate(fronts)
+    assert sorted(allidx.tolist()) == list(range(F.shape[0]))
+
+
+def test_crowding_boundary_infinite():
+    F = np.array([[0.0, 3.0], [1.0, 2.0], [2.0, 1.0], [3.0, 0.0]])
+    cd = crowding_distance(F)
+    assert np.isinf(cd[0]) and np.isinf(cd[3])
+    assert np.isfinite(cd[1]) and np.isfinite(cd[2])
+
+
+def test_nsga2_finds_known_front():
+    """Objective: f0 = sum(x)/n, f1 = sum(domain-1-x)/n — the Pareto front
+    is the full diagonal; check convergence toward low f0+f1 corners."""
+    n_genes, dom = 8, 5
+    domains = np.full(n_genes, dom)
+
+    def objective(pop):
+        f0 = pop.sum(1) / (n_genes * (dom - 1))
+        f1 = (dom - 1 - pop).sum(1) / (n_genes * (dom - 1))
+        # add a "cost" making middle values dominated
+        pen = ((pop == 2).sum(1)) * 0.2
+        return np.stack([f0 + pen, f1 + pen], 1)
+
+    res = nsga2(domains, objective, NSGA2Config(pop_size=24, n_generations=60,
+                                                seed=0))
+    assert res.pareto_f.shape[1] == 2
+    # extremes should be (near) discovered, and the front well-populated
+    assert res.pareto_f[:, 0].min() <= 0.3
+    assert res.pareto_f[:, 1].min() <= 0.3
+    assert len(res.pareto_f) >= 5
+    # front sorted by obj0 must be decreasing in obj1 (Pareto)
+    f = res.pareto_f
+    assert all(f[i + 1, 1] <= f[i, 1] + 1e-12 for i in range(len(f) - 1))
+    # history improves
+    assert res.history[-1][1] <= res.history[0][1] + 1e-12
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(0, 1000))
+def test_nsga2_respects_domains(n_genes, dom, seed):
+    domains = np.full(n_genes, dom)
+
+    def objective(pop):
+        assert (pop >= 0).all() and (pop < dom).all()
+        return np.stack([pop.sum(1).astype(float),
+                         (dom - 1 - pop).sum(1).astype(float)], 1)
+
+    res = nsga2(domains, objective,
+                NSGA2Config(pop_size=8, n_generations=5, seed=seed))
+    assert (res.pareto_x >= 0).all() and (res.pareto_x < dom).all()

@@ -1,0 +1,51 @@
+"""Phase-2: distance metric D, eps_mde/eps_wcde, Pareto analysis."""
+import numpy as np
+
+from repro.core.circuits import popcount_netlist, truncated_popcount_netlist
+from repro.core.pcc import (PCCEntry, build_pcc_library, evaluate_pcc_pair,
+                            pc_pareto, _pareto_front)
+
+
+def test_exact_pair_zero_distance():
+    mde, wcde, cf = evaluate_pcc_pair(popcount_netlist(5), popcount_netlist(4),
+                                      5, 4, n_samples=20000)
+    assert mde == 0.0 and wcde == 0.0 and cf == 1.0
+
+
+def test_truncated_pair_nonzero_but_bounded():
+    pos = truncated_popcount_netlist(8, 4)
+    mde, wcde, cf = evaluate_pcc_pair(pos, popcount_netlist(8), 8, 8,
+                                      n_samples=30000)
+    assert 0 < mde < 2.0         # the paper's mde values are fractions of 1
+    assert wcde <= 8
+    assert 0.5 < cf < 1.0
+
+
+def test_pareto_front_invariants():
+    pts = [(0.0, 10.0, 0), (0.1, 9.0, 1), (0.1, 11.0, 2), (0.5, 2.0, 3),
+           (0.6, 2.5, 4)]
+    front = _pareto_front(pts)
+    # no member dominated by another member
+    for i in front:
+        for j in front:
+            if i != j:
+                assert not (pts[j][0] <= pts[i][0] and pts[j][1] <= pts[i][1]
+                            and (pts[j][0] < pts[i][0] or pts[j][1] < pts[i][1]))
+    assert 2 not in front and 4 not in front
+
+
+def test_build_pcc_library_has_exact_head():
+    pc_libs = {4: [popcount_netlist(4), truncated_popcount_netlist(4, 2)],
+               3: [popcount_netlist(3)]}
+    lib = build_pcc_library([(4, 3)], pc_libs, n_samples=20000)
+    entries = lib.get(4, 3)
+    assert entries[0].mde == 0.0                   # exact combination first
+    assert all(e.mde <= e2.mde for e, e2 in zip(entries, entries[1:]))
+    areas = [e.est_area for e in entries]
+    assert all(a1 > a2 for a1, a2 in zip(areas, areas[1:]))  # strict Pareto
+
+
+def test_synth_area_includes_comparator():
+    e = build_pcc_library([(5, 5)], {5: [popcount_netlist(5)]},
+                          n_samples=1000).get(5, 5)[0]
+    assert e.synth_area > e.est_area               # Fig. 6 underestimation

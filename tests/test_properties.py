@@ -1,0 +1,154 @@
+"""Additional hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.circuits import (compose_pcc, eval_vectors, pc_error,
+                                 popcount_netlist, popcount_width,
+                                 truncated_popcount_netlist)
+from repro.models import attention as ATT
+from repro.models.moe import capacity, moe_ffn
+from repro.roofline.analysis import parse_collectives, _shape_bytes
+
+
+# ---------------------------------------------------------------------------
+# Circuits
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 10), st.integers(1, 8))
+def test_truncation_error_bounded_by_drop(n, drop):
+    """|error| of a truncated popcount never exceeds the dropped bits."""
+    drop = min(drop, n - 1)
+    nl = truncated_popcount_netlist(n, drop)
+    packed, true = eval_vectors(n)
+    _, wce = pc_error(nl, packed, true)
+    assert wce <= drop
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 6))
+def test_pcc_is_monotone_in_pos_count(npos, nneg):
+    """PCC output must be monotone: adding a positive input never flips
+    the comparator from 1 to 0 (checked over the full domain)."""
+    pcc = compose_pcc(popcount_netlist(npos), popcount_netlist(nneg),
+                      npos, nneg)
+    from repro.core.circuits import exhaustive_vectors
+    vecs = exhaustive_vectors(npos + nneg)
+    out = pcc.eval_uint(vecs)
+    S = 1 << (npos + nneg)
+    idx = np.arange(S)
+    for bit in range(npos):    # flipping a pos bit 0->1 can't lower output
+        without = idx[(idx >> bit) & 1 == 0]
+        with_ = without | (1 << bit)
+        assert (out[with_] >= out[without]).all()
+
+
+def test_popcount_width_consistency():
+    for n in range(1, 70):
+        m = popcount_width(n)
+        assert (1 << m) > n >= (1 << (m - 1)) - 1 or n == 1
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([8, 16, 24]),
+       st.sampled_from([4, 8, 64]), st.booleans())
+def test_blockwise_attention_matches_naive(b, s, block_k, causal):
+    """Online-softmax attention == naive softmax attention, any block size."""
+    r = np.random.default_rng(s * block_k + causal)
+    H, K, dh = 4, 2, 8
+    q = jnp.asarray(r.normal(0, 1, (b, s, H, dh)), jnp.float32)
+    k = jnp.asarray(r.normal(0, 1, (b, s, K, dh)), jnp.float32)
+    v = jnp.asarray(r.normal(0, 1, (b, s, K, dh)), jnp.float32)
+    got = ATT.blockwise_attention(q, k, v, causal=causal, block_k=block_k)
+    # naive reference
+    kr = jnp.repeat(k, H // K, axis=2)
+    vr = jnp.repeat(v, H // K, axis=2)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, kr) / np.sqrt(dh)
+    if causal:
+        mask = np.tril(np.ones((s, s), bool))
+        sc = jnp.where(mask[None, None], sc, -1e30)
+    want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(sc, -1), vr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rolling_mask_semantics():
+    m = np.asarray(ATT.rolling_mask(jnp.int32(2), 4))
+    assert m.tolist() == [True, True, True, False]   # slots 0..2 written
+    m2 = np.asarray(ATT.rolling_mask(jnp.int32(9), 4))
+    assert m2.tolist() == [True, True, True, True]   # wrapped: all valid
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch
+# ---------------------------------------------------------------------------
+def _moe_params(rng, D, F, E):
+    return {"router": {"w": jnp.asarray(rng.normal(0, .5, (D, E)), jnp.float32)},
+            "experts": {
+                "w_gate": jnp.asarray(rng.normal(0, .1, (E, D, F)), jnp.float32),
+                "w_up": jnp.asarray(rng.normal(0, .1, (E, D, F)), jnp.float32),
+                "w_down": jnp.asarray(rng.normal(0, .1, (E, F, D)), jnp.float32)}}
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 100), st.sampled_from([1, 2]), st.sampled_from([1, 4]))
+def test_moe_group_invariance(seed, k, G):
+    """With no capacity drops, the group decomposition must not change the
+    result (dispatch is a pure permutation)."""
+    rng = np.random.default_rng(seed)
+    B, S, D, F, E = 2, 8, 16, 32, 4
+    p = _moe_params(rng, D, F, E)
+    x = jnp.asarray(rng.normal(0, 1, (B, S, D)), jnp.float32)
+    y1, _ = moe_ffn(p, x, n_experts=E, top_k=k, capacity_factor=8.0,
+                    quant="dense", ctx=None, ep=False, n_groups=1)
+    yG, _ = moe_ffn(p, x, n_experts=E, top_k=k, capacity_factor=8.0,
+                    quant="dense", ctx=None, ep=False, n_groups=G)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(yG),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_capacity_drops_zero_not_garbage():
+    """Tokens dropped by capacity contribute exactly zero (overflow slot)."""
+    rng = np.random.default_rng(0)
+    B, S, D, F, E = 1, 16, 8, 16, 2
+    p = _moe_params(rng, D, F, E)
+    # skew router so expert 0 overflows any capacity: positive inputs x
+    # a large positive column make logit_0 dominate for every token
+    p["router"]["w"] = p["router"]["w"].at[:, 0].set(10.0)
+    x = jnp.asarray(np.abs(rng.normal(0, 1, (B, S, D))) + 0.1, jnp.float32)
+    y, _ = moe_ffn(p, x, n_experts=E, top_k=1, capacity_factor=0.1,
+                   quant="dense", ctx=None, ep=False, n_groups=1)
+    assert bool(jnp.isfinite(y).all())
+    # capacity 8 (floor): at most 8 tokens got outputs; rest exactly 0
+    nonzero_rows = int((jnp.abs(y[0]).sum(-1) > 1e-9).sum())
+    assert nonzero_rows <= capacity(S, E, 1, 0.1)
+
+
+# ---------------------------------------------------------------------------
+# Roofline HLO parser
+# ---------------------------------------------------------------------------
+def test_collective_parser_on_synthetic_hlo():
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(bf16[1,128]{1,0} %p), replica_groups=...
+  %ar = f32[64]{0} all-reduce(f32[64]{0} %x), to_apply=%sum
+  %rs = f32[4,16]{1,0} reduce-scatter(f32[4,256]{1,0} %y), dimensions={1}
+  %cp = u8[100]{0} collective-permute(u8[100]{0} %z)
+  ROOT %t = tuple(...)
+"""
+    stats = parse_collectives(hlo)
+    assert stats.bytes_by_kind["all-gather"] == 8 * 128 * 2
+    assert stats.bytes_by_kind["all-reduce"] == 64 * 4
+    assert stats.bytes_by_kind["reduce-scatter"] == 4 * 16 * 4
+    assert stats.bytes_by_kind["collective-permute"] == 100
+    assert stats.total_bytes == sum(stats.bytes_by_kind.values())
+
+
+def test_shape_bytes_dtypes():
+    assert _shape_bytes("bf16", "2,3") == 12
+    assert _shape_bytes("f32", "") == 4          # scalar
+    assert _shape_bytes("s8", "1024") == 1024
+    assert _shape_bytes("unknown", "8") == 0

@@ -1,0 +1,75 @@
+"""Static sharding validation — catches divisibility/partition bugs for all
+40 dry-run cells WITHOUT compiling (the fast guard in front of dryrun.py).
+"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.models import transformer as TF
+from repro.models.params import (abstract_params, param_defs, partition_specs,
+                                 is_def)
+
+AXIS_SIZES = {"data": 16, "model": 16, "pod": 2}
+
+
+def _check_divisible(shape, spec, where):
+    assert len(spec) <= len(shape), f"{where}: spec longer than shape"
+    for dim, ax in zip(shape, tuple(spec)):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([AXIS_SIZES[a] for a in axes]))
+        assert dim % size == 0, (f"{where}: dim {dim} not divisible by "
+                                 f"{axes} (={size})")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_specs_divisible(arch):
+    cfg = get_config(arch)
+    defs = param_defs(cfg, model_axis_size=16)
+    leaves = jax.tree_util.tree_flatten_with_path(
+        defs, is_leaf=is_def)[0]
+    for kp, d in leaves:
+        _check_divisible(d.shape, d.spec, f"{arch}{jax.tree_util.keystr(kp)}")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_specs_tree_congruent(arch):
+    cfg = get_config(arch)
+    params = abstract_params(cfg)
+    specs = partition_specs(cfg)
+    s1 = jax.tree_util.tree_structure(params)
+    s2 = jax.tree_util.tree_structure(
+        specs, is_leaf=lambda s: isinstance(s, P))
+    assert s1 == s2
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_cache_specs_divisible(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind != "decode":
+        pytest.skip("train/prefill cells have no cache")
+    ok, _ = shape_applicable(cfg, shape)
+    if not ok:
+        pytest.skip("long_500k inapplicable for pure full-attention")
+    cache = jax.eval_shape(
+        lambda: TF.init_cache(cfg, shape.global_batch, shape.seq_len))
+    specs = TF.cache_partition_specs(cfg, shape.global_batch, shape.seq_len,
+                                     data_size=16, model_size=16)
+    for key, struct in cache.items():
+        _check_divisible(struct.shape, specs[key],
+                         f"{arch}/{shape_name}/cache[{key}]")
+
+
+def test_all_cells_enumerate_40():
+    cells = [(a, s) for a in ARCHS for s in SHAPES]
+    assert len(cells) == 40
+    skips = [c for c in cells
+             if not shape_applicable(get_config(c[0]), SHAPES[c[1]])[0]]
+    # 7 pure full-attention archs skip long_500k (DESIGN.md)
+    assert len(skips) == 7
+    assert all(s == "long_500k" for _, s in skips)

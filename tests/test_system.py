@@ -1,0 +1,113 @@
+"""End-to-end behaviour tests: the paper's 3-phase pipeline on a real
+(synthetic) dataset, the training loop with fault-tolerance features, and
+the serving engine."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.cgp import evolve_pc_library
+from repro.core.nsga2 import NSGA2Config
+from repro.core.pcc import build_pcc_library, pc_pareto
+from repro.core.ternary import abc_binarize
+from repro.core import tnn as T
+from repro.data.tabular import make_dataset
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.models.params import init_params
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.serving.engine import Request, ServingEngine
+from repro.train.loop import Trainer, TrainLoopConfig
+
+
+@pytest.mark.slow
+def test_three_phase_pipeline_end_to_end():
+    """Phases 1-3 on cardio: approximate TNNs must trade area for accuracy,
+    with an iso-accuracy point cheaper than the exact design (paper Fig. 7).
+    """
+    ds = make_dataset("cardio")
+    tnn = T.train_tnn(ds, T.TNNTrainConfig(n_hidden=3, epochs=10, seed=0,
+                                           lr=1e-2))
+    sizes = set()
+    pcc_sizes = []
+    for (p, n) in tnn.hidden_sizes():
+        if p >= 1 and n >= 1:
+            sizes.update([p, n])
+            pcc_sizes.append((p, n))
+    sizes.add(max(tnn.out_nnz, 1))
+    pc_libs = {n: evolve_pc_library(n, n_points=2, max_iters=250, seed=0)
+               for n in sorted(sizes)}
+    pcc_lib = build_pcc_library(pcc_sizes, pc_libs, n_samples=20000)
+    pc_out = pc_pareto(pc_libs[max(tnn.out_nnz, 1)])
+
+    xb_tr = np.asarray(abc_binarize(ds.x_train, tnn.thresholds))
+    prob = T.TNNApproxProblem(tnn=tnn, pcc_lib=pcc_lib, pc_out_lib=pc_out,
+                              xbin=xb_tr, y=ds.y_train)
+    res = prob.optimize(NSGA2Config(pop_size=16, n_generations=12, seed=0))
+
+    assert len(res.pareto_f) >= 2
+    exact_err = res.pareto_f[0, 0]
+    hx, ox = T.exact_netlists(tnn)
+    exact_area = T.tnn_hw_cost(tnn, hx, ox, interface=None).area_mm2
+    # at least one design with near-exact accuracy but smaller area
+    found = False
+    for x, f in zip(res.pareto_x, res.pareto_f):
+        hnl, onl = prob.decode(x)
+        area = T.tnn_hw_cost(tnn, hnl, onl, interface=None).area_mm2
+        if f[0] <= exact_err + 0.02 and area < exact_area * 0.95:
+            found = True
+    assert found, "no iso-accuracy approximate design found"
+
+
+def test_trainer_loss_decreases_and_resumes(tmp_path):
+    cfg = get_config("qwen2-1.5b").reduced()
+    pipe = TokenPipeline(TokenPipelineConfig(vocab=cfg.vocab, seq_len=32,
+                                             global_batch=4, seed=0))
+    loop = TrainLoopConfig(total_steps=8, ckpt_every=4, log_every=100,
+                           optimizer=AdamWConfig(lr=3e-3))
+    tr = Trainer(cfg, loop, pipe, str(tmp_path))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    params, opt, res = tr.run(params, adamw.init(params),
+                              log=lambda s: None)
+    assert res["losses"][-1] < res["losses"][0]
+    # resume
+    tr2 = Trainer(cfg, TrainLoopConfig(total_steps=10, ckpt_every=4,
+                                       optimizer=AdamWConfig(lr=3e-3)),
+                  pipe, str(tmp_path))
+    p0 = init_params(jax.random.PRNGKey(0), cfg)
+    _, _, start = tr2.resume_or_init(lambda: (p0, adamw.init(p0)))
+    assert start == 8
+
+
+def test_trainer_microbatch_equivalence(tmp_path):
+    """Grad accumulation over 2 microbatches ~ single full batch step."""
+    from repro.train.loop import make_train_step
+    cfg = get_config("llama3.2-1b").reduced()
+    pipe = TokenPipeline(TokenPipelineConfig(vocab=cfg.vocab, seq_len=16,
+                                             global_batch=4, seed=0))
+    batch = pipe.batch_at(0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ocfg = AdamWConfig(lr=1e-3, grad_clip=None)
+    s1 = make_train_step(cfg, TrainLoopConfig(microbatches=1, optimizer=ocfg))
+    s2 = make_train_step(cfg, TrainLoopConfig(microbatches=2, optimizer=ocfg))
+    p1, _, m1, _ = s1(params, adamw.init(params), batch, None)
+    p2, _, m2, _ = s2(params, adamw.init(params), batch, None)
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 5e-4                           # same update up to fp/average
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 5e-2
+
+
+def test_serving_batched_requests():
+    cfg = get_config("llama3.2-1b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, max_batch=4, cache_len=64)
+    reqs = [Request(uid=i, prompt=[1 + i, 2, 3], max_new_tokens=5)
+            for i in range(6)]
+    out = eng.run(reqs)
+    assert all(len(r.output) == 5 for r in out)
+    # determinism: same prompt -> same output
+    again = eng.run([Request(uid=99, prompt=[1, 2, 3], max_new_tokens=5)])
+    assert again[0].output == out[0].output

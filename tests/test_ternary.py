@@ -1,0 +1,62 @@
+"""Quantizers, ABC interface, 2-bit packing (hypothesis roundtrip)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ternary import (abc_binarize, abc_fit_thresholds,
+                                binary_step_ste, pack_ternary, ternarize,
+                                ternary_quantize_lm, ternary_ste,
+                                unpack_ternary, zero_fraction)
+
+
+def test_ternarize_values():
+    w = jnp.asarray([-2.0, -0.5, -0.2, 0.0, 0.2, 0.5, 2.0])
+    q = ternarize(w)
+    assert q.tolist() == [-1.0, -1.0, 0.0, 0.0, 0.0, 1.0, 1.0]
+
+
+def test_ste_gradient_window():
+    g = jax.grad(lambda w: ternary_ste(w).sum())(jnp.asarray([0.1, 0.9, 1.5]))
+    assert g.tolist() == [1.0, 1.0, 0.0]          # clipped outside [-1,1]
+
+
+def test_binary_step_matches_comparator():
+    a = jnp.asarray([-3.0, -0.001, 0.0, 0.001, 3.0])
+    h = binary_step_ste(a)
+    assert h.tolist() == [-1.0, -1.0, 1.0, 1.0, 1.0]   # a>=0 -> +1
+
+
+def test_abc_median_threshold():
+    x = np.random.default_rng(0).random((100, 4))
+    thr = abc_fit_thresholds(x)
+    xb = np.asarray(abc_binarize(x, thr))
+    frac = xb.mean(0)
+    assert ((frac > 0.3) & (frac < 0.7)).all()    # median splits ~50/50
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(kq, n, seed):
+    K = kq * 4
+    r = np.random.default_rng(seed)
+    codes = jnp.asarray(r.integers(-1, 2, (K, n)), jnp.int8)
+    packed = pack_ternary(codes)
+    assert packed.shape == (K // 4, n)
+    got = unpack_ternary(packed, dtype=jnp.int8)
+    assert (np.asarray(got) == np.asarray(codes)).all()
+
+
+def test_lm_quantizer_scale():
+    w = jnp.asarray(np.random.default_rng(0).normal(0, 0.1, (64, 32)),
+                    jnp.float32)
+    codes, alpha = ternary_quantize_lm(w)
+    assert set(np.unique(np.asarray(codes))) <= {-1.0, 0.0, 1.0}
+    assert alpha.shape == (1, 32)
+    err = jnp.abs(codes * alpha - w).mean()
+    assert float(err) < 0.1
+
+
+def test_zero_fraction():
+    codes = jnp.asarray([[0, 1], [-1, 0]], jnp.int8)
+    assert float(zero_fraction(codes)) == 0.5

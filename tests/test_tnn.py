@@ -1,0 +1,76 @@
+"""Bespoke TNN: QAT <-> circuit exactness, balancing, hardware accounting."""
+import numpy as np
+import pytest
+
+from repro.core import tnn as T
+from repro.core.ternary import abc_binarize
+from repro.data.tabular import make_dataset
+from repro.hw.egfet import interface_cost
+
+
+@pytest.fixture(scope="module")
+def cardio_tnn():
+    ds = make_dataset("cardio")
+    t = T.train_tnn(ds, T.TNNTrainConfig(n_hidden=3, epochs=10, seed=0,
+                                         lr=1e-2))
+    return ds, t
+
+
+def test_training_beats_majority(cardio_tnn):
+    ds, t = cardio_tnn
+    maj = np.bincount(ds.y_train).max() / len(ds.y_train)
+    assert t.test_acc > maj
+
+
+def test_circuit_exact_equals_integer_path(cardio_tnn):
+    """The central invariant: exact netlists == integer forward == argmax of
+    the QAT training forward (given balanced zero counts)."""
+    ds, t = cardio_tnn
+    xb = np.asarray(abc_binarize(ds.x_test, t.thresholds))
+    hnl, onl = T.exact_netlists(t)
+    pred_circ = T.predict_with_circuits(t, xb, hnl, onl)
+    pred_int = T.predict_exact(t, xb)
+    assert (pred_circ == pred_int).all()
+
+
+def test_zero_counts_balanced(cardio_tnn):
+    _, t = cardio_tnn
+    zeros = (t.w2t == 0).sum(axis=0)
+    assert (zeros == zeros[0]).all()
+    _ = t.out_nnz    # must not raise
+
+
+def test_balance_preserves_accuracy():
+    """Median-target balancing must not collapse narrow output layers
+    (the max-target projection zeroed whole columns on arrhythmia)."""
+    r = np.random.default_rng(0)
+    w = r.normal(0, 1, (3, 16))
+    w[:, 0] = [0.01, 0.02, 2.0]      # a column that max-balancing would kill
+    codes = T.balance_zero_counts(w, threshold=1 / 3)
+    zeros = (codes == 0).sum(axis=0)
+    assert (zeros == zeros[0]).all()
+    assert (codes != 0).any(axis=0).sum() >= 12   # most columns stay alive
+
+
+def test_hw_cost_scales_with_interface(cardio_tnn):
+    _, t = cardio_tnn
+    hnl, onl = T.exact_netlists(t)
+    core = T.tnn_hw_cost(t, hnl, onl, interface=None)
+    abc = T.tnn_hw_cost(t, hnl, onl, interface="abc")
+    adc = T.tnn_hw_cost(t, hnl, onl, interface="adc4")
+    F = t.w1t.shape[0]
+    assert abc.area_mm2 == pytest.approx(
+        core.area_mm2 + interface_cost(F, "abc").area_mm2)
+    # the paper's headline: the ADC *interface* dwarfs the ABC interface
+    # (167x area, 34x power per feature — Sec. 3.1)
+    iface_adc = adc.area_mm2 - core.area_mm2
+    iface_abc = abc.area_mm2 - core.area_mm2
+    assert iface_adc > iface_abc * 100
+    assert (adc.power_mw - core.power_mw) > (abc.power_mw - core.power_mw) * 30
+
+
+def test_degenerate_hidden_neurons():
+    nl = T.hidden_exact_netlist(3, 0)
+    assert nl.cost().area_mm2 == 0.0              # constant-1, zero hardware
+    nl2 = T.hidden_exact_netlist(0, 3)
+    assert nl2.cost().area_mm2 > 0                # NOR tree
