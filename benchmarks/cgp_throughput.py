@@ -1,0 +1,133 @@
+"""CGP fitness throughput: serial per-child loop vs population-parallel.
+
+The acceptance metric for the batched evaluator: at lambda >= 16 the
+`NetlistPopulation` path must sustain >= 5x the fitness evaluations/s of
+the original per-child `Netlist.simulate` loop (identical work per eval:
+simulate all packed vectors + decode + error stats + active-area cost).
+
+Run directly to (re)generate the committed artifact:
+
+    PYTHONPATH=src python -m benchmarks.cgp_throughput [BENCH_cgp.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.core.cgp import (CGPConfig, _area_of, _errors, _mutate,
+                            _population_of, _seed_genome, evolve_popcount)
+from repro.core.circuits import eval_vectors, popcount_netlist, popcount_width
+from benchmarks.common import QUICK
+
+
+def _mutant_population(n: int, lam: int, seed: int = 0):
+    """lam realistic CGP mutants of the exact n-input popcount."""
+    rng = np.random.default_rng(seed)
+    exact = popcount_netlist(n)
+    cfg = CGPConfig(n_inputs=n, n_outputs=popcount_width(n),
+                    n_nodes=exact.n_gates + 16, lam=lam)
+    parent = _seed_genome(exact, cfg.n_nodes, rng, cfg.funcs)
+    return [_mutate(parent, cfg, rng)[0] for _ in range(lam)]
+
+
+def _time(fn, reps: int) -> float:
+    fn()                                   # warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def measure(n: int, lam: int, reps: int, seed: int = 0) -> dict:
+    genomes = _mutant_population(n, lam, seed)
+    packed, true = eval_vectors(n)
+
+    def serial():
+        for g in genomes:
+            _errors(g, packed, true)
+            _area_of(g)
+
+    def batched():
+        pop = _population_of(genomes)
+        pop.pc_errors(packed, true)
+        pop.areas()
+
+    t_serial = _time(serial, reps)
+    t_batched = _time(batched, reps)
+    row = {
+        "bench": "cgp_throughput", "n": n, "lam": lam,
+        "serial_evals_per_s": round(lam / t_serial, 1),
+        "batched_evals_per_s": round(lam / t_batched, 1),
+        "speedup": round(t_serial / t_batched, 2),
+    }
+    try:  # JAX uint32-SWAR twin (device-placeable); jit excluded via warmup
+        from repro.kernels import circuit_sim as CS
+        pop = _population_of(genomes)
+        op32 = pop.op.astype(np.int32)
+        w32 = CS.pack_words32(packed)
+        t32 = true.astype(np.int32)
+
+        def jax_path():
+            mae, wc = CS.population_pc_errors(op32, pop.in0, pop.in1,
+                                              pop.outputs, w32, t32,
+                                              pop.n_inputs)
+            mae.block_until_ready()
+
+        row["jax_evals_per_s"] = round(lam / _time(jax_path, reps), 1)
+    except Exception as e:  # noqa: BLE001 — jax path is informational
+        row["jax_error"] = str(e)[:80]
+    return row
+
+
+def measure_evolution(n: int, lam: int, iters: int, seed: int = 0) -> dict:
+    """End-to-end evolve_popcount wall-clock, batched vs serial loop."""
+    packed_true = eval_vectors(n)
+
+    def run(batch: bool):
+        cfg = CGPConfig(n_inputs=n, n_outputs=popcount_width(n),
+                        n_nodes=popcount_netlist(n).n_gates + 16,
+                        tau=0.5, max_iters=iters, seed=seed, lam=lam,
+                        batch_eval=batch)
+        t0 = time.perf_counter()
+        res = evolve_popcount(cfg, eval_set=packed_true)
+        return res, time.perf_counter() - t0
+
+    res_b, t_b = run(True)
+    res_s, t_s = run(False)
+    assert res_b.best_area == res_s.best_area      # identical trajectories
+    return {
+        "bench": "cgp_throughput_e2e", "n": n, "lam": lam, "iters": iters,
+        "serial_evals_per_s": round(res_s.evaluations / t_s, 1),
+        "batched_evals_per_s": round(res_b.evaluations / t_b, 1),
+        "speedup": round(t_s / t_b, 2),
+        "best_area": res_b.best_area,
+    }
+
+
+def run(sizes=None) -> list[dict]:
+    reps = 3 if QUICK else 10
+    combos = sizes or ([(8, 16), (8, 32), (12, 32)] if QUICK
+                       else [(8, 16), (8, 32), (8, 64), (12, 32), (16, 32)])
+    rows = [measure(n, lam, reps) for (n, lam) in combos]
+    rows.append(measure_evolution(8, 16, 60 if QUICK else 200))
+    return rows
+
+
+def main(out_path: str = "BENCH_cgp.json") -> None:
+    rows = run()
+    payload = {"bench": "cgp_throughput",
+               "note": "fitness evals/s, serial per-child Netlist loop vs "
+                       "population-parallel NetlistPopulation (same work)",
+               "rows": rows}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    for r in rows:
+        print(r)
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_cgp.json")

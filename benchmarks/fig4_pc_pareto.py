@@ -8,8 +8,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.circuits import (eval_vectors, pc_error, popcount_netlist,
-                                 truncated_popcount_netlist)
+from repro.core.cgp import _truncation_stats
+from repro.core.circuits import eval_vectors, popcount_netlist
 from benchmarks.common import QUICK, get_pc_library
 
 
@@ -20,12 +20,10 @@ def run(sizes=None) -> list[dict]:
         exact = popcount_netlist(n)
         ex_area = exact.cost().area_mm2
         packed, true = eval_vectors(n, n_samples=1 << 14)
-        # truncation curve
-        trunc = {}
-        for drop in range(1, n - 1):
-            nl = truncated_popcount_netlist(n, drop)
-            mae, wce = pc_error(nl, packed, true)
-            trunc[drop] = (mae, nl.cost().area_mm2 / ex_area)
+        # truncation curve: all depths scored in one padded population pass
+        trunc = {drop: (mae, area / ex_area)
+                 for drop, (nl, mae, _, area)
+                 in enumerate(_truncation_stats(n, packed, true), start=1)}
         lib = get_pc_library(n)
         for nl in lib[1:]:
             mae = nl.meta["mae"]

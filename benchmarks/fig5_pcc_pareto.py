@@ -30,16 +30,10 @@ def run(dataset: str = "arrhythmia") -> list[dict]:
     biggest = max(pcc_lib.sizes(), key=lambda s: s[0] + s[1])
     entries = pcc_lib.get(*biggest)
     if len(entries) > 1:
-        from repro.core.pcc import evaluate_pcc_pair
+        from repro.core.pcc import sample_pair_domain
         e = entries[min(1, len(entries) - 1)]
-        rng = np.random.default_rng(0)
         S = 20000 if QUICK else 200000
-        from repro.core.circuits import pack_vectors, popcount_of_packed
-        vp = (rng.random((S, e.n_pos)) < 0.5).astype(np.uint8)
-        vn = (rng.random((S, e.n_neg)) < 0.5).astype(np.uint8)
-        pp, pn = pack_vectors(vp), pack_vectors(vn)
-        x = popcount_of_packed(pp)[:S]
-        z = popcount_of_packed(pn)[:S]
+        pp, pn, x, z = sample_pair_domain(e.n_pos, e.n_neg, S, seed=0)
         rel = x >= z
         rel_a = e.pc_pos.eval_uint(pp)[:S] >= e.pc_neg.eval_uint(pn)[:S]
         D = np.where(rel == rel_a, 0, x - z)

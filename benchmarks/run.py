@@ -15,7 +15,7 @@ import sys
 import time
 
 BENCHES = ["table2", "fig4", "fig5", "fig6", "fig7", "fig8", "table3",
-           "variation", "roofline"]
+           "variation", "roofline", "cgp"]
 
 
 def _load(name: str):
@@ -30,6 +30,7 @@ def _load(name: str):
         "table3": "benchmarks.table3_sota",
         "variation": "benchmarks.variation_robustness",
         "roofline": "benchmarks.roofline_bench",
+        "cgp": "benchmarks.cgp_throughput",
     }[name]
     return importlib.import_module(mod)
 

@@ -4,9 +4,15 @@ Phase 1 — CGP evolves approximate popcount circuits per size.
 Phase 2 — Pareto-optimal popcount-compare combinations (distance metric D).
 Phase 3 — NSGA-II assigns approximate units per neuron: area vs accuracy.
 
+Phases 1 and 2 run population-parallel: every generation's lambda CGP
+children are scored in one batched `NetlistPopulation` pass, the tau
+schedule's independent runs share a thread pool, and the PCC library
+evaluates each candidate circuit once over a shared sample domain.
+
 Run:  PYTHONPATH=src python examples/evolve_approx_tnn.py [dataset]
 """
 import sys
+import time
 
 import numpy as np
 
@@ -32,10 +38,14 @@ def main(dataset: str = "cardio") -> None:
             pcc_sizes.append((p, n))
     sizes.add(max(tnn.out_nnz, 1))
     pc_libs = {}
+    t1 = time.perf_counter()
     for n in sorted(sizes):
         pc_libs[n] = evolve_pc_library(n, n_points=3, max_iters=500)
         print(f"[phase1] pc{n}: {len(pc_libs[n])} circuits "
               f"(areas {[round(c.cost().area_mm2, 2) for c in pc_libs[n]]})")
+    print(f"[phase1] evolved {sum(map(len, pc_libs.values()))} circuits over "
+          f"{len(sizes)} sizes in {time.perf_counter() - t1:.1f}s "
+          "(population-parallel fitness, threaded tau schedule)")
 
     # Phase 2: Pareto-optimal PCC combinations under the distance metric
     pcc_lib = build_pcc_library(sorted(set(pcc_sizes)), pc_libs,

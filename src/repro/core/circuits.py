@@ -10,6 +10,23 @@ This is the substrate for the paper's three-phase approximation flow:
 
 Node ids: inputs are 0..n_inputs-1; gate g (0-based) has id n_inputs+g and
 may only read strictly smaller ids (a feed-forward DAG by construction).
+
+Population-parallel evaluation
+------------------------------
+`NetlistPopulation` is the structure-of-arrays twin of `Netlist`: a whole
+population of same-shape genomes as `(P, n_gates)` opcode/operand arrays,
+simulated in one vectorized pass over all packed test words.  Per gate
+column the heterogeneous opcodes are applied through their algebraic normal
+form r = c0 ^ (ca & a) ^ (cb & b) ^ (cab & a & b) with per-individual
+uint64 coefficient masks, so a column costs a constant number of numpy ops
+regardless of P (columns where the whole population agrees on the opcode
+take a cheaper direct path).  This is what makes CGP fitness evaluation
+population-parallel (see `core.cgp`): measured on this substrate the
+batched path is bit-identical to the per-child `Netlist.simulate` loop at
+~14x its evals/s for lambda=16 (n=8; 19-33x at lambda 32-64, ~14x at n=12,
+see `benchmarks/cgp_throughput.py` / BENCH_cgp.json).  `kernels.circuit_sim`
+provides the jittable uint32-SWAR JAX twin for on-device fitness, another
+~5-8x on top of the numpy path.
 """
 from __future__ import annotations
 
@@ -21,6 +38,60 @@ from repro.hw.egfet import Gate, GATE_AREA_MM2, GATE_POWER_UW, HwCost
 
 _U64 = np.uint64
 _FULL = _U64(0xFFFFFFFFFFFFFFFF)
+
+_N_OPS = max(int(g) for g in Gate) + 1
+GATE_AREA_VEC = np.zeros(_N_OPS, dtype=np.float64)
+GATE_POWER_VEC = np.zeros(_N_OPS, dtype=np.float64)
+for _g in Gate:
+    GATE_AREA_VEC[int(_g)] = GATE_AREA_MM2[_g]
+    GATE_POWER_VEC[int(_g)] = GATE_POWER_UW[_g]
+
+# Algebraic-normal-form coefficients per opcode: f(a, b) = c0 ^ (ca & a)
+# ^ (cb & b) ^ (cab & a & b).  INPUT slots behave like BUF (never emitted
+# by builders/CGP, but harmless under padding).
+_ANF_COEFF = {
+    Gate.INPUT: (0, 1, 0, 0),
+    Gate.CONST0: (0, 0, 0, 0),
+    Gate.CONST1: (1, 0, 0, 0),
+    Gate.BUF: (0, 1, 0, 0),
+    Gate.NOT: (1, 1, 0, 0),
+    Gate.AND: (0, 0, 0, 1),
+    Gate.OR: (0, 1, 1, 1),
+    Gate.XOR: (0, 1, 1, 0),
+    Gate.NAND: (1, 0, 0, 1),
+    Gate.NOR: (1, 1, 1, 1),
+    Gate.XNOR: (1, 1, 1, 0),
+    Gate.ANDN: (0, 1, 0, 1),
+    Gate.ORN: (1, 0, 1, 1),
+}
+_ANF_C0 = np.zeros(_N_OPS, dtype=_U64)
+_ANF_CA = np.zeros(_N_OPS, dtype=_U64)
+_ANF_CB = np.zeros(_N_OPS, dtype=_U64)
+_ANF_CAB = np.zeros(_N_OPS, dtype=_U64)
+for _g, (_c0, _ca, _cb, _cab) in _ANF_COEFF.items():
+    _ANF_C0[int(_g)] = _FULL * _U64(_c0)
+    _ANF_CA[int(_g)] = _FULL * _U64(_ca)
+    _ANF_CB[int(_g)] = _FULL * _U64(_cb)
+    _ANF_CAB[int(_g)] = _FULL * _U64(_cab)
+
+# Liveness propagation rules (mirrors Netlist.active_mask's branches).
+_USES_A = np.ones(_N_OPS, dtype=bool)
+_USES_B = np.ones(_N_OPS, dtype=bool)
+for _g in (Gate.INPUT, Gate.CONST0, Gate.CONST1):
+    _USES_A[int(_g)] = False
+for _g in (Gate.INPUT, Gate.CONST0, Gate.CONST1, Gate.NOT, Gate.BUF):
+    _USES_B[int(_g)] = False
+
+_HOMOG_BINOP = {
+    Gate.AND: lambda a, b: a & b,
+    Gate.OR: lambda a, b: a | b,
+    Gate.XOR: lambda a, b: a ^ b,
+    Gate.NAND: lambda a, b: ~(a & b),
+    Gate.NOR: lambda a, b: ~(a | b),
+    Gate.XNOR: lambda a, b: ~(a ^ b),
+    Gate.ANDN: lambda a, b: a & ~b,
+    Gate.ORN: lambda a, b: a | ~b,
+}
 
 
 @dataclass
@@ -71,8 +142,8 @@ class Netlist:
     def cost(self) -> HwCost:
         act = self.active_mask()
         ops = self.op[act]
-        area = sum(GATE_AREA_MM2[int(o)] for o in ops)
-        power = sum(GATE_POWER_UW[int(o)] for o in ops) * 1e-3
+        area = float(GATE_AREA_VEC[ops].sum())
+        power = float(GATE_POWER_VEC[ops].sum()) * 1e-3
         return HwCost(area, power)
 
     def area(self) -> float:
@@ -133,14 +204,239 @@ class Netlist:
         Returns int64 array of shape (W*64,).
         """
         outw = self.simulate(inputs)  # (n_out, W)
-        W = outw.shape[1]
-        bits = np.unpackbits(
-            outw.view(np.uint8).reshape(self.n_outputs, W, 8)[..., ::-1], axis=-1
-        )  # big-endian per u64 -> reverse byte order first
-        # bits: (n_out, W, 64) with bit index 63..0 -> flip to LSB-first order
-        bits = bits[..., ::-1].reshape(self.n_outputs, W * 64)
-        weights = (1 << np.arange(self.n_outputs, dtype=np.int64))[:, None]
-        return (bits.astype(np.int64) * weights).sum(axis=0)
+        return _decode_words(outw[None])[0]
+
+
+def _decode_bits(outw: np.ndarray) -> np.ndarray:
+    """(P, n_out, W) packed words -> (P, n_out, W*64) LSB-first bit planes.
+
+    Little-endian native byte order + bitorder='little' puts bit k of word w
+    at vector w*64+k directly — no byte/bit reversal copies.
+    """
+    P, n_out, W = outw.shape
+    return np.unpackbits(np.ascontiguousarray(outw).view(np.uint8)
+                         .reshape(P, n_out, W * 8), axis=-1, bitorder="little")
+
+
+def _accumulate_u8(bits: np.ndarray) -> np.ndarray:
+    """Merge <=8 bit planes into per-vector uint8 values (OR of disjoint bits)."""
+    P, n_out, S = bits.shape
+    acc = np.zeros((P, S), dtype=np.uint8)
+    for o in range(n_out):
+        acc |= bits[:, o] << o
+    return acc
+
+
+def _decode_words(outw: np.ndarray) -> np.ndarray:
+    """(P, n_out, W) packed output words -> (P, W*64) int64 LSB-first uints.
+
+    Per-output accumulation keeps temporaries at (P, S); narrow outputs
+    (n_out <= 8, i.e. every popcount/PCC in the paper) stay uint8 until the
+    final cast, which keeps the hot decode memory-bound on ~1/8 the bytes.
+    """
+    bits = _decode_bits(outw)
+    P, n_out, S = bits.shape
+    if n_out <= 8:
+        return _accumulate_u8(bits).astype(np.int64)
+    out = np.zeros((P, S), dtype=np.int64)
+    for o in range(n_out):
+        out += bits[:, o].astype(np.int64) << o
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Population-parallel evaluation (structure-of-arrays over same-shape genomes)
+# ---------------------------------------------------------------------------
+@dataclass
+class NetlistPopulation:
+    """A population of P same-shape netlists as `(P, n_gates)` plan arrays.
+
+    All individuals share `n_inputs` and `n_outputs`; gate counts are
+    equalized by padding with dead CONST0 gates (`from_netlists`).  The
+    evaluator walks gate columns once, applying every individual's opcode
+    simultaneously via ANF coefficient masks — the per-gate Python cost is
+    O(1) in P, versus O(P) for a per-child `Netlist.simulate` loop.
+    """
+
+    n_inputs: int
+    op: np.ndarray        # (P, n_gates) int16 Gate opcodes
+    in0: np.ndarray       # (P, n_gates) int32 node ids
+    in1: np.ndarray       # (P, n_gates) int32 node ids
+    outputs: np.ndarray   # (P, n_outputs) int32 node ids, LSB-first
+
+    @property
+    def size(self) -> int:
+        return int(self.op.shape[0])
+
+    @property
+    def n_gates(self) -> int:
+        return int(self.op.shape[1])
+
+    @property
+    def n_outputs(self) -> int:
+        return int(self.outputs.shape[1])
+
+    @classmethod
+    def from_netlists(cls, nls: list["Netlist"]) -> "NetlistPopulation":
+        """Stack netlists (same n_inputs/n_outputs) into one population.
+
+        Heterogeneous gate counts are padded at the high-id end with CONST0
+        gates, which are never reachable from the (unchanged) output ids.
+        """
+        if not nls:
+            raise ValueError("empty population")
+        n_in = nls[0].n_inputs
+        n_out = nls[0].n_outputs
+        for nl in nls:
+            if nl.n_inputs != n_in or nl.n_outputs != n_out:
+                raise ValueError("population members must share I/O shape")
+        G = max(nl.n_gates for nl in nls)
+        P = len(nls)
+        op = np.full((P, G), int(Gate.CONST0), dtype=np.int16)
+        in0 = np.zeros((P, G), dtype=np.int32)
+        in1 = np.zeros((P, G), dtype=np.int32)
+        outputs = np.empty((P, n_out), dtype=np.int32)
+        for p, nl in enumerate(nls):
+            g = nl.n_gates
+            op[p, :g] = nl.op
+            in0[p, :g] = nl.in0
+            in1[p, :g] = nl.in1
+            outputs[p] = nl.outputs
+        return cls(n_in, op, in0, in1, outputs)
+
+    def take(self, indices: np.ndarray) -> "NetlistPopulation":
+        """Row-select (with repetition) a sub-population."""
+        idx = np.asarray(indices)
+        return NetlistPopulation(self.n_inputs, self.op[idx], self.in0[idx],
+                                 self.in1[idx], self.outputs[idx])
+
+    def netlist(self, p: int, name: str = "") -> "Netlist":
+        nl = Netlist(self.n_inputs, self.op[p].astype(np.int16),
+                     self.in0[p].astype(np.int32), self.in1[p].astype(np.int32),
+                     self.outputs[p].astype(np.int32), name=name)
+        nl.validate()
+        return nl
+
+    # -- simulation ---------------------------------------------------------
+    def simulate(self, inputs: np.ndarray) -> np.ndarray:
+        """Bit-parallel evaluation of the whole population.
+
+        inputs: uint64, either shared `(n_inputs, W)` or per-individual
+        `(P, n_inputs, W)`.  Returns `(P, n_outputs, W)` — row p is
+        bit-identical to `self.netlist(p).simulate(...)`.
+
+        Wide word sets are processed in cache-sized chunks along the word
+        axis (words are independent), keeping the whole population's value
+        plane resident instead of streaming a multi-MB array per gate.
+        """
+        inputs = np.ascontiguousarray(inputs, dtype=_U64)
+        P, G = self.op.shape
+        n_in = self.n_inputs
+        if inputs.ndim == 2:
+            if inputs.shape[0] != n_in:
+                raise ValueError(f"expected {n_in} input rows, got {inputs.shape[0]}")
+            W = inputs.shape[1]
+            inputs = inputs[None]
+        elif inputs.ndim == 3:
+            if inputs.shape[:2] != (P, n_in):
+                raise ValueError(f"expected ({P}, {n_in}, W) inputs, got {inputs.shape}")
+            W = inputs.shape[2]
+        else:
+            raise ValueError("inputs must be (n_inputs, W) or (P, n_inputs, W)")
+        chunk = max(16, (4 << 20) // ((n_in + G) * P * 8))
+        if W > chunk:
+            return np.concatenate(
+                [self._simulate_block(inputs[..., s:s + chunk], P, W=min(chunk, W - s))
+                 for s in range(0, W, chunk)], axis=-1)
+        return self._simulate_block(inputs, P, W)
+
+    def _simulate_block(self, inputs: np.ndarray, P: int, W: int) -> np.ndarray:
+        n_in = self.n_inputs
+        G = self.op.shape[1]
+        # node-major (N, P, W) layout: gate writes and homogeneous-column ops
+        # touch one contiguous (P, W) block instead of P strided slices
+        vals = np.zeros((n_in + G, P, W), dtype=_U64)
+        vals[:n_in] = inputs.transpose(1, 0, 2)
+        rows = np.arange(P)
+        op, in0, in1 = self.op, self.in0, self.in1
+        homog = (op == op[:1]).all(axis=0)
+        c0, ca = _ANF_C0[op], _ANF_CA[op]
+        cb, cab = _ANF_CB[op], _ANF_CAB[op]
+        for g in range(G):
+            if homog[g]:
+                o = int(op[0, g])
+                if o == Gate.CONST0:
+                    continue
+                if o == Gate.CONST1:
+                    vals[n_in + g] = _FULL
+                    continue
+                a = vals[in0[:, g], rows]
+                if o in (Gate.BUF, Gate.INPUT):
+                    vals[n_in + g] = a
+                elif o == Gate.NOT:
+                    vals[n_in + g] = ~a
+                else:
+                    b = vals[in1[:, g], rows]
+                    vals[n_in + g] = _HOMOG_BINOP[Gate(o)](a, b)
+            else:
+                a = vals[in0[:, g], rows]
+                b = vals[in1[:, g], rows]
+                vals[n_in + g] = (c0[:, g, None]
+                                  ^ (ca[:, g, None] & a)
+                                  ^ (cb[:, g, None] & b)
+                                  ^ (cab[:, g, None] & (a & b)))
+        return vals[self.outputs.T, rows[None, :]].transpose(1, 0, 2)
+
+    def eval_uint(self, inputs: np.ndarray) -> np.ndarray:
+        """Simulate and decode outputs (LSB-first) into per-vector uints.
+
+        Returns int64 `(P, W*64)` — row p matches `netlist(p).eval_uint`.
+        """
+        return _decode_words(self.simulate(inputs))
+
+    def pc_errors(self, packed: np.ndarray, true: np.ndarray
+                  ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-individual (mae, wcae) against true popcounts: two (P,) arrays.
+
+        Narrow outputs keep the whole |approx - true| pipeline in int16 —
+        same integers, same float64 statistics, ~1/4 the memory traffic of
+        the int64 route.
+        """
+        bits = _decode_bits(self.simulate(packed))
+        n_out = bits.shape[1]
+        true = np.asarray(true)
+        if n_out <= 8 and (true.size == 0 or 0 <= true.min() <= true.max() < 2 ** 14):
+            approx = _accumulate_u8(bits).astype(np.int16)
+            err = np.abs(approx - true.astype(np.int16)[None, :])
+        else:
+            P, _, S = bits.shape
+            approx = np.zeros((P, S), dtype=np.int64)
+            for o in range(n_out):
+                approx += bits[:, o].astype(np.int64) << o
+            err = np.abs(approx - true[None, :])
+        return err.mean(axis=1), err.max(axis=1).astype(np.float64)
+
+    # -- structure / cost ---------------------------------------------------
+    def active_masks(self) -> np.ndarray:
+        """(P, n_gates) liveness — row p equals `netlist(p).active_mask()`."""
+        P, G = self.op.shape
+        n_in = self.n_inputs
+        live = np.zeros((P, n_in + G), dtype=bool)
+        rows = np.arange(P)
+        live[rows[:, None], self.outputs] = True
+        uses_a = _USES_A[self.op]
+        uses_b = _USES_B[self.op]
+        for g in range(G - 1, -1, -1):
+            m = live[:, n_in + g]
+            live[rows, self.in0[:, g]] |= m & uses_a[:, g]
+            live[rows, self.in1[:, g]] |= m & uses_b[:, g]
+        return live[:, n_in:]
+
+    def areas(self) -> np.ndarray:
+        """(P,) active-gate EGFET areas, bit-identical to `Netlist.cost()`."""
+        act = self.active_masks()
+        return np.array([GATE_AREA_VEC[self.op[p][act[p]]].sum()
+                         for p in range(self.size)])
 
 
 # ---------------------------------------------------------------------------
@@ -337,19 +633,20 @@ def compose_pcc(pc_pos: Netlist, pc_neg: Netlist, n_pos: int, n_neg: int) -> Net
 # Test-vector generation (the BDD stand-in)
 # ---------------------------------------------------------------------------
 def pack_vectors(vectors: np.ndarray) -> np.ndarray:
-    """Pack boolean test vectors (S, n) into uint64 words (n, ceil(S/64)).
+    """Pack boolean test vectors (..., S, n) into uint64 words (..., n, ceil(S/64)).
 
-    Vector s lands in bit (s % 64) of word (s // 64).
+    Vector s lands in bit (s % 64) of word (s // 64).  Leading batch axes
+    (e.g. one vector set per population member) pass through unchanged.
     """
-    S, n = vectors.shape
+    *lead, S, n = vectors.shape
     W = (S + 63) // 64
-    padded = np.zeros((W * 64, n), dtype=np.uint8)
-    padded[:S] = vectors.astype(np.uint8)
+    padded = np.zeros((*lead, W * 64, n), dtype=np.uint8)
+    padded[..., :S, :] = vectors.astype(np.uint8)
     # bit k of word w <- vector w*64+k  => within each 64 block, LSB-first
-    blocks = padded.reshape(W, 64, n)
-    weights = (np.uint64(1) << np.arange(64, dtype=np.uint64))[None, :, None]
-    words = (blocks.astype(np.uint64) * weights).sum(axis=1, dtype=np.uint64)  # (W, n)
-    return np.ascontiguousarray(words.T)
+    blocks = padded.reshape(*lead, W, 64, n)
+    weights = (np.uint64(1) << np.arange(64, dtype=np.uint64))[:, None]
+    words = (blocks.astype(np.uint64) * weights).sum(axis=-2, dtype=np.uint64)
+    return np.ascontiguousarray(np.swapaxes(words, -1, -2))
 
 
 def exhaustive_vectors(n: int) -> np.ndarray:
@@ -407,8 +704,8 @@ def eval_vectors(n: int, exhaustive_limit: int = 16, n_samples: int = 1 << 17,
 def popcount_of_packed(packed: np.ndarray) -> np.ndarray:
     """True per-vector popcount from packed inputs (n, W) -> (W*64,)."""
     n, W = packed.shape
-    bits = np.unpackbits(packed.view(np.uint8).reshape(n, W, 8)[..., ::-1], axis=-1)
-    bits = bits[..., ::-1].reshape(n, W * 64)
+    bits = np.unpackbits(np.ascontiguousarray(packed).view(np.uint8)
+                         .reshape(n, W * 8), axis=-1, bitorder="little")
     return bits.sum(axis=0).astype(np.int64)
 
 

@@ -28,6 +28,7 @@ class NSGA2Config:
     mutation_eta: float = 20.0
     mutation_prob: float | None = None   # default 1/n_genes
     seed: int = 0
+    dedup_eval: bool = True              # memoize duplicate chromosomes
 
 
 @dataclass
@@ -113,6 +114,36 @@ def _poly_mutate_int(x, domains, eta, prob, rng):
     return np.clip(np.rint(y), 0, hi).astype(np.int64)
 
 
+def _memoized(objective: Callable[[np.ndarray], np.ndarray]
+              ) -> Callable[[np.ndarray], np.ndarray]:
+    """Wrap a batched objective with a chromosome-level cache.
+
+    Integer GAs re-visit identical chromosomes constantly (SBX clones
+    parents, elitism carries survivors across generations); with circuit-
+    level fitness each duplicate costs a full batched simulation.  Only
+    never-seen rows reach the wrapped objective — results are unchanged for
+    any row-independent objective (the batched-evaluator contract).
+    """
+    cache: dict[bytes, np.ndarray] = {}
+
+    def evaluate(X: np.ndarray) -> np.ndarray:
+        X = np.ascontiguousarray(X)
+        keys = [row.tobytes() for row in X]
+        fresh_rows, fresh_keys, seen = [], [], set()
+        for i, k in enumerate(keys):
+            if k not in cache and k not in seen:
+                seen.add(k)
+                fresh_rows.append(i)
+                fresh_keys.append(k)
+        if fresh_rows:
+            F = objective(X[np.array(fresh_rows)])
+            for k, f in zip(fresh_keys, F):
+                cache[k] = np.asarray(f, dtype=np.float64)
+        return np.stack([cache[k] for k in keys])
+
+    return evaluate
+
+
 def nsga2(domains: np.ndarray,
           objective: Callable[[np.ndarray], np.ndarray],
           cfg: NSGA2Config,
@@ -120,18 +151,21 @@ def nsga2(domains: np.ndarray,
     """Minimize a 2-objective function over integer chromosomes.
 
     domains:  (n_genes,) number of choices per gene (gene i in [0, domains[i})).
-    objective: (N, n_genes) int -> (N, 2) float, both minimized.
+    objective: (N, n_genes) int -> (N, 2) float, both minimized; rows must be
+        independent (the population-parallel fitness contract), which lets
+        duplicate chromosomes be served from a cache (`cfg.dedup_eval`).
     seed_population: optional known-good individuals (e.g. the all-exact TNN).
     """
     rng = np.random.default_rng(cfg.seed)
     n_genes = domains.shape[0]
     mut_prob = cfg.mutation_prob if cfg.mutation_prob is not None else 1.0 / max(1, n_genes)
+    evaluate = _memoized(objective) if cfg.dedup_eval else objective
 
     pop = rng.integers(0, domains[None, :], size=(cfg.pop_size, n_genes))
     if seed_population is not None:
         k = min(seed_population.shape[0], cfg.pop_size)
         pop[:k] = seed_population[:k]
-    F = objective(pop)
+    F = evaluate(pop)
 
     history: list[tuple[int, float, float]] = []
     for gen in range(cfg.n_generations):
@@ -153,7 +187,7 @@ def nsga2(domains: np.ndarray,
             if len(children) < cfg.pop_size:
                 children.append(_poly_mutate_int(c2, domains, cfg.mutation_eta, mut_prob, rng))
         Q = np.stack(children)
-        FQ = objective(Q)
+        FQ = evaluate(Q)
 
         R = np.concatenate([pop, Q], axis=0)
         FR = np.concatenate([F, FQ], axis=0)

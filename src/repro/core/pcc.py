@@ -14,6 +14,12 @@ the paper defines the *distance metric*:
 and eps_mde / eps_wcde as mean/max |D| over the input domain G (Eq. 5),
 estimated over 1e6 random (x, z) pairs.  Pareto-optimal (eps_mde, est. area)
 combinations of approximate PCs form the PCC library used by Phase 3.
+
+Library construction is population-parallel: per (n_pos, n_neg) size one
+shared sample domain is drawn, every positive/negative PC candidate is
+simulated once through a padded `NetlistPopulation` batch, and all candidate
+*pairs* are scored from the cached outputs — instead of re-sampling and
+re-simulating both circuits for each of the |pos| x |neg| combinations.
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ import numpy as np
 
 from repro.core.circuits import (
     Netlist,
+    NetlistPopulation,
     compose_pcc,
     pack_vectors,
     popcount_netlist,
@@ -84,19 +91,37 @@ def evaluate_pcc_pair(pc_pos: Netlist, pc_neg: Netlist, n_pos: int, n_neg: int,
     x = true popcount of the positive vector, z = of the negative vector;
     rel = (x >= z); rel' = (pc_pos'(v_pos) >= pc_neg'(v_neg)).
     """
-    rng = np.random.default_rng(seed)
-    vp = _rand_bit_matrix(rng, n_samples, n_pos)
-    vn = _rand_bit_matrix(rng, n_samples, n_neg)
-    pp, pn = pack_vectors(vp), pack_vectors(vn)
-    x = popcount_of_packed(pp)[: n_samples]
-    z = popcount_of_packed(pn)[: n_samples]
+    pp, pn, x, z = sample_pair_domain(n_pos, n_neg, n_samples, seed)
     xa = pc_pos.eval_uint(pp)[: n_samples]
     za = pc_neg.eval_uint(pn)[: n_samples]
+    return pair_distance_stats(xa, za, x, z)
+
+
+def sample_pair_domain(n_pos: int, n_neg: int, n_samples: int, seed: int
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Shared random (pos, neg) sample domain for one PCC size.
+
+    Returns (packed_pos, packed_neg, x, z): packed uint64 input words plus
+    the true popcounts x, z of each sample pair.
+    """
+    rng = np.random.default_rng(seed)
+    pp = pack_vectors(_rand_bit_matrix(rng, n_samples, n_pos))
+    pn = pack_vectors(_rand_bit_matrix(rng, n_samples, n_neg))
+    x = popcount_of_packed(pp)[:n_samples]
+    z = popcount_of_packed(pn)[:n_samples]
+    return pp, pn, x, z
+
+
+def pair_distance_stats(xa: np.ndarray, za: np.ndarray,
+                        x: np.ndarray, z: np.ndarray
+                        ) -> tuple[float, float, float]:
+    """(eps_mde, eps_wcde, correct_frac) from precomputed approximate
+    popcounts xa, za over a shared sample domain with true counts x, z."""
     rel = x >= z
     rel_a = xa >= za
-    D = np.where(rel == rel_a, 0, x - z)
-    abs_d = np.abs(D)
-    return float(abs_d.mean()), float(abs_d.max()), float((rel == rel_a).mean())
+    correct = rel == rel_a
+    abs_d = np.where(correct, 0, np.abs(x - z))
+    return float(abs_d.mean()), float(abs_d.max()), float(correct.mean())
 
 
 def _pareto_front(points: list[tuple[float, float, int]]) -> list[int]:
@@ -118,19 +143,27 @@ def build_pcc_library(sizes: list[tuple[int, int]],
     """For every (n_pos, n_neg) size used by the target TNNs: evaluate all
     combinations of approximate PC circuits and keep the Pareto front on
     (eps_mde, estimated area).  Exact PC circuits are the zero-error members.
+
+    Population-parallel: each candidate circuit is simulated exactly once
+    over a shared per-size sample domain (padded `NetlistPopulation` batch);
+    the |pos| x |neg| pair statistics then come from the cached outputs.
     """
     lib = PCCLibrary()
     for (n_pos, n_neg) in sizes:
         pos_cands = pc_libs.get(n_pos) or [popcount_netlist(n_pos)]
         neg_cands = pc_libs.get(n_neg) or [popcount_netlist(n_neg)]
+        pp, pn, x, z = sample_pair_domain(
+            n_pos, n_neg, n_samples, seed + 7919 * n_pos + 104729 * n_neg)
+        xa = NetlistPopulation.from_netlists(pos_cands).eval_uint(pp)[:, :n_samples]
+        za = NetlistPopulation.from_netlists(neg_cands).eval_uint(pn)[:, :n_samples]
+        pos_areas = [c.cost().area_mm2 for c in pos_cands]
+        neg_areas = [c.cost().area_mm2 for c in neg_cands]
         cands: list[PCCEntry] = []
-        for i, pp in enumerate(pos_cands):
-            for k, pn in enumerate(neg_cands):
-                mde, wcde, cf = evaluate_pcc_pair(
-                    pp, pn, n_pos, n_neg, n_samples=n_samples,
-                    seed=seed + 7919 * i + 104729 * k)
-                est = pp.cost().area_mm2 + pn.cost().area_mm2
-                cands.append(PCCEntry(n_pos, n_neg, pp, pn, est, mde, wcde, cf))
+        for i, pc_p in enumerate(pos_cands):
+            for k, pc_n in enumerate(neg_cands):
+                mde, wcde, cf = pair_distance_stats(xa[i], za[k], x, z)
+                est = pos_areas[i] + neg_areas[k]
+                cands.append(PCCEntry(n_pos, n_neg, pc_p, pc_n, est, mde, wcde, cf))
         pts = [(c.mde, c.est_area, idx) for idx, c in enumerate(cands)]
         front = _pareto_front(pts)[:max_per_size]
         sel = sorted((cands[i] for i in front), key=lambda c: c.mde)

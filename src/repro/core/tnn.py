@@ -344,6 +344,12 @@ class TNNApproxProblem:
                            + gate_cost(Gate.NOT).scale(int((self.tnn.w2t == -1).sum()))
                            + argmax_cost(self.tnn.w2t.shape[1],
                                          C.popcount_width(max(self.tnn.out_nnz, 1))))
+        # batched-objective caches: per-gene candidate areas + one padded
+        # population over the output PC candidates (row-selected per genome)
+        self._hidden_gene_areas = [np.array([e.est_area for e in cands])
+                                   for cands in self.hidden_cands]
+        self._out_areas = np.array([nl.cost().area_mm2 for nl in self.out_cands])
+        self._out_pop = C.NetlistPopulation.from_netlists(self.out_cands)
 
     # -- chromosome layout ---------------------------------------------------
     @property
@@ -395,10 +401,37 @@ class TNNApproxProblem:
         return 1.0 - acc, est_area
 
     def objective(self, pop: np.ndarray) -> np.ndarray:
-        out = np.empty((pop.shape[0], 2), dtype=np.float64)
-        for r in range(pop.shape[0]):
-            out[r] = self._eval_one(pop[r])
-        return out
+        """Population-parallel objectives: (N, n_genes) int -> (N, 2).
+
+        Hidden-gene bits come from the per-candidate caches via one gather;
+        every output neuron is scored for the whole population in a single
+        `NetlistPopulation` pass over per-individual packed inputs.  Matches
+        `_eval_one` (the serial reference) bit-for-bit.
+        """
+        pop = np.asarray(pop, dtype=np.int64)
+        P = pop.shape[0]
+        S = self.xbin.shape[0]
+        est = np.full(P, self.fixed_cost.area_mm2)
+        hbits = np.repeat(self.fixed_hbits[None], P, axis=0)     # (P, S, H)
+        for g, cache in enumerate(self.hidden_bit_cache):
+            hbits[:, :, self.hidden_idx[g]] = cache[pop[:, g]]
+            est = est + self._hidden_gene_areas[g][pop[:, g]]
+        nh = len(self.hidden_idx)
+        Cc = self.tnn.w2t.shape[1]
+        scores = np.empty((P, S, Cc), dtype=np.int64)
+        for o in range(Cc):
+            k = pop[:, nh + o]
+            est = est + self._out_areas[k]
+            col = self.tnn.w2t[:, o]
+            bits = np.concatenate([hbits[:, :, col == 1],
+                                   1 - hbits[:, :, col == -1]], axis=2)
+            if bits.shape[2] == 0:
+                scores[:, :, o] = 0
+                continue
+            packed = C.pack_vectors(bits)                        # (P, nnz, W)
+            scores[:, :, o] = self._out_pop.take(k).eval_uint(packed)[:, :S]
+        acc = (np.argmax(scores, axis=2) == self.y[None, :]).mean(axis=1)
+        return np.stack([1.0 - acc, est], axis=1)
 
     def optimize(self, cfg: NSGA2Config) -> NSGA2Result:
         seed = np.zeros((1, self.n_genes), dtype=np.int64)   # all-exact individual

@@ -1,0 +1,114 @@
+"""Jittable population-parallel gate-level simulation (uint32 SWAR).
+
+JAX twin of `core.circuits.NetlistPopulation`: a whole population of
+same-shape genomes — `(P, n_gates)` opcode/operand plan arrays — evaluated
+over all packed test words in one `lax.scan` over gate columns, so CGP
+fitness can run on device.  Words are uint32 (JAX disables x64 by default);
+`pack_words32` reinterprets the numpy evaluator's uint64 words as pairs of
+uint32 lanes in the same SWAR style as `kernels/packed_popcount.py`, which
+keeps the two paths bit-compatible: vector s lives in bit (s % 32) of word
+(s // 32).
+
+Each gate column applies every individual's opcode simultaneously through
+its algebraic normal form r = c0 ^ (ca & a) ^ (cb & b) ^ (cab & a & b)
+with per-individual coefficient masks — branch-free, so the scan body is a
+fixed handful of vector ops regardless of population size or opcode mix.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.circuits import _ANF_COEFF
+
+_U32 = jnp.uint32
+_FULL32 = np.uint32(0xFFFFFFFF)
+
+_N_OPS = max(int(g) for g in _ANF_COEFF) + 1
+_C0_TBL = np.zeros(_N_OPS, dtype=np.uint32)
+_CA_TBL = np.zeros(_N_OPS, dtype=np.uint32)
+_CB_TBL = np.zeros(_N_OPS, dtype=np.uint32)
+_CAB_TBL = np.zeros(_N_OPS, dtype=np.uint32)
+for _g, (_c0, _ca, _cb, _cab) in _ANF_COEFF.items():
+    _C0_TBL[int(_g)] = _FULL32 * np.uint32(_c0)
+    _CA_TBL[int(_g)] = _FULL32 * np.uint32(_ca)
+    _CB_TBL[int(_g)] = _FULL32 * np.uint32(_cb)
+    _CAB_TBL[int(_g)] = _FULL32 * np.uint32(_cab)
+
+
+def pack_words32(packed_u64: np.ndarray) -> np.ndarray:
+    """Reinterpret `(n, W)` uint64 packed vectors as `(n, 2W)` uint32 words.
+
+    Little-endian lane split: uint64 word w's low half becomes word 2w, so
+    vector s sits in bit (s % 32) of word (s // 32) — the invariant both
+    evaluators share.
+    """
+    packed_u64 = np.ascontiguousarray(packed_u64, dtype=np.uint64)
+    n, W = packed_u64.shape
+    return packed_u64.view(np.uint32).reshape(n, 2 * W)
+
+
+@partial(jax.jit, static_argnames=("n_inputs",))
+def simulate_population(op: jax.Array, in0: jax.Array, in1: jax.Array,
+                        outputs: jax.Array, words32: jax.Array,
+                        n_inputs: int) -> jax.Array:
+    """op/in0/in1: (P, G) int32; outputs: (P, n_out) int32;
+    words32: (n_inputs, W) uint32 shared test words.
+
+    Returns (P, n_out, W) uint32 output words, bit-identical (lane-split)
+    to `NetlistPopulation.simulate`.
+    """
+    P, G = op.shape
+    W = words32.shape[1]
+    c0 = jnp.asarray(_C0_TBL)[op]      # (P, G) uint32 ANF masks
+    ca = jnp.asarray(_CA_TBL)[op]
+    cb = jnp.asarray(_CB_TBL)[op]
+    cab = jnp.asarray(_CAB_TBL)[op]
+
+    vals = jnp.zeros((P, n_inputs + G, W), dtype=_U32)
+    vals = vals.at[:, :n_inputs].set(words32.astype(_U32)[None])
+
+    def body(vals, xs):
+        g, i0, i1, m0, ma, mb, mab = xs
+        a = jnp.take_along_axis(vals, i0[:, None, None], axis=1)[:, 0]
+        b = jnp.take_along_axis(vals, i1[:, None, None], axis=1)[:, 0]
+        r = (m0[:, None] ^ (ma[:, None] & a) ^ (mb[:, None] & b)
+             ^ (mab[:, None] & (a & b)))
+        vals = jax.lax.dynamic_update_slice_in_dim(
+            vals, r[:, None], n_inputs + g, axis=1)
+        return vals, None
+
+    xs = (jnp.arange(G, dtype=jnp.int32), in0.T, in1.T,
+          c0.T, ca.T, cb.T, cab.T)
+    vals, _ = jax.lax.scan(body, vals, xs)
+    return jnp.take_along_axis(vals, outputs[:, :, None], axis=1)
+
+
+@partial(jax.jit, static_argnames=("n_inputs",))
+def population_eval_uint(op: jax.Array, in0: jax.Array, in1: jax.Array,
+                         outputs: jax.Array, words32: jax.Array,
+                         n_inputs: int) -> jax.Array:
+    """Decode output words (LSB-first) into per-vector ints: (P, W*32) int32."""
+    outw = simulate_population(op, in0, in1, outputs, words32, n_inputs)
+    P, n_out, W = outw.shape
+    shifts = jnp.arange(32, dtype=_U32)
+    acc = jnp.zeros((P, W, 32), dtype=jnp.int32)
+    for o in range(n_out):
+        bits = ((outw[:, o, :, None] >> shifts) & _U32(1)).astype(jnp.int32)
+        acc = acc + (bits << o)
+    return acc.reshape(P, W * 32)
+
+
+@partial(jax.jit, static_argnames=("n_inputs",))
+def population_pc_errors(op: jax.Array, in0: jax.Array, in1: jax.Array,
+                         outputs: jax.Array, words32: jax.Array,
+                         true: jax.Array, n_inputs: int
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Per-individual (mae, wcae) vs true popcounts — the device-side
+    fitness term of CGP Eq. (3).  true: (W*32,) int32."""
+    approx = population_eval_uint(op, in0, in1, outputs, words32, n_inputs)
+    err = jnp.abs(approx - true[None, :])
+    return err.mean(axis=1), err.max(axis=1).astype(jnp.float32)

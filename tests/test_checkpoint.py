@@ -61,11 +61,12 @@ def test_elastic_restore_to_mesh(tmp_path):
     """Restore re-device_puts with the current (1-device) mesh sharding —
     the same code path reshards onto any topology."""
     from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_mesh_compat
     cm = CheckpointManager(str(tmp_path))
     state = _state()
     cm.save(3, state)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
     specs = {"params": {"w": P("data", "model"), "b": P(None)},
              "opt": {"mu": P("data", None), "step": P()}}
     step, restored, _ = cm.restore(jax.tree.map(jnp.zeros_like, state),

@@ -1,5 +1,8 @@
 """Data substrates: determinism, resumability, dataset shape contracts."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.tabular import DATASETS, make_dataset

@@ -1,5 +1,8 @@
 """NSGA-II machinery + hypothesis property tests on its invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.nsga2 import (NSGA2Config, crowding_distance,
