@@ -14,25 +14,25 @@ import json
 import sys
 import time
 
-BENCHES = ["table2", "fig4", "fig5", "fig6", "fig7", "fig8", "table3",
-           "variation", "roofline", "cgp"]
+BENCH_MODULES = {
+    "table2": "benchmarks.table2_accuracy",
+    "fig4": "benchmarks.fig4_pc_pareto",
+    "fig5": "benchmarks.fig5_pcc_pareto",
+    "fig6": "benchmarks.fig6_area_estimate",
+    "fig7": "benchmarks.fig7_tnn_pareto",
+    "fig8": "benchmarks.fig8_nsga2",
+    "table3": "benchmarks.table3_sota",
+    "variation": "benchmarks.variation_robustness",
+    "roofline": "benchmarks.roofline_bench",
+    "cgp": "benchmarks.cgp_throughput",
+    "serve": "benchmarks.serve_throughput",
+}
+BENCHES = list(BENCH_MODULES)
 
 
 def _load(name: str):
     import importlib
-    mod = {
-        "table2": "benchmarks.table2_accuracy",
-        "fig4": "benchmarks.fig4_pc_pareto",
-        "fig5": "benchmarks.fig5_pcc_pareto",
-        "fig6": "benchmarks.fig6_area_estimate",
-        "fig7": "benchmarks.fig7_tnn_pareto",
-        "fig8": "benchmarks.fig8_nsga2",
-        "table3": "benchmarks.table3_sota",
-        "variation": "benchmarks.variation_robustness",
-        "roofline": "benchmarks.roofline_bench",
-        "cgp": "benchmarks.cgp_throughput",
-    }[name]
-    return importlib.import_module(mod)
+    return importlib.import_module(BENCH_MODULES[name])
 
 
 def main() -> None:
@@ -40,7 +40,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(BENCHES))
     args = ap.parse_args()
-    names = args.only.split(",") if args.only else BENCHES
+    names = [n.strip() for n in args.only.split(",")] if args.only else BENCHES
+    unknown = [n for n in names if n not in BENCH_MODULES]
+    if unknown:
+        raise SystemExit(
+            f"unknown bench name(s) {', '.join(unknown)}; "
+            f"valid: {', '.join(BENCHES)}")
 
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,80 @@
+"""Sensor-stream serving throughput of the compiled circuit engine.
+
+Compiles the cardio exact TNN (the paper's mid-size Table-2 design) to a
+`CircuitProgram` and measures end-to-end engine throughput — raw readings
+in, class labels out, including ABC binarization, bit-packing and decode —
+at batch sizes {1, 64, 1024}.  A numpy-backend row at the largest batch
+anchors the jitted SWAR speedup.  Writes BENCH_serve.json.
+
+Run directly to (re)generate the committed artifact:
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput [BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+from benchmarks.common import QUICK, get_trained_tnn
+from repro.core.tnn import exact_netlists
+from repro.compile.ir import lower_classifier
+from repro.compile.program import CircuitProgram
+from repro.serving.circuit_engine import CircuitServingEngine
+
+BATCH_SIZES = (1, 64, 1024)
+
+
+def _stream(x_test: np.ndarray, n: int, seed: int = 0) -> np.ndarray:
+    """n readings drawn (with wraparound) from the test distribution."""
+    idx = np.random.default_rng(seed).integers(0, x_test.shape[0], size=n)
+    return x_test[idx]
+
+
+def _measure(prog: CircuitProgram, x_test: np.ndarray, batch: int,
+             n_readings: int) -> dict:
+    engine = CircuitServingEngine(prog, max_batch=batch)
+    engine.warmup()
+    engine.classify_stream(_stream(x_test, n_readings))
+    s = engine.stats.summary()
+    return {
+        "batch": batch,
+        "readings": s["n_readings"],
+        "readings_per_s": s["readings_per_s"],
+        "p50_ms": s["p50_ms"],
+        "p99_ms": s["p99_ms"],
+    }
+
+
+def run() -> list[dict]:
+    ds, tnn = get_trained_tnn("cardio")
+    cc = lower_classifier(tnn, *exact_netlists(tnn))
+    prog = CircuitProgram.from_classifier(cc)
+
+    rows = []
+    for batch in BATCH_SIZES:
+        n = (max(256, 4 * batch) if QUICK else max(4096, 64 * batch))
+        row = {"bench": "serve", "backend": "jax",
+               "gates": cc.ir.n_gates, "depth": cc.ir.depth,
+               **_measure(prog, ds.x_test, batch, n)}
+        rows.append(row)
+
+    prog_np = CircuitProgram.from_classifier(cc, backend="np")
+    n = 2048 if QUICK else 16384
+    rows.append({"bench": "serve", "backend": "np",
+                 "gates": cc.ir.n_gates, "depth": cc.ir.depth,
+                 **_measure(prog_np, ds.x_test, 1024, n)})
+
+    out = sys.argv[1] if (__name__ == "__main__" and len(sys.argv) > 1) \
+        else "BENCH_serve.json"
+    with open(out, "w") as f:
+        json.dump({"dataset": "cardio", "quick": QUICK, "rows": rows}, f,
+                  indent=2)
+        f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

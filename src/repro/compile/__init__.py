@@ -1,0 +1,40 @@
+"""repro.compile — evolve -> compile -> emit -> serve.
+
+Lowers evolved classifiers (`core.tnn` + NSGA-II netlist selections) into a
+single levelized gate IR with two backends: a jitted bit-packed device
+program for batched sensor-stream inference, and synthesizable structural
+Verilog with an EGFET area/power report (plus an independent reader that
+re-evaluates the emitted RTL in Python).
+"""
+from repro.compile.ir import (
+    CircuitIR,
+    CompiledClassifier,
+    argmax_netlist,
+    lower,
+    lower_classifier,
+    lower_netlist,
+)
+from repro.compile.program import CircuitProgram
+from repro.compile.verilog import (
+    egfet_report,
+    emit_classifier_verilog,
+    emit_netlist_module,
+    write_artifacts,
+)
+from repro.compile.vread import VerilogDesign, eval_classifier_verilog
+
+__all__ = [
+    "CircuitIR",
+    "CompiledClassifier",
+    "CircuitProgram",
+    "VerilogDesign",
+    "argmax_netlist",
+    "egfet_report",
+    "emit_classifier_verilog",
+    "emit_netlist_module",
+    "eval_classifier_verilog",
+    "lower",
+    "lower_classifier",
+    "lower_netlist",
+    "write_artifacts",
+]

@@ -463,6 +463,35 @@ class _Builder:
     def half_adder(self, a: int, b: int) -> tuple[int, int]:
         return self.gate(Gate.XOR, a, b), self.gate(Gate.AND, a, b)
 
+    # -- composition hooks (used by compose_pcc and repro.compile) ----------
+    def inline(self, nl: "Netlist", input_map: list[int]) -> list[int]:
+        """Splice `nl`'s gates into this builder.
+
+        `input_map[i]` is the id (in this builder) feeding `nl`'s input i;
+        returns the ids of `nl`'s outputs in this builder.  Extra map entries
+        are ignored, so callers can pass a shared padded map.
+        """
+        if len(input_map) < nl.n_inputs:
+            raise ValueError(
+                f"input_map has {len(input_map)} ids, netlist needs {nl.n_inputs}")
+        remap = [int(i) for i in input_map[: nl.n_inputs]]
+        for g in range(nl.n_gates):
+            remap.append(self.gate(int(nl.op[g]), remap[nl.in0[g]],
+                                   remap[nl.in1[g]]))
+        return [remap[int(i)] for i in nl.outputs]
+
+    def geq(self, a_bits: list[int], b_bits: list[int]) -> int:
+        """Unsigned comparator a >= b over equal-length LSB-first bit ids."""
+        if len(a_bits) != len(b_bits) or not a_bits:
+            raise ValueError("geq needs equal-length non-empty bit lists")
+        ge = self.gate(Gate.ORN, a_bits[0], b_bits[0])  # a0 OR NOT b0
+        for k in range(1, len(a_bits)):
+            gt = self.gate(Gate.ANDN, a_bits[k], b_bits[k])
+            eq = self.gate(Gate.XNOR, a_bits[k], b_bits[k])
+            keep = self.gate(Gate.AND, eq, ge)
+            ge = self.gate(Gate.OR, gt, keep)
+        return ge
+
     def full_adder(self, a: int, b: int, c: int) -> tuple[int, int]:
         x = self.gate(Gate.XOR, a, b)
         s = self.gate(Gate.XOR, x, c)
@@ -572,13 +601,7 @@ def comparator_geq_netlist(j: int) -> Netlist:
     Inputs: a_0..a_{j-1} (ids 0..j-1, LSB first), b_0..b_{j-1} (ids j..2j-1).
     """
     b = _Builder(2 * j)
-    ge = b.gate(Gate.ORN, 0, j)  # a0 OR NOT b0  == a0 >= b0
-    for k in range(1, j):
-        a_k, b_k = k, j + k
-        gt = b.gate(Gate.ANDN, a_k, b_k)
-        eq = b.gate(Gate.XNOR, a_k, b_k)
-        keep = b.gate(Gate.AND, eq, ge)
-        ge = b.gate(Gate.OR, gt, keep)
+    ge = b.geq(list(range(j)), list(range(j, 2 * j)))
     return b.finish([ge], name=f"cmp_geq{j}", meta={"j": j})
 
 
@@ -590,18 +613,8 @@ def compose_pcc(pc_pos: Netlist, pc_neg: Netlist, n_pos: int, n_neg: int) -> Net
     """
     j = max(popcount_width(n_pos), popcount_width(n_neg))
     b = _Builder(n_pos + n_neg)
-
-    def inline(nl: Netlist, input_map: list[int]) -> list[int]:
-        remap = list(input_map)  # id in nl -> id in b
-        for g in range(nl.n_gates):
-            o = int(nl.op[g])
-            a = remap[nl.in0[g]]
-            c = remap[nl.in1[g]]
-            remap.append(b.gate(o, a, c))
-        return [remap[int(i)] for i in nl.outputs]
-
-    pos_out = inline(pc_pos, list(range(n_pos)))
-    neg_out = inline(pc_neg, list(range(n_pos, n_pos + n_neg)))
+    pos_out = b.inline(pc_pos, list(range(n_pos)))
+    neg_out = b.inline(pc_neg, list(range(n_pos, n_pos + n_neg)))
     zero = None
 
     def pad(bits: list[int]) -> list[int]:
@@ -614,13 +627,7 @@ def compose_pcc(pc_pos: Netlist, pc_neg: Netlist, n_pos: int, n_neg: int) -> Net
 
     a_bits = pad(pos_out)
     b_bits = pad(neg_out)
-    # inline comparator: ge = a >= b
-    ge = b.gate(Gate.ORN, a_bits[0], b_bits[0])
-    for k in range(1, j):
-        gt = b.gate(Gate.ANDN, a_bits[k], b_bits[k])
-        eq = b.gate(Gate.XNOR, a_bits[k], b_bits[k])
-        keep = b.gate(Gate.AND, eq, ge)
-        ge = b.gate(Gate.OR, gt, keep)
+    ge = b.geq(a_bits, b_bits)
     nl = b.finish(
         [ge],
         name=f"pcc_{n_pos}x{n_neg}[{pc_pos.name},{pc_neg.name}]",

@@ -51,6 +51,25 @@ def pack_words32(packed_u64: np.ndarray) -> np.ndarray:
     return packed_u64.view(np.uint32).reshape(n, 2 * W)
 
 
+def pack_bits32(bits: np.ndarray) -> np.ndarray:
+    """Pack a `(S, n)` 0/1 matrix straight into `(n, ceil(S/32))` uint32 words.
+
+    The direct 32-bit twin of `circuits.pack_vectors` (vector s in bit
+    (s % 32) of word (s // 32)) without the uint64 detour — the serving hot
+    path packs each request batch exactly once, so the pad only rounds S up
+    to 32 instead of 64.
+    """
+    bits = np.asarray(bits)
+    S, n = bits.shape
+    W = (S + 31) // 32
+    padded = np.zeros((W * 32, n), dtype=np.uint8)
+    padded[:S] = bits.astype(np.uint8)
+    blocks = padded.reshape(W, 32, n)
+    weights = (np.uint32(1) << np.arange(32, dtype=np.uint32))[None, :, None]
+    words = (blocks.astype(np.uint32) * weights).sum(axis=1, dtype=np.uint32)
+    return np.ascontiguousarray(words.T)
+
+
 @partial(jax.jit, static_argnames=("n_inputs",))
 def simulate_population(op: jax.Array, in0: jax.Array, in1: jax.Array,
                         outputs: jax.Array, words32: jax.Array,

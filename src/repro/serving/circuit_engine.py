@@ -1,0 +1,150 @@
+"""Sensor-stream classification serving on compiled circuit programs.
+
+The on-sensor counterpart of the token engine in `serving/engine.py`: there
+is no decode loop — every request is one sensor reading classified in a
+single circuit pass — so the engine's entire job is batching.  Queued
+readings are gathered in arrival order into fixed-shape padded batches
+(`max_batch` rows, so the jitted SWAR program compiles exactly one shape),
+dispatched as one bit-packed evaluation, and the labels are scattered back
+with per-request latency.  At 32 readings per machine word a single
+dispatch of a `max_batch=1024` engine costs ~32 word-ops per gate, which is
+what lets a software model of a 5 Hz printed circuit serve readings at
+MHz-equivalent rates.
+
+`classify_stream` is the bulk path (one numpy array in, labels out);
+`submit`/`flush` is the request-queue path with per-request bookkeeping.
+Both feed the same `ServeStats` (readings/s + batch latency percentiles).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.compile.program import CircuitProgram
+
+
+@dataclass
+class SensorRequest:
+    uid: int
+    readings: np.ndarray            # (F,) raw sensor values
+    label: int | None = None
+    latency_ms: float | None = None  # submit -> label
+    _t_submit: float = 0.0
+
+
+@dataclass
+class ServeStats:
+    n_readings: int = 0
+    n_batches: int = 0
+    busy_s: float = 0.0              # time spent inside dispatches
+    batch_ms: list[float] = field(default_factory=list)
+
+    def record(self, n: int, dt_s: float) -> None:
+        self.n_readings += n
+        self.n_batches += 1
+        self.busy_s += dt_s
+        self.batch_ms.append(dt_s * 1e3)
+
+    @property
+    def readings_per_s(self) -> float:
+        return self.n_readings / self.busy_s if self.busy_s > 0 else 0.0
+
+    def percentile_ms(self, q: float) -> float:
+        return float(np.percentile(self.batch_ms, q)) if self.batch_ms else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "n_readings": self.n_readings,
+            "n_batches": self.n_batches,
+            "busy_s": round(self.busy_s, 6),
+            "readings_per_s": round(self.readings_per_s, 1),
+            "p50_ms": round(self.percentile_ms(50), 4),
+            "p99_ms": round(self.percentile_ms(99), 4),
+        }
+
+
+class CircuitServingEngine:
+    """Batched request->label serving over one compiled classifier."""
+
+    def __init__(self, program: CircuitProgram, max_batch: int = 1024):
+        if program.n_classes is None:
+            raise ValueError("engine needs a classifier program "
+                             "(CircuitProgram.from_classifier)")
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.program = program
+        self.max_batch = max_batch
+        self.stats = ServeStats()
+        self._queue: list[SensorRequest] = []
+        self._next_uid = 0
+
+    @property
+    def n_features(self) -> int:
+        return self.program.ir.n_inputs
+
+    def warmup(self) -> None:
+        """Trigger jit compilation of the fixed batch shape (not counted)."""
+        dummy = np.zeros((self.max_batch, self.n_features), dtype=np.float64)
+        if self.program.thresholds is not None:
+            self.program.predict(dummy)
+        else:
+            self.program.predict_bits(dummy.astype(np.uint8))
+
+    # -- request-queue path -------------------------------------------------
+    def submit(self, readings: np.ndarray) -> SensorRequest:
+        readings = np.asarray(readings, dtype=np.float64).reshape(-1)
+        if readings.shape[0] != self.n_features:
+            raise ValueError(f"expected {self.n_features} features, "
+                             f"got {readings.shape[0]}")
+        req = SensorRequest(self._next_uid, readings,
+                            _t_submit=time.perf_counter())
+        self._next_uid += 1
+        self._queue.append(req)
+        return req
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def flush(self) -> list[SensorRequest]:
+        """Drain the queue in arrival order; returns the completed requests."""
+        done: list[SensorRequest] = []
+        while self._queue:
+            group = self._queue[: self.max_batch]
+            del self._queue[: len(group)]
+            x = np.stack([r.readings for r in group])
+            labels = self._dispatch(x)
+            t_done = time.perf_counter()
+            for r, lbl in zip(group, labels):
+                r.label = int(lbl)
+                r.latency_ms = (t_done - r._t_submit) * 1e3
+            done.extend(group)
+        return done
+
+    # -- bulk path ----------------------------------------------------------
+    def classify_stream(self, x: np.ndarray) -> np.ndarray:
+        """Classify `(S, F)` readings in max_batch chunks; returns `(S,)`."""
+        x = np.asarray(x)
+        if x.ndim != 2 or x.shape[1] != self.n_features:
+            raise ValueError(f"expected (S, {self.n_features}) readings, "
+                             f"got {x.shape}")
+        out = np.empty(x.shape[0], dtype=np.int32)
+        for s in range(0, x.shape[0], self.max_batch):
+            chunk = x[s: s + self.max_batch]
+            out[s: s + chunk.shape[0]] = self._dispatch(chunk)
+        return out
+
+    def _dispatch(self, x: np.ndarray) -> np.ndarray:
+        """One padded fixed-shape batch through the program (timed)."""
+        B = x.shape[0]
+        if B < self.max_batch:      # pad to the compiled shape
+            pad = np.zeros((self.max_batch - B, x.shape[1]), dtype=x.dtype)
+            x = np.concatenate([x, pad], axis=0)
+        t0 = time.perf_counter()
+        labels = (self.program.predict(x) if self.program.thresholds is not None
+                  else self.program.predict_bits(x.astype(np.uint8)))
+        dt = time.perf_counter() - t0
+        self.stats.record(B, dt)
+        return labels[:B]

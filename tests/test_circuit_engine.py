@@ -1,0 +1,82 @@
+"""Sensor-stream serving engine: label correctness across padded batch
+shapes, request-queue bookkeeping, and stats sanity."""
+import numpy as np
+import pytest
+
+from repro.core import tnn as T
+from repro.compile import CircuitProgram, lower_classifier
+from repro.serving.circuit_engine import CircuitServingEngine
+
+
+@pytest.fixture(scope="module")
+def toy():
+    rng = np.random.default_rng(7)
+    w1t = rng.integers(-1, 2, size=(9, 5)).astype(np.int8)
+    w2t = T.balance_zero_counts(rng.normal(size=(5, 4)), 1 / 3)
+    tnn = T.TrainedTNN(w1t=w1t, w2t=w2t, thresholds=np.full(9, 0.5),
+                       train_acc=0.0, test_acc=0.0, name="toy")
+    cc = lower_classifier(tnn, *T.exact_netlists(tnn))
+    return tnn, cc, CircuitProgram.from_classifier(cc)
+
+
+@pytest.mark.parametrize("n,max_batch", [(1, 32), (7, 32), (130, 32),
+                                         (64, 64), (5, 1)])
+def test_stream_labels_match_direct_predict(toy, n, max_batch):
+    """Padding to the fixed jit shape must never leak into the labels."""
+    _, _, prog = toy
+    engine = CircuitServingEngine(prog, max_batch=max_batch)
+    engine.warmup()
+    rng = np.random.default_rng(n * 100 + max_batch)
+    x = rng.random((n, 9))
+    labels = engine.classify_stream(x)
+    assert labels.shape == (n,)
+    assert (labels == prog.predict(x)).all()
+    assert engine.stats.n_readings == n
+    assert engine.stats.n_batches == -(-n // max_batch)
+
+
+def test_submit_flush_queue(toy):
+    _, _, prog = toy
+    engine = CircuitServingEngine(prog, max_batch=8)
+    engine.warmup()
+    rng = np.random.default_rng(0)
+    x = rng.random((21, 9))
+    reqs = [engine.submit(row) for row in x]
+    assert engine.pending == 21
+    assert [r.uid for r in reqs] == list(range(21))
+    done = engine.flush()
+    assert engine.pending == 0
+    assert [r.uid for r in done] == list(range(21))     # arrival order
+    ref = prog.predict(x)
+    for r in done:
+        assert r.label == int(ref[r.uid])
+        assert r.latency_ms is not None and r.latency_ms >= 0.0
+
+
+def test_stats_summary(toy):
+    _, _, prog = toy
+    engine = CircuitServingEngine(prog, max_batch=16)
+    engine.warmup()
+    engine.classify_stream(np.random.default_rng(1).random((100, 9)))
+    s = engine.stats.summary()
+    assert s["n_readings"] == 100
+    assert s["n_batches"] == 7
+    assert s["readings_per_s"] > 0
+    assert s["p50_ms"] <= s["p99_ms"]
+    assert s["busy_s"] > 0
+
+
+def test_engine_input_validation(toy):
+    _, cc, prog = toy
+    engine = CircuitServingEngine(prog, max_batch=4)
+    with pytest.raises(ValueError):
+        engine.submit(np.zeros(5))           # wrong feature count
+    with pytest.raises(ValueError):
+        engine.classify_stream(np.zeros((3, 5)))
+    with pytest.raises(ValueError):
+        CircuitServingEngine(prog, max_batch=0)
+    from repro.compile import lower_netlist
+    from repro.core.circuits import popcount_netlist
+    bare = CircuitProgram.from_netlist(popcount_netlist(4))
+    with pytest.raises(ValueError):          # not a classifier program
+        CircuitServingEngine(bare)

@@ -1,0 +1,173 @@
+"""Circuit compiler: IR lowering invariants, device `CircuitProgram`
+equivalence with `Netlist.simulate` (numpy + JAX backends, plus a
+hypothesis sweep over random netlists), and the acceptance pin: for all
+five Table-2 datasets the compiled classifier and the emitted Verilog are
+bit-identical to the `predict_with_circuits` reference path."""
+import numpy as np
+import pytest
+
+from repro.core import circuits as C
+from repro.core import tnn as T
+from repro.core.ternary import abc_binarize
+from repro.data.tabular import DATASETS, make_dataset
+from repro.hw.egfet import Gate
+from repro.compile import (CircuitProgram, argmax_netlist,
+                           emit_classifier_verilog, eval_classifier_verilog,
+                           lower_classifier, lower_netlist)
+
+_FUNCS = np.array([Gate.AND, Gate.OR, Gate.XOR, Gate.NAND, Gate.NOR,
+                   Gate.XNOR, Gate.NOT, Gate.BUF, Gate.ANDN, Gate.ORN,
+                   Gate.CONST0, Gate.CONST1])
+
+
+def _random_netlist(rng, n_in, n_gates, n_out):
+    op = _FUNCS[rng.integers(len(_FUNCS), size=n_gates)].astype(np.int16)
+    in0 = np.array([rng.integers(n_in + g) for g in range(n_gates)], np.int32)
+    in1 = np.array([rng.integers(n_in + g) for g in range(n_gates)], np.int32)
+    outs = rng.integers(n_in + n_gates, size=n_out).astype(np.int32)
+    nl = C.Netlist(n_in, op, in0, in1, outs)
+    nl.validate()
+    return nl
+
+
+# ---------------------------------------------------------------------------
+# IR lowering
+# ---------------------------------------------------------------------------
+def test_lower_preserves_semantics_and_eliminates_dead_gates():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        n_in = int(rng.integers(2, 9))
+        nl = _random_netlist(rng, n_in, int(rng.integers(5, 40)), 3)
+        ir = lower_netlist(nl)
+        packed = C.exhaustive_vectors(n_in)
+        assert (ir.to_netlist().eval_uint(packed) == nl.eval_uint(packed)).all()
+        assert ir.n_gates == int(nl.active_mask().sum())
+        # levelized: every used operand sits at a strictly smaller level
+        lvl = np.concatenate([np.zeros(ir.n_inputs, np.int32), ir.levels])
+        for g in range(ir.n_gates):
+            o = Gate(int(ir.op[g]))
+            if o not in (Gate.CONST0, Gate.CONST1):
+                assert lvl[ir.in0[g]] < ir.levels[g]
+                if o not in (Gate.NOT, Gate.BUF):
+                    assert lvl[ir.in1[g]] < ir.levels[g]
+        assert np.all(np.diff(ir.levels) >= 0)          # level-sorted
+        # all gates live: cost equals the active-gate cost of the source
+        assert ir.cost().area_mm2 == pytest.approx(nl.cost().area_mm2)
+
+
+def test_lower_keeps_tap_nodes_live():
+    b = C._Builder(2)
+    x = b.gate(Gate.XOR, 0, 1)
+    dead = b.gate(Gate.AND, 0, 1)       # unreachable from outputs
+    nl = b.finish([x])
+    ir = lower_netlist(nl, taps={"extra": np.array([dead])})
+    assert ir.n_gates == 2              # tap pins the otherwise-dead gate
+    assert lower_netlist(nl).n_gates == 1
+
+
+def test_argmax_netlist_matches_np_argmax_first_max():
+    rng = np.random.default_rng(1)
+    for n_classes, bits in [(2, 2), (3, 3), (7, 3), (16, 4)]:
+        am = argmax_netlist(n_classes, bits)
+        S = 4096
+        scores = rng.integers(0, 1 << bits, size=(S, n_classes))
+        scores[: S // 8] = scores[0, 0]       # force plenty of ties
+        planes = np.zeros((S, n_classes * bits), np.uint8)
+        for o in range(n_classes):
+            for k in range(bits):
+                planes[:, o * bits + k] = (scores[:, o] >> k) & 1
+        got = am.eval_uint(C.pack_vectors(planes))[:S]
+        assert (got == np.argmax(scores, axis=1)).all()
+
+
+# ---------------------------------------------------------------------------
+# Device program vs Netlist.simulate
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["np", "jax"])
+def test_program_matches_netlist_simulate(backend):
+    rng = np.random.default_rng(2)
+    for _ in range(10):
+        n_in = int(rng.integers(2, 9))
+        nl = _random_netlist(rng, n_in, int(rng.integers(1, 48)), 4)
+        prog = CircuitProgram.from_netlist(nl, backend=backend)
+        packed = C.exhaustive_vectors(n_in)
+        assert (prog.eval_uint(packed) == nl.eval_uint(packed)).all()
+        bits = rng.integers(0, 2, size=(777, n_in)).astype(np.uint8)
+        assert (prog.eval_bits(bits)
+                == nl.eval_uint(C.pack_vectors(bits))[:777]).all()
+
+
+def test_program_property_random_netlists():
+    """Hypothesis sweep: compiled program == Netlist.simulate on random
+    valid netlists (random gates, fan-in, input counts), both backends."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 6), st.integers(0, 24), st.integers(1, 4),
+           st.integers(0, 2 ** 31 - 1))
+    def check(n_in, n_gates, n_out, seed):
+        rng = np.random.default_rng(seed)
+        nl = _random_netlist(rng, n_in, n_gates, n_out)
+        packed = C.exhaustive_vectors(n_in)
+        ref = nl.eval_uint(packed)
+        for backend in ("np", "jax"):
+            prog = CircuitProgram.from_netlist(nl, backend=backend)
+            assert (prog.eval_uint(packed) == ref).all()
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# Classifier acceptance pin: all five Table-2 datasets
+# ---------------------------------------------------------------------------
+def _quick_tnn(dataset: str) -> tuple:
+    ds = make_dataset(dataset)
+    tnn = T.train_tnn(ds, T.TNNTrainConfig(n_hidden=ds.spec.topology[1],
+                                           epochs=2, lr=1e-2))
+    return ds, tnn
+
+
+@pytest.mark.parametrize("dataset", sorted(DATASETS))
+def test_compiled_classifier_bit_identical_per_dataset(dataset):
+    ds, tnn = _quick_tnn(dataset)
+    hidden_nls, out_nls = T.exact_netlists(tnn)
+    xb = np.asarray(abc_binarize(ds.x_test, tnn.thresholds)).astype(np.uint8)
+    ref = T.predict_with_circuits(tnn, xb, hidden_nls, out_nls)
+
+    cc = lower_classifier(tnn, hidden_nls, out_nls)
+    for backend in ("np", "jax"):
+        prog = CircuitProgram.from_classifier(cc, backend=backend)
+        assert (prog.predict_bits(xb) == ref).all(), backend
+    # raw-sensor path applies the same strict-> ABC comparators
+    prog = CircuitProgram.from_classifier(cc)
+    assert (prog.predict(ds.x_test) == ref).all()
+
+    # emitted RTL re-evaluated by the independent reader: >= 10k vectors
+    rng = np.random.default_rng(42)
+    vecs = rng.integers(0, 2, size=(10_048, cc.n_features)).astype(np.uint8)
+    rtl = eval_classifier_verilog(emit_classifier_verilog(cc), vecs)
+    assert (rtl == prog.predict_bits(vecs)).all()
+
+
+def test_compiled_classifier_approximate_netlists():
+    """The compiler must be exact for *approximate* selections too."""
+    ds, tnn = _quick_tnn("cardio")
+    hidden_nls, out_nls = T.exact_netlists(tnn)
+    # swap in truncated popcounts wherever the shape allows
+    for i, (p, n) in enumerate(tnn.hidden_sizes()):
+        if p >= 3 and n >= 1:
+            hidden_nls[i] = C.compose_pcc(
+                C.truncated_popcount_netlist(p, 2), C.popcount_netlist(n), p, n)
+    nnz = max(tnn.out_nnz, 1)
+    if nnz >= 3:
+        out_nls = [C.truncated_popcount_netlist(nnz, 1)] * tnn.w2t.shape[1]
+    xb = np.asarray(abc_binarize(ds.x_test, tnn.thresholds)).astype(np.uint8)
+    ref = T.predict_with_circuits(tnn, xb, hidden_nls, out_nls)
+    cc = lower_classifier(tnn, hidden_nls, out_nls)
+    for backend in ("np", "jax"):
+        prog = CircuitProgram.from_classifier(cc, backend=backend)
+        assert (prog.predict_bits(xb) == ref).all(), backend
+    # scores tap reproduces the argmax decision
+    sc = CircuitProgram.from_classifier(cc, backend="np").scores(xb)
+    assert (np.argmax(sc, axis=1) == ref).all()

@@ -1,0 +1,43 @@
+"""EGFET cost model: printed power-source budget boundaries and
+sensor-interface costs for both converter kinds."""
+import pytest
+
+from repro.hw.egfet import (ABC_AREA_MM2, ABC_POWER_MW, ADC4_AREA_MM2,
+                            ADC4_POWER_MW, HARVESTER_BUDGET_MW,
+                            MOLEX_BATTERY_MW, ZINERGY_BATTERY_MW,
+                            interface_cost, power_source)
+
+
+@pytest.mark.parametrize("power_mw,source", [
+    (0.0, "energy-harvester"),
+    (HARVESTER_BUDGET_MW, "energy-harvester"),          # inclusive boundary
+    (HARVESTER_BUDGET_MW + 1e-9, "zinergy-battery"),
+    (ZINERGY_BATTERY_MW, "zinergy-battery"),            # inclusive boundary
+    (ZINERGY_BATTERY_MW + 1e-9, "molex-battery"),
+    (MOLEX_BATTERY_MW, "molex-battery"),                # inclusive boundary
+    (MOLEX_BATTERY_MW + 1e-9, "exceeds-printed-budget"),
+    (1e6, "exceeds-printed-budget"),
+])
+def test_power_source_budget_boundaries(power_mw, source):
+    assert power_source(power_mw) == source
+
+
+@pytest.mark.parametrize("n", [0, 1, 10, 274])
+def test_interface_cost_scales_per_feature(n):
+    adc = interface_cost(n, "adc4")
+    assert adc.area_mm2 == pytest.approx(ADC4_AREA_MM2 * n)
+    assert adc.power_mw == pytest.approx(ADC4_POWER_MW * n)
+    abc = interface_cost(n, "abc")
+    assert abc.area_mm2 == pytest.approx(ABC_AREA_MM2 * n)
+    assert abc.power_mw == pytest.approx(ABC_POWER_MW * n)
+    if n:
+        # the whole point of the paper's ABC: orders of magnitude cheaper
+        assert abc.area_mm2 < adc.area_mm2 / 100
+        assert abc.power_mw < adc.power_mw / 30
+
+
+def test_interface_cost_unknown_kind_raises():
+    with pytest.raises(ValueError, match="unknown interface kind"):
+        interface_cost(10, "dac")
+    with pytest.raises(ValueError, match="unknown interface kind"):
+        interface_cost(10, "ABC")     # kinds are case-sensitive

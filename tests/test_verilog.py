@@ -1,0 +1,106 @@
+"""Verilog backend: emitter/reader roundtrips on real circuit families,
+module deduplication, reader strictness, and the EGFET report."""
+import numpy as np
+import pytest
+
+from repro.core import circuits as C
+from repro.core import tnn as T
+from repro.compile import (CircuitProgram, argmax_netlist, egfet_report,
+                           emit_classifier_verilog, emit_netlist_module,
+                           lower_classifier, write_artifacts)
+from repro.compile.vread import (VerilogDesign, VerilogError,
+                                 eval_classifier_verilog)
+
+
+def _roundtrip(nl: C.Netlist, n_in: int):
+    design = VerilogDesign.parse(emit_netlist_module(nl, "dut"))
+    vecs = ((np.arange(1 << n_in)[:, None] >> np.arange(n_in)[None, :]) & 1
+            ).astype(np.uint8)
+    got = design.eval_uint("dut", vecs)
+    ref = nl.eval_uint(C.exhaustive_vectors(n_in))[: 1 << n_in]
+    assert (got == ref).all()
+
+
+@pytest.mark.parametrize("n", [1, 3, 6, 9])
+def test_popcount_module_roundtrip(n):
+    _roundtrip(C.popcount_netlist(n), n)
+
+
+def test_truncated_and_pcc_and_comparator_roundtrip():
+    _roundtrip(C.truncated_popcount_netlist(6, 3), 6)
+    _roundtrip(C.compose_pcc(C.popcount_netlist(4),
+                             C.truncated_popcount_netlist(5, 2), 4, 5), 9)
+    _roundtrip(C.comparator_geq_netlist(3), 6)
+    _roundtrip(argmax_netlist(3, 2), 6)
+
+
+def _toy_classifier(seed=0, F=6, H=4, Cc=3):
+    rng = np.random.default_rng(seed)
+    w1t = rng.integers(-1, 2, size=(F, H)).astype(np.int8)
+    w2t = T.balance_zero_counts(rng.normal(size=(H, Cc)), 1 / 3)
+    tnn = T.TrainedTNN(w1t=w1t, w2t=w2t, thresholds=np.full(F, 0.5),
+                       train_acc=0.0, test_acc=0.0, name="toy")
+    return tnn, lower_classifier(tnn, *T.exact_netlists(tnn))
+
+
+def test_classifier_verilog_matches_program():
+    _, cc = _toy_classifier()
+    text = emit_classifier_verilog(cc)
+    rng = np.random.default_rng(1)
+    vecs = rng.integers(0, 2, size=(3000, cc.n_features)).astype(np.uint8)
+    prog = CircuitProgram.from_classifier(cc, backend="np")
+    assert (eval_classifier_verilog(text, vecs) == prog.predict_bits(vecs)).all()
+
+
+def test_identical_netlists_share_one_module():
+    """Content-addressed dedup: C identical output popcounts -> 1 module."""
+    tnn, cc = _toy_classifier(seed=3)
+    text = emit_classifier_verilog(cc)
+    n_out_mods = sum(1 for nl in cc.out_nls)
+    assert n_out_mods == cc.n_classes
+    # modules: distinct hidden PCCs + ONE shared output PC + argmax + top
+    distinct_hidden = {(nl.n_inputs, nl.op.tobytes(), nl.in0.tobytes(),
+                        nl.in1.tobytes(), nl.outputs.tobytes())
+                       for nl in cc.hidden_nls}
+    n_modules = text.count("\nmodule ") + text.startswith("module ")
+    assert n_modules <= len(distinct_hidden) + 1 + 1 + 1
+
+
+def test_reader_rejects_malformed():
+    with pytest.raises(VerilogError):
+        VerilogDesign.parse("module m (input x0, output y0); assign y0 = ; endmodule")
+    with pytest.raises(VerilogError):   # undefined signal
+        VerilogDesign.parse(
+            "module m (input x0, output y0);\n  assign y0 = ghost;\nendmodule"
+        ).evaluate("m", {"x0": np.zeros(1, np.uint64)})
+    with pytest.raises(VerilogError):   # mixed operators without parens
+        VerilogDesign.parse(
+            "module m (input x0, input x1, input x2, output y0);\n"
+            "  assign y0 = x0 & x1 | x2;\nendmodule")
+    with pytest.raises(VerilogError):   # double driver
+        VerilogDesign.parse(
+            "module m (input x0, output y0);\n  wire w;\n"
+            "  assign w = x0;\n  assign w = ~x0;\n  assign y0 = w;\nendmodule"
+        ).evaluate("m", {"x0": np.zeros(1, np.uint64)})
+
+
+def test_egfet_report_totals_and_artifacts(tmp_path):
+    _, cc = _toy_classifier()
+    rep = egfet_report(cc, interface="abc")
+    assert rep["total_area_mm2"] == pytest.approx(
+        rep["core_area_mm2"] + rep["interface_area_mm2"], abs=1e-3)
+    assert rep["total_power_mw"] == pytest.approx(
+        rep["core_power_mw"] + rep["interface_power_mw"], abs=1e-4)
+    assert rep["n_gates"] == cc.ir.n_gates
+    assert sum(rep["gates"].values()) == cc.ir.n_gates
+    assert rep["power_source"] in ("energy-harvester", "zinergy-battery",
+                                   "molex-battery", "exceeds-printed-budget")
+    # no-interface report drops the interface contribution
+    rep0 = egfet_report(cc, interface=None)
+    assert rep0["total_area_mm2"] == pytest.approx(rep0["core_area_mm2"])
+
+    paths = write_artifacts(cc, tmp_path, base="toy")
+    vtext = open(paths["verilog"]).read()
+    assert "module tnn_classifier" in vtext
+    import json
+    assert json.load(open(paths["report"]))["n_gates"] == cc.ir.n_gates
