@@ -1,0 +1,126 @@
+"""Campaign fitness-eval throughput: np vs SWAR (PR 1 baseline) vs Pallas.
+
+Two workload shapes, both measured as fitness evaluations per second:
+
+  * ``circuit``  — raw population x packed-word gate simulation (the CGP
+    mutant workload of BENCH_cgp.json) through `repro.evolve.evaluator`'s
+    three backends.  ``swar`` is the PR 1 `lax.scan` device path — the
+    baseline the acceptance criterion names; ``pallas`` is the new kernel
+    (compiled on TPU, interpret-mode on this CPU container, where the scan
+    remains the fastest device path — the JSON records both honestly).
+  * ``tnn_objective`` — the real campaign objective: full population NSGA-II
+    fitness (hidden-gene gathers + output-plane gate sim + argmax accuracy)
+    for a Table-2 problem, per eval backend.
+  * ``campaign`` — end-to-end island-campaign wall clock on the synthetic
+    problem: generations/s including migration, archive folding and
+    checkpointing.
+
+Run directly to (re)generate the committed artifact:
+
+    PYTHONPATH=src python -m benchmarks.evolve_campaign [BENCH_evolve.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK
+from benchmarks.cgp_throughput import _mutant_population, _time
+from repro.core.cgp import _population_of
+from repro.core.circuits import eval_vectors
+from repro.evolve import Campaign, CampaignConfig, build_synth_problem
+from repro.evolve.evaluator import BACKENDS, population_pc_errors
+
+
+def measure_circuit(n: int, lam: int, reps: int, seed: int = 0) -> dict:
+    pop = _population_of(_mutant_population(n, lam, seed))
+    packed, true = eval_vectors(n)
+    row = {"bench": "evolve_eval", "n": n, "lam": lam}
+    for backend in BACKENDS:
+        def run(b=backend):
+            mae, _ = population_pc_errors(pop, packed, true, backend=b)
+            np.asarray(mae)
+        row[f"{backend}_evals_per_s"] = round(lam / _time(run, reps), 1)
+    row["pallas_vs_swar"] = round(row["pallas_evals_per_s"]
+                                  / row["swar_evals_per_s"], 3)
+    return row
+
+
+def measure_tnn_objective(dataset: str, pop_size: int, reps: int) -> dict:
+    from repro.evolve.problems import build_tnn_problem
+    prob = build_tnn_problem(dataset, epochs=4 if QUICK else 12,
+                             cgp_iters=60 if QUICK else 500,
+                             pcc_samples=4000 if QUICK else 30000)
+    rng = np.random.default_rng(0)
+    pop = np.stack([rng.integers(0, prob.domains) for _ in range(pop_size)])
+    row = {"bench": "evolve_tnn_objective", "dataset": dataset,
+           "pop": pop_size, "n_genes": int(prob.domains.shape[0])}
+    for backend in BACKENDS:
+        prob.approx.eval_backend = backend
+        row[f"{backend}_evals_per_s"] = round(
+            pop_size / _time(lambda: prob.objective(pop), reps), 1)
+    row["pallas_vs_swar"] = round(row["pallas_evals_per_s"]
+                                  / row["swar_evals_per_s"], 3)
+    return row
+
+
+def measure_campaign(reps: int) -> dict:
+    p = build_synth_problem()
+    cfg = CampaignConfig(n_islands=4, pop_size=16, n_epochs=4,
+                         gens_per_epoch=4, migrate_k=2, seed=0)
+
+    def run():
+        with tempfile.TemporaryDirectory() as d:
+            Campaign(p.domains, p.objective, cfg, checkpoint_dir=d,
+                     name=p.name).run()
+
+    t = _time(run, reps)
+    gens = cfg.n_islands * cfg.total_generations
+    return {"bench": "evolve_campaign", "islands": cfg.n_islands,
+            "pop": cfg.pop_size, "generations": gens,
+            "wall_s": round(t, 3), "gens_per_s": round(gens / t, 1),
+            "fitness_evals_per_s": round(
+                gens * cfg.pop_size / t, 1)}
+
+
+def run(combos=None) -> list[dict]:
+    reps = 3 if QUICK else 10
+    combos = combos or ([(8, 32), (12, 32)] if QUICK
+                        else [(8, 16), (8, 32), (8, 64), (12, 32)])
+    rows = [measure_circuit(n, lam, reps) for (n, lam) in combos]
+    rows.append(measure_tnn_objective("breast_cancer", 24, reps))
+    rows.append(measure_campaign(max(1, reps // 3)))
+    return rows
+
+
+def main(out_path: str = "BENCH_evolve.json") -> None:
+    t0 = time.perf_counter()
+    rows = run()
+    payload = {
+        "bench": "evolve_campaign",
+        "note": "campaign fitness evals/s: np (NetlistPopulation) vs swar "
+                "(PR 1 lax.scan baseline) vs pallas "
+                "(kernels.pallas_circuit_sim; interpret-mode on CPU, "
+                "compiled on TPU), plus end-to-end island-campaign rate",
+        "backend": "cpu-interpret" if _cpu() else "tpu",
+        "rows": rows,
+        "wall_s": round(time.perf_counter() - t0, 1),
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    for r in rows:
+        print(r)
+    print(f"wrote {out_path}")
+
+
+def _cpu() -> bool:
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_evolve.json")

@@ -26,6 +26,7 @@ BENCH_MODULES = {
     "roofline": "benchmarks.roofline_bench",
     "cgp": "benchmarks.cgp_throughput",
     "serve": "benchmarks.serve_throughput",
+    "evolve": "benchmarks.evolve_campaign",
 }
 BENCHES = list(BENCH_MODULES)
 

@@ -4,6 +4,9 @@ followed by the deployment path the evolved winner actually ships through.
 Phase 1 — CGP evolves approximate popcount circuits per size.
 Phase 2 — Pareto-optimal popcount-compare combinations (distance metric D).
 Phase 3 — NSGA-II assigns approximate units per neuron: area vs accuracy.
+          With --campaign the single NSGA-II run becomes a resumable
+          island-model campaign (repro.evolve): independent islands with
+          ring migration of Pareto elites, checkpointed every epoch.
 Phase 4 — compile: the chosen Pareto design is lowered to one levelized
           gate IR, emitted as structural Verilog + EGFET report
           (artifacts/), and served as a batched sensor stream through the
@@ -15,8 +18,9 @@ schedule's independent runs share a thread pool, and the PCC library
 evaluates each candidate circuit once over a shared sample domain.
 
 Run:  PYTHONPATH=src python examples/evolve_approx_tnn.py [dataset]
+      PYTHONPATH=src python examples/evolve_approx_tnn.py cardio \
+          --campaign [--islands 4] [--ckpt-dir runs/cardio]
 """
-import sys
 import time
 
 import numpy as np
@@ -32,7 +36,8 @@ from repro.compile import CircuitProgram, egfet_report, lower_classifier, \
 from repro.serving.circuit_engine import CircuitServingEngine
 
 
-def main(dataset: str = "cardio") -> None:
+def main(dataset: str = "cardio", campaign: bool = False, islands: int = 4,
+         ckpt_dir: str | None = None) -> None:
     ds = make_dataset(dataset)
     tnn = T.train_tnn(ds, T.TNNTrainConfig(
         n_hidden=ds.spec.topology[1], epochs=12, lr=1e-2))
@@ -67,14 +72,32 @@ def main(dataset: str = "cardio") -> None:
     xb_te = np.asarray(abc_binarize(ds.x_test, tnn.thresholds))
     prob = T.TNNApproxProblem(tnn=tnn, pcc_lib=pcc_lib, pc_out_lib=pc_out,
                               xbin=xb_tr, y=ds.y_train)
-    res = prob.optimize(NSGA2Config(pop_size=24, n_generations=40, seed=0))
+    if campaign:
+        from repro.evolve import Campaign, CampaignConfig
+        seed_pop = np.zeros((1, prob.n_genes), dtype=np.int64)
+        cfg = CampaignConfig(n_islands=islands, pop_size=24, n_epochs=8,
+                             gens_per_epoch=5, migrate_k=2, seed=0)
+        camp = Campaign(prob.domains(), prob.objective, cfg,
+                        checkpoint_dir=ckpt_dir, seed_population=seed_pop,
+                        name=f"tnn_{dataset}")
+        cres = camp.run()
+        if cres.resumed_from is not None:
+            print(f"[phase3] resumed campaign from epoch "
+                  f"{cres.resumed_from} checkpoint")
+        pareto_x, pareto_f = cres.archive_x, cres.archive_f
+        print(f"[phase3] island campaign: {islands} islands x "
+              f"{cfg.total_generations} gens, archive {len(pareto_x)}")
+    else:
+        res = prob.optimize(NSGA2Config(pop_size=24, n_generations=40,
+                                        seed=0))
+        pareto_x, pareto_f = res.pareto_x, res.pareto_f
 
     hx, ox = T.exact_netlists(tnn)
     exact_area = T.tnn_hw_cost(tnn, hx, ox, interface=None).area_mm2
-    print(f"[phase3] Pareto front ({len(res.pareto_x)} designs, "
+    print(f"[phase3] Pareto front ({len(pareto_x)} designs, "
           f"exact area {exact_area/100:.3f} cm^2):")
     best = None   # highest test accuracy, ties broken by smaller area
-    for x, f in zip(res.pareto_x, res.pareto_f):
+    for x, f in zip(pareto_x, pareto_f):
         hnl, onl = prob.decode(x)
         acc = float((T.predict_with_circuits(tnn, xb_te, hnl, onl)
                      == ds.y_test).mean())
@@ -106,4 +129,13 @@ def main(dataset: str = "cardio") -> None:
 
 
 if __name__ == "__main__":
-    main(sys.argv[1] if len(sys.argv) > 1 else "cardio")
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dataset", nargs="?", default="cardio")
+    ap.add_argument("--campaign", action="store_true",
+                    help="run Phase 3 as a resumable island-model campaign")
+    ap.add_argument("--islands", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default=None)
+    a = ap.parse_args()
+    main(a.dataset, campaign=a.campaign, islands=a.islands,
+         ckpt_dir=a.ckpt_dir)

@@ -1,8 +1,15 @@
-"""Checkpointing: atomic, retained, background-capable, elastic.
+"""Checkpointing: atomic, validated, retained, background-capable, elastic.
 
 Design (DESIGN.md §6):
-  * atomicity  — write into `<dir>/.tmp-<step>` then `os.rename` to
-    `<dir>/step_<N>`; a crash mid-save never corrupts the latest checkpoint;
+  * atomicity  — write into `<dir>/.tmp-<step>`, fsync every file, then
+    `os.rename` to `<dir>/step_<N>` (atomic on POSIX); a crash mid-save
+    never corrupts the latest checkpoint;
+  * validation — the manifest records a sha256 of the leaf payload, written
+    *after* the payload is durable; `restore()` verifies it, and a snapshot
+    truncated or bit-flipped mid-write is detected instead of half-loaded.
+    With `step=None` restore walks newest -> oldest and transparently falls
+    back to the most recent *valid* snapshot (the SIGKILL-mid-save story for
+    `repro.evolve` campaign resume);
   * manifest   — msgpack with step, leaf paths, shapes, dtypes; leaves are
     stored in a single .npz keyed by leaf index (paths recorded for safety);
   * retention  — keep the most recent `keep` checkpoints;
@@ -12,6 +19,10 @@ Design (DESIGN.md §6):
   * elasticity — `restore(template, mesh, specs)` re-device_puts every leaf
     with the *current* mesh's NamedSharding: a job restarted on a different
     topology reshards transparently (logical arrays are global).
+    `restore(..., to_device=False)` keeps leaves as host numpy arrays with
+    their exact saved dtypes — required for bit-identical resume of int64 /
+    float64 search state, which `jnp.asarray` would silently narrow under
+    JAX's default x64-disabled config.
 
 Single-process container note: arrays are gathered to host before writing.
 On a real multi-host pod this becomes per-host shard files keyed by
@@ -20,6 +31,7 @@ needed; the gather/scatter is the only host-local piece.
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import re
 import shutil
@@ -32,6 +44,10 @@ import msgpack
 import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A specific requested snapshot failed validation."""
 
 
 def _leaf_paths(tree: Any) -> list[str]:
@@ -93,15 +109,57 @@ class CheckpointManager:
             shutil.rmtree(tmp)
         os.makedirs(tmp)
         # store raw bytes: npz cannot roundtrip ml_dtypes (bfloat16 etc.)
-        np.savez(os.path.join(tmp, "leaves.npz"),
-                 **{f"leaf_{i}": np.ascontiguousarray(a).view(np.uint8)
-                    for i, a in enumerate(host_leaves)})
+        leaves_path = os.path.join(tmp, "leaves.npz")
+        with open(leaves_path, "wb") as f:
+            np.savez(f, **{f"leaf_{i}": np.ascontiguousarray(a).view(np.uint8)
+                           for i, a in enumerate(host_leaves)})
+            f.flush()
+            os.fsync(f.fileno())
+        with open(leaves_path, "rb") as f:
+            manifest["leaves_sha256"] = hashlib.sha256(f.read()).hexdigest()
+        # manifest lands only after the payload it vouches for is durable
         with open(os.path.join(tmp, "MANIFEST.msgpack"), "wb") as f:
             f.write(msgpack.packb(manifest))
+            f.flush()
+            os.fsync(f.fileno())
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
+        try:
+            dfd = os.open(self.dir, os.O_RDONLY)
+            try:
+                os.fsync(dfd)                      # persist the rename itself
+            finally:
+                os.close(dfd)
+        except OSError:
+            pass
         self._retain()
+
+    # -- validation ----------------------------------------------------------
+    def validate(self, step: int) -> bool:
+        """True iff snapshot `step` is complete and passes its checksum."""
+        d = os.path.join(self.dir, f"step_{step}")
+        try:
+            with open(os.path.join(d, "MANIFEST.msgpack"), "rb") as f:
+                manifest = msgpack.unpackb(f.read())
+            with open(os.path.join(d, "leaves.npz"), "rb") as f:
+                payload = f.read()
+            want = manifest.get("leaves_sha256")
+            if want is not None:
+                if hashlib.sha256(payload).hexdigest() != want:
+                    return False
+            else:
+                # pre-checksum snapshot: at least require a loadable archive
+                np.load(os.path.join(d, "leaves.npz")).close()
+            return True
+        except Exception:   # noqa: BLE001 — any decode failure is "invalid"
+            return False
+
+    def latest_valid_step(self) -> int | None:
+        for s in reversed(self.all_steps()):
+            if self.validate(s):
+                return s
+        return None
 
     def _retain(self) -> None:
         steps = self.all_steps()
@@ -110,14 +168,26 @@ class CheckpointManager:
 
     # -- restore ---------------------------------------------------------------
     def restore(self, template: Any, step: int | None = None,
-                mesh=None, specs: Any = None) -> tuple[int, Any, dict]:
+                mesh=None, specs: Any = None,
+                to_device: bool = True) -> tuple[int, Any, dict]:
         """Restore into the structure of `template` (abstract or concrete).
 
         With (mesh, specs): every leaf is device_put with the current mesh's
-        NamedSharding — elastic resharding across topologies."""
-        step = step if step is not None else self.latest_step()
+        NamedSharding — elastic resharding across topologies.  `step=None`
+        picks the newest snapshot that passes validation (a truncated or
+        corrupt latest snapshot is skipped, falling back to its predecessor);
+        an explicit `step` that fails validation raises
+        `CheckpointCorruptError`.  `to_device=False` returns host numpy
+        arrays with the exact saved dtypes (no jnp narrowing)."""
         if step is None:
-            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+            step = self.latest_valid_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no valid checkpoints under {self.dir}")
+        elif not self.validate(step):
+            raise CheckpointCorruptError(
+                f"checkpoint step {step} under {self.dir} is missing or "
+                "fails its checksum")
         d = os.path.join(self.dir, f"step_{step}")
         with open(os.path.join(d, "MANIFEST.msgpack"), "rb") as f:
             manifest = msgpack.unpackb(f.read())
@@ -149,7 +219,9 @@ class CheckpointManager:
             if mesh is not None and sp is not None:
                 out.append(jax.device_put(
                     arr, jax.sharding.NamedSharding(mesh, sp)))
-            else:
+            elif to_device:
                 out.append(jnp.asarray(arr))
+            else:
+                out.append(np.asarray(arr))
         return int(manifest["step"]), jax.tree_util.tree_unflatten(treedef, out), \
             manifest.get("extra", {})

@@ -439,6 +439,37 @@ class NetlistPopulation:
                          for p in range(self.size)])
 
 
+FUZZ_OPS: tuple[int, ...] = tuple(int(g) for g in Gate if g != Gate.INPUT)
+# INPUT is a placeholder opcode (never emitted by builders or CGP); the
+# serial `Netlist.simulate` rejects it, so differential fuzzing excludes it.
+
+
+def random_netlist_population(rng: np.random.Generator, n_inputs: int,
+                              n_gates: int, n_outputs: int, size: int
+                              ) -> NetlistPopulation:
+    """`size` random feed-forward same-shape netlists (conformance fuzzing).
+
+    Operand ids respect the DAG constraint (gate g reads ids < n_inputs + g);
+    opcodes are drawn uniformly from the full simulate-able gate set, output
+    taps uniformly over all nodes — the adversarial shape for evaluator
+    conformance, covering dead gates, const-only cones, repeated taps and
+    input-passthrough outputs that structured CGP genomes rarely produce.
+    """
+    if n_outputs > 8:
+        raise ValueError("fuzz populations keep n_outputs <= 8 (u8 decode)")
+    op = rng.choice(np.array(FUZZ_OPS, dtype=np.int16),
+                    size=(size, n_gates)).astype(np.int16)
+    hi = n_inputs + np.arange(n_gates)
+    in0 = rng.integers(0, hi[None, :], size=(size, n_gates)).astype(np.int32)
+    in1 = rng.integers(0, hi[None, :], size=(size, n_gates)).astype(np.int32)
+    outputs = rng.integers(0, n_inputs + n_gates,
+                           size=(size, n_outputs)).astype(np.int32)
+    pop = NetlistPopulation(n_inputs, op, in0, in1, outputs)
+    for p in range(size):
+        pop.netlist(p)        # validates feed-forwardness per row
+    return pop
+
+
 # ---------------------------------------------------------------------------
 # Builders
 # ---------------------------------------------------------------------------

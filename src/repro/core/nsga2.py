@@ -10,6 +10,16 @@ to integers (value rounded + clipped to the per-gene domain).
 This module is problem-agnostic: `nsga2(...)` takes per-gene domain sizes and
 a vectorized objective callback, so tests can drive it on synthetic problems
 and `core.tnn` uses it for the real TNN integration.
+
+Stepwise API
+------------
+`NSGA2Driver` exposes the same algorithm one generation at a time over an
+explicit `NSGA2State` (population, objectives, generation counter, RNG).
+Everything the next generation depends on lives in the state, so a driver
+rebuilt in a fresh process from a checkpointed state continues the *exact*
+generation sequence — the substrate for `repro.evolve`'s resumable
+island-model campaigns.  `nsga2()` is now a thin wrapper over the driver and
+produces bit-identical results to the original monolithic loop.
 """
 from __future__ import annotations
 
@@ -144,38 +154,124 @@ def _memoized(objective: Callable[[np.ndarray], np.ndarray]
     return evaluate
 
 
-def nsga2(domains: np.ndarray,
-          objective: Callable[[np.ndarray], np.ndarray],
-          cfg: NSGA2Config,
-          seed_population: np.ndarray | None = None) -> NSGA2Result:
-    """Minimize a 2-objective function over integer chromosomes.
+# ---------------------------------------------------------------------------
+# Stepwise (resumable) API
+# ---------------------------------------------------------------------------
+def encode_rng_state(rng: np.random.Generator) -> dict:
+    """Serialize a Generator's bit-generator state to msgpack-safe types.
 
-    domains:  (n_genes,) number of choices per gene (gene i in [0, domains[i})).
-    objective: (N, n_genes) int -> (N, 2) float, both minimized; rows must be
-        independent (the population-parallel fitness contract), which lets
-        duplicate chromosomes be served from a cache (`cfg.dedup_eval`).
-    seed_population: optional known-good individuals (e.g. the all-exact TNN).
+    PCG64 carries 128-bit integers, which overflow msgpack's int64 — encode
+    every int as a hex string and restore with `decode_rng_state`.
     """
-    rng = np.random.default_rng(cfg.seed)
-    n_genes = domains.shape[0]
-    mut_prob = cfg.mutation_prob if cfg.mutation_prob is not None else 1.0 / max(1, n_genes)
-    evaluate = _memoized(objective) if cfg.dedup_eval else objective
+    def enc(v):
+        if isinstance(v, dict):
+            return {k: enc(x) for k, x in v.items()}
+        if isinstance(v, (int, np.integer)):
+            return f"0x{int(v):x}"
+        return v
 
-    pop = rng.integers(0, domains[None, :], size=(cfg.pop_size, n_genes))
-    if seed_population is not None:
-        k = min(seed_population.shape[0], cfg.pop_size)
-        pop[:k] = seed_population[:k]
-    F = evaluate(pop)
+    return enc(rng.bit_generator.state)
 
-    history: list[tuple[int, float, float]] = []
-    for gen in range(cfg.n_generations):
+
+def decode_rng_state(state: dict) -> np.random.Generator:
+    """Inverse of `encode_rng_state`: rebuild a Generator mid-stream."""
+    def dec(v):
+        if isinstance(v, dict):
+            return {k: dec(x) for k, x in v.items()}
+        if isinstance(v, str) and v.startswith("0x"):
+            return int(v, 16)
+        return v
+
+    decoded = dec(state)
+    bg = getattr(np.random, decoded["bit_generator"])()
+    bg.state = decoded
+    return np.random.Generator(bg)
+
+
+@dataclass
+class NSGA2State:
+    """Everything generation g+1 depends on.  Checkpoint `pop`/`F` as arrays
+    and the RNG via `encode_rng_state` for bit-identical resume."""
+
+    pop: np.ndarray          # (pop_size, n_genes) int chromosomes
+    F: np.ndarray            # (pop_size, 2) float objectives
+    generation: int
+    rng: np.random.Generator
+    history: list[tuple[int, float, float]] = field(default_factory=list)
+
+
+def extract_front(pop: np.ndarray, F: np.ndarray
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Current Pareto front, deduped by objectives and sorted by obj0."""
+    fronts = fast_non_dominated_sort(F)
+    fr0 = fronts[0]
+    # dedupe identical objective rows for a clean reported front
+    _, uniq = np.unique(np.round(F[fr0], 10), axis=0, return_index=True)
+    sel = fr0[np.sort(uniq)]
+    order = np.argsort(F[sel, 0], kind="stable")
+    return pop[sel[order]], F[sel[order]]
+
+
+class NSGA2Driver:
+    """One NSGA-II problem instance, advanced one generation at a time.
+
+    The evaluator (with its dedup cache) lives on the driver, not the state:
+    the cache is a pure memoization of a row-independent objective, so a
+    resumed driver with a cold cache replays the identical trajectory.
+    `on_generation(state)` fires after each completed generation — the
+    archive hook used by `repro.evolve` to fold island fronts into a global
+    Pareto archive without re-evaluating anything.
+    """
+
+    def __init__(self, domains: np.ndarray,
+                 objective: Callable[[np.ndarray], np.ndarray],
+                 cfg: NSGA2Config,
+                 evaluate: Callable[[np.ndarray], np.ndarray] | None = None,
+                 on_generation: Callable[["NSGA2State"], None] | None = None):
+        self.domains = np.asarray(domains)
+        self.cfg = cfg
+        self.n_genes = int(self.domains.shape[0])
+        self.mut_prob = (cfg.mutation_prob if cfg.mutation_prob is not None
+                         else 1.0 / max(1, self.n_genes))
+        self.evaluate = (evaluate if evaluate is not None
+                         else (_memoized(objective) if cfg.dedup_eval
+                               else objective))
+        self.on_generation = on_generation
+
+    # -- lifecycle -----------------------------------------------------------
+    def init_state(self, seed_population: np.ndarray | None = None
+                   ) -> NSGA2State:
+        rng = np.random.default_rng(self.cfg.seed)
+        pop = rng.integers(0, self.domains[None, :],
+                           size=(self.cfg.pop_size, self.n_genes))
+        if seed_population is not None:
+            k = min(seed_population.shape[0], self.cfg.pop_size)
+            pop[:k] = seed_population[:k]
+        return NSGA2State(pop=pop, F=self.evaluate(pop), generation=0, rng=rng)
+
+    def restore_state(self, pop: np.ndarray, F: np.ndarray, generation: int,
+                      rng_state: dict,
+                      history: list[tuple[int, float, float]] | None = None
+                      ) -> NSGA2State:
+        """Rebuild a state from checkpointed pieces (RNG mid-stream)."""
+        return NSGA2State(pop=np.asarray(pop, dtype=np.int64),
+                          F=np.asarray(F, dtype=np.float64),
+                          generation=int(generation),
+                          rng=decode_rng_state(rng_state),
+                          history=list(history or []))
+
+    # -- one generation ------------------------------------------------------
+    def step(self, state: NSGA2State) -> NSGA2State:
+        cfg, domains, rng = self.cfg, self.domains, state.rng
+        pop, F = state.pop, state.F
         fronts = fast_non_dominated_sort(F)
         rank = np.empty(cfg.pop_size, dtype=np.int64)
         crowd = np.empty(cfg.pop_size)
         for r, fr in enumerate(fronts):
             rank[fr] = r
             crowd[fr] = crowding_distance(F[fr])
-        history.append((gen, float(F[fronts[0], 0].min()), float(F[fronts[0], 1].min())))
+        state.history.append((state.generation, float(F[fronts[0], 0].min()),
+                              float(F[fronts[0], 1].min())))
 
         children = []
         while len(children) < cfg.pop_size:
@@ -183,11 +279,13 @@ def nsga2(domains: np.ndarray,
             i2 = _tournament(rank, crowd, rng)
             c1, c2 = _sbx_int(pop[i1], pop[i2], domains, cfg.crossover_eta,
                               cfg.crossover_prob, rng)
-            children.append(_poly_mutate_int(c1, domains, cfg.mutation_eta, mut_prob, rng))
+            children.append(_poly_mutate_int(c1, domains, cfg.mutation_eta,
+                                             self.mut_prob, rng))
             if len(children) < cfg.pop_size:
-                children.append(_poly_mutate_int(c2, domains, cfg.mutation_eta, mut_prob, rng))
+                children.append(_poly_mutate_int(c2, domains, cfg.mutation_eta,
+                                                 self.mut_prob, rng))
         Q = np.stack(children)
-        FQ = evaluate(Q)
+        FQ = self.evaluate(Q)
 
         R = np.concatenate([pop, Q], axis=0)
         FR = np.concatenate([F, FQ], axis=0)
@@ -202,12 +300,31 @@ def nsga2(domains: np.ndarray,
                 need = cfg.pop_size - len(new_idx)
                 new_idx.extend(fr[order[:need]].tolist())
                 break
-        pop, F = R[new_idx], FR[new_idx]
+        state.pop, state.F = R[new_idx], FR[new_idx]
+        state.generation += 1
+        if self.on_generation is not None:
+            self.on_generation(state)
+        return state
 
-    fronts = fast_non_dominated_sort(F)
-    fr0 = fronts[0]
-    # dedupe identical objective rows for a clean reported front
-    _, uniq = np.unique(np.round(F[fr0], 10), axis=0, return_index=True)
-    sel = fr0[np.sort(uniq)]
-    order = np.argsort(F[sel, 0], kind="stable")
-    return NSGA2Result(pareto_x=pop[sel[order]], pareto_f=F[sel[order]], history=history)
+    def result(self, state: NSGA2State) -> NSGA2Result:
+        px, pf = extract_front(state.pop, state.F)
+        return NSGA2Result(pareto_x=px, pareto_f=pf, history=state.history)
+
+
+def nsga2(domains: np.ndarray,
+          objective: Callable[[np.ndarray], np.ndarray],
+          cfg: NSGA2Config,
+          seed_population: np.ndarray | None = None) -> NSGA2Result:
+    """Minimize a 2-objective function over integer chromosomes.
+
+    domains:  (n_genes,) number of choices per gene (gene i in [0, domains[i})).
+    objective: (N, n_genes) int -> (N, 2) float, both minimized; rows must be
+        independent (the population-parallel fitness contract), which lets
+        duplicate chromosomes be served from a cache (`cfg.dedup_eval`).
+    seed_population: optional known-good individuals (e.g. the all-exact TNN).
+    """
+    driver = NSGA2Driver(domains, objective, cfg)
+    state = driver.init_state(seed_population)
+    for _ in range(cfg.n_generations):
+        state = driver.step(state)
+    return driver.result(state)

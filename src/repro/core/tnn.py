@@ -306,6 +306,11 @@ class TNNApproxProblem:
     pc_out_lib: list[C.Netlist]
     xbin: np.ndarray
     y: np.ndarray
+    # gate-simulation executor for the population-batched output plane:
+    # "np" (NetlistPopulation reference), "swar" (lax.scan uint32 twin) or
+    # "pallas" (kernels.pallas_circuit_sim) — all bit-identical, see
+    # kernels.dispatch / tests/test_conformance.py
+    eval_backend: str = "np"
     # derived
     hidden_idx: list[int] = field(default_factory=list)     # non-degenerate neurons
     hidden_cands: list[list[PCCEntry]] = field(default_factory=list)
@@ -429,7 +434,13 @@ class TNNApproxProblem:
                 scores[:, :, o] = 0
                 continue
             packed = C.pack_vectors(bits)                        # (P, nnz, W)
-            scores[:, :, o] = self._out_pop.take(k).eval_uint(packed)[:, :S]
+            sub = self._out_pop.take(k)
+            if self.eval_backend == "np":
+                scores[:, :, o] = sub.eval_uint(packed)[:, :S]
+            else:
+                from repro.kernels.dispatch import population_eval_pop
+                scores[:, :, o] = population_eval_pop(
+                    sub, packed, backend=self.eval_backend)[:, :S]
         acc = (np.argmax(scores, axis=2) == self.y[None, :]).mean(axis=1)
         return np.stack([1.0 - acc, est], axis=1)
 

@@ -1,0 +1,21 @@
+"""repro.evolve — resumable island-model evolution campaigns.
+
+`Campaign` runs N independent NSGA-II islands over one shared memoized
+objective with periodic ring migration of Pareto elites, checkpointing the
+full search state (populations, objectives, archive, RNG streams) every
+epoch through `repro.checkpoint` — a killed campaign resumes to a
+bit-identical Pareto front.  `repro.evolve.evaluator` dispatches the hot
+population x packed-word gate simulation across the np / SWAR / Pallas
+backends, sharded over local devices.
+
+CLI:  python -m repro.evolve --problem tnn --dataset cardio ...
+"""
+from repro.evolve.campaign import Campaign, CampaignResult  # noqa: F401
+from repro.evolve.config import CampaignConfig  # noqa: F401
+from repro.evolve.islands import ParetoArchive, migrate_ring  # noqa: F401
+from repro.evolve.problems import (  # noqa: F401
+    CampaignProblem,
+    build_synth_problem,
+    build_tnn_problem,
+    compile_archive_winner,
+)

@@ -1,0 +1,198 @@
+"""Resumable island-model NSGA-II campaigns.
+
+A `Campaign` owns `n_islands` stepwise `NSGA2Driver`s over one shared
+(memoized) objective, a global `ParetoArchive`, and a `CheckpointManager`.
+Execution is epoch-structured:
+
+    epoch e:  every island advances `gens_per_epoch` generations
+              -> island fronts fold into the archive
+              -> ring migration of `migrate_k` front elites
+              -> checkpoint (island pops/objectives + archive as arrays,
+                 RNG streams + epoch counter in the manifest extra)
+
+`run()` first tries to resume: if the checkpoint directory holds a valid
+snapshot for this config, populations, archive, histories and mid-stream
+RNG states are restored and the loop continues at the next epoch — a
+campaign SIGKILLed between generations replays to a bit-identical final
+Pareto front versus an uninterrupted run (pinned by tests/test_evolve.py).
+A snapshot truncated by the kill is detected by its checksum and the
+previous epoch's snapshot loads instead (`checkpoint.manager`).
+
+The fitness dedup cache is shared across islands: chromosomes are evaluated
+once per campaign process no matter how many islands revisit them.  The
+cache is pure memoization of a row-independent objective, so a resumed
+process with a cold cache follows the identical trajectory.
+"""
+from __future__ import annotations
+
+import os
+import signal
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.nsga2 import (NSGA2Driver, NSGA2State, _memoized,
+                              encode_rng_state, extract_front)
+from repro.evolve.config import CampaignConfig
+from repro.evolve.islands import ParetoArchive, migrate_ring
+
+_CKPT_VERSION = 1
+
+
+@dataclass
+class CampaignResult:
+    archive_x: np.ndarray    # (A, n_genes) global Pareto archive
+    archive_f: np.ndarray    # (A, 2)
+    epochs_run: int          # epochs executed in *this* process
+    resumed_from: int | None # epoch of the loaded snapshot, if any
+    histories: list[list[tuple[int, float, float]]] = field(
+        default_factory=list)
+
+
+class Campaign:
+    """One resumable multi-island search over a fixed objective."""
+
+    def __init__(self, domains: np.ndarray,
+                 objective: Callable[[np.ndarray], np.ndarray],
+                 cfg: CampaignConfig,
+                 checkpoint_dir: str | None = None,
+                 seed_population: np.ndarray | None = None,
+                 name: str = "campaign"):
+        self.domains = np.asarray(domains)
+        self.cfg = cfg
+        self.name = name
+        self.n_genes = int(self.domains.shape[0])
+        self.seed_population = seed_population
+        evaluate = (_memoized(objective) if cfg.base.dedup_eval else objective)
+        self.drivers = [
+            NSGA2Driver(self.domains, objective, cfg.island_nsga2(i),
+                        evaluate=evaluate)
+            for i in range(cfg.n_islands)
+        ]
+        self.ckpt = (CheckpointManager(checkpoint_dir,
+                                       keep=cfg.checkpoint_keep)
+                     if checkpoint_dir else None)
+        self.states: list[NSGA2State] = []
+        self.archive = ParetoArchive(self.n_genes)
+        self.next_epoch = 0
+        self.resumed_from: int | None = None
+
+    # -- checkpoint plumbing -------------------------------------------------
+    def _state_tree(self) -> dict:
+        return {
+            "islands": [{"pop": np.ascontiguousarray(s.pop, dtype=np.int64),
+                         "F": np.ascontiguousarray(s.F, dtype=np.float64)}
+                        for s in self.states],
+            "archive": {"X": self.archive.X, "F": self.archive.F},
+        }
+
+    def _template(self) -> dict:
+        P = self.cfg.pop_size
+        return {
+            "islands": [{"pop": np.zeros((P, self.n_genes), dtype=np.int64),
+                         "F": np.zeros((P, 2), dtype=np.float64)}
+                        for _ in range(self.cfg.n_islands)],
+            "archive": {"X": np.zeros((0, self.n_genes), dtype=np.int64),
+                        "F": np.zeros((0, 2), dtype=np.float64)},
+        }
+
+    def _config_fingerprint(self) -> dict:
+        """Every config field the generation sequence depends on.
+
+        Deliberately excluded: `n_epochs` (extending a finished campaign is
+        the resume feature) and `eval_backend` (all backends are
+        bit-identical by the conformance contract, so resuming on a
+        different executor cannot change the trajectory).
+        """
+        b = self.cfg.base
+        return {"n_islands": self.cfg.n_islands,
+                "pop_size": self.cfg.pop_size,
+                "gens_per_epoch": self.cfg.gens_per_epoch,
+                "migrate_k": self.cfg.migrate_k,
+                "seed": self.cfg.seed,
+                "island_seed_stride": self.cfg.island_seed_stride,
+                "n_genes": self.n_genes,
+                "crossover_prob": b.crossover_prob,
+                "crossover_eta": b.crossover_eta,
+                "mutation_eta": b.mutation_eta,
+                "mutation_prob": b.mutation_prob,
+                "dedup_eval": b.dedup_eval}
+
+    def _save(self, epoch: int) -> None:
+        if self.ckpt is None:
+            return
+        extra = {
+            "version": _CKPT_VERSION,
+            "name": self.name,
+            "epoch": epoch,
+            "rngs": [encode_rng_state(s.rng) for s in self.states],
+            "generations": [s.generation for s in self.states],
+            "histories": [[list(h) for h in s.history] for s in self.states],
+            "config": self._config_fingerprint(),
+        }
+        self.ckpt.save(epoch, self._state_tree(), extra=extra)
+
+    def _try_resume(self) -> bool:
+        if self.ckpt is None or self.ckpt.latest_valid_step() is None:
+            return False
+        _, tree, extra = self.ckpt.restore(self._template(), to_device=False)
+        saved = extra.get("config", {})
+        mine = self._config_fingerprint()
+        if {k: saved.get(k) for k in mine} != mine:
+            raise ValueError(
+                f"checkpoint under {self.ckpt.dir} was written by an "
+                f"incompatible campaign config: {saved} vs {mine}")
+        self.states = [
+            self.drivers[i].restore_state(
+                isl["pop"], isl["F"], extra["generations"][i],
+                extra["rngs"][i],
+                [tuple(h) for h in extra["histories"][i]])
+            for i, isl in enumerate(tree["islands"])
+        ]
+        self.archive = ParetoArchive(self.n_genes, tree["archive"]["X"],
+                                     tree["archive"]["F"])
+        self.resumed_from = int(extra["epoch"])
+        self.next_epoch = self.resumed_from + 1
+        return True
+
+    # -- execution -----------------------------------------------------------
+    def init_or_resume(self) -> None:
+        """Populate island states: resume from a valid checkpoint or init."""
+        if self.states:
+            return
+        if not self._try_resume():
+            self.states = [d.init_state(self.seed_population)
+                           for d in self.drivers]
+            self.next_epoch = 0
+
+    def run(self, on_epoch: Callable[[int, "Campaign"], None] | None = None,
+            kill_after_epoch: int | None = None) -> CampaignResult:
+        """Advance to `cfg.n_epochs`, checkpointing every epoch boundary.
+
+        `kill_after_epoch=e` SIGKILLs the process right after epoch e's
+        checkpoint lands — the deterministic stand-in for an external kill
+        between generations, used by the resume tests and the CLI's
+        `--kill-after-epoch` debug flag.
+        """
+        self.init_or_resume()
+        ran = 0
+        for epoch in range(self.next_epoch, self.cfg.n_epochs):
+            for _ in range(self.cfg.gens_per_epoch):
+                for i, driver in enumerate(self.drivers):
+                    self.states[i] = driver.step(self.states[i])
+            for state in self.states:
+                self.archive.update(*extract_front(state.pop, state.F))
+            migrate_ring(self.states, self.cfg.migrate_k)
+            self._save(epoch)
+            ran += 1
+            self.next_epoch = epoch + 1
+            if on_epoch is not None:
+                on_epoch(epoch, self)
+            if kill_after_epoch is not None and epoch >= kill_after_epoch:
+                os.kill(os.getpid(), signal.SIGKILL)
+        return CampaignResult(
+            archive_x=self.archive.X.copy(), archive_f=self.archive.F.copy(),
+            epochs_run=ran, resumed_from=self.resumed_from,
+            histories=[list(s.history) for s in self.states])

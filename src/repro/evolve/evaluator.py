@@ -1,0 +1,14 @@
+"""Campaign-facing fitness evaluation API.
+
+The actual backend dispatch (np / SWAR / Pallas) and device-row sharding
+live below the orchestration layer in `repro.kernels.dispatch`, so core
+problems (`core.tnn.TNNApproxProblem`) can select an executor without
+importing upward into this package.  This module re-exports that API under
+the name campaigns and benchmarks use.
+"""
+from repro.kernels.dispatch import (  # noqa: F401
+    BACKENDS,
+    population_eval_pop,
+    population_eval_uint,
+    population_pc_errors,
+)

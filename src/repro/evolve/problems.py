@@ -1,0 +1,105 @@
+"""Campaign problem builders: synthetic (tests/CI) and the real Table-2 TNN.
+
+`build_tnn_problem` runs the paper's Phase 1/2 pipeline (CGP popcount
+libraries + Pareto PCC combinations) at a configurable budget and wraps the
+Phase-3 `TNNApproxProblem` for the campaign runner; `compile_archive_winner`
+closes the loop by lowering an archive chromosome straight through
+`repro.compile.lower_classifier` to a servable `CompiledClassifier`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+
+@dataclass
+class CampaignProblem:
+    """Everything a `Campaign` needs, plus decode hooks for the winner."""
+
+    name: str
+    domains: np.ndarray
+    objective: Callable[[np.ndarray], np.ndarray]
+    seed_population: np.ndarray | None = None
+    # TNN problems carry their phase-3 context for compile/emit
+    tnn: object | None = None
+    approx: object | None = None        # core.tnn.TNNApproxProblem
+    dataset: object | None = None       # data.tabular.TabularDataset
+
+
+def build_synth_problem(n_genes: int = 10, domain: int = 6) -> CampaignProblem:
+    """Deterministic two-objective toy with a known diagonal Pareto front.
+
+    Pure integer arithmetic — no training, no RNG — so two processes agree
+    bit-for-bit on every objective value.  Used by the CLI's `synth` problem
+    and the resume / seed-determinism tests.
+    """
+    domains = np.full(n_genes, domain, dtype=np.int64)
+    scale = n_genes * (domain - 1)
+
+    def objective(pop: np.ndarray) -> np.ndarray:
+        pop = np.asarray(pop, dtype=np.int64)
+        f0 = pop.sum(1) / scale
+        f1 = (domain - 1 - pop).sum(1) / scale
+        pen = (pop == 2).sum(1) * 0.2       # middle values are dominated
+        return np.stack([f0 + pen, f1 + pen], 1)
+
+    return CampaignProblem(name=f"synth{n_genes}x{domain}", domains=domains,
+                           objective=objective)
+
+
+def build_tnn_problem(dataset: str, seed: int = 0, epochs: int = 12,
+                      cgp_points: int = 3, cgp_iters: int = 500,
+                      pcc_samples: int = 30000,
+                      eval_backend: str = "np") -> CampaignProblem:
+    """Phases 1-3 setup for one Table-2 dataset at a configurable budget.
+
+    Mirrors examples/evolve_approx_tnn.py: train the exact TNN, evolve
+    approximate popcount libraries for every neuron size, build the Pareto
+    PCC library, and return the NSGA-II integration problem whose objective
+    scores whole populations (on `eval_backend` for the output-plane gate
+    simulation).  Deterministic in (dataset, seed, budgets).
+    """
+    from repro.core import tnn as T
+    from repro.core.cgp import evolve_pc_library
+    from repro.core.nsga2 import NSGA2Config  # noqa: F401 (re-export site)
+    from repro.core.pcc import build_pcc_library, pc_pareto
+    from repro.core.ternary import abc_binarize
+    from repro.data.tabular import make_dataset
+
+    ds = make_dataset(dataset)
+    tnn = T.train_tnn(ds, T.TNNTrainConfig(
+        n_hidden=ds.spec.topology[1], epochs=epochs, lr=1e-2, seed=seed))
+
+    sizes, pcc_sizes = set(), []
+    for (p, n) in tnn.hidden_sizes():
+        if p >= 1 and n >= 1:
+            sizes.update([p, n])
+            pcc_sizes.append((p, n))
+    sizes.add(max(tnn.out_nnz, 1))
+    pc_libs = {n: evolve_pc_library(n, n_points=cgp_points,
+                                    max_iters=cgp_iters)
+               for n in sorted(sizes)}
+    pcc_lib = build_pcc_library(sorted(set(pcc_sizes)), pc_libs,
+                                n_samples=pcc_samples)
+    pc_out = pc_pareto(pc_libs[max(tnn.out_nnz, 1)])
+
+    xb_tr = np.asarray(abc_binarize(ds.x_train, tnn.thresholds))
+    prob = T.TNNApproxProblem(tnn=tnn, pcc_lib=pcc_lib, pc_out_lib=pc_out,
+                              xbin=xb_tr, y=ds.y_train,
+                              eval_backend=eval_backend)
+    seed_pop = np.zeros((1, prob.n_genes), dtype=np.int64)  # all-exact design
+    return CampaignProblem(name=f"tnn_{dataset}", domains=prob.domains(),
+                           objective=prob.objective,
+                           seed_population=seed_pop,
+                           tnn=tnn, approx=prob, dataset=ds)
+
+
+def compile_archive_winner(problem: CampaignProblem, x: np.ndarray):
+    """Lower one archive chromosome to a `CompiledClassifier` (emit/serve)."""
+    if problem.approx is None:
+        raise ValueError("only TNN problems can be compiled")
+    from repro.compile import lower_classifier
+    hidden_nls, out_nls = problem.approx.decode(np.asarray(x, dtype=np.int64))
+    return lower_classifier(problem.tnn, hidden_nls, out_nls)

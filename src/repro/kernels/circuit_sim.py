@@ -40,15 +40,16 @@ for _g, (_c0, _ca, _cb, _cab) in _ANF_COEFF.items():
 
 
 def pack_words32(packed_u64: np.ndarray) -> np.ndarray:
-    """Reinterpret `(n, W)` uint64 packed vectors as `(n, 2W)` uint32 words.
+    """Reinterpret `(..., n, W)` uint64 packed vectors as `(..., n, 2W)` uint32.
 
     Little-endian lane split: uint64 word w's low half becomes word 2w, so
     vector s sits in bit (s % 32) of word (s // 32) — the invariant both
-    evaluators share.
+    evaluators share.  Leading batch axes (per-individual word planes) pass
+    through unchanged.
     """
     packed_u64 = np.ascontiguousarray(packed_u64, dtype=np.uint64)
-    n, W = packed_u64.shape
-    return packed_u64.view(np.uint32).reshape(n, 2 * W)
+    *lead, n, W = packed_u64.shape
+    return packed_u64.view(np.uint32).reshape(*lead, n, 2 * W)
 
 
 def pack_bits32(bits: np.ndarray) -> np.ndarray:
@@ -75,20 +76,23 @@ def simulate_population(op: jax.Array, in0: jax.Array, in1: jax.Array,
                         outputs: jax.Array, words32: jax.Array,
                         n_inputs: int) -> jax.Array:
     """op/in0/in1: (P, G) int32; outputs: (P, n_out) int32;
-    words32: (n_inputs, W) uint32 shared test words.
+    words32: (n_inputs, W) uint32 shared test words, or (P, n_inputs, W)
+    per-individual words (the TNN integration scores every genome on its own
+    packed input plane).
 
     Returns (P, n_out, W) uint32 output words, bit-identical (lane-split)
     to `NetlistPopulation.simulate`.
     """
     P, G = op.shape
-    W = words32.shape[1]
+    W = words32.shape[-1]
     c0 = jnp.asarray(_C0_TBL)[op]      # (P, G) uint32 ANF masks
     ca = jnp.asarray(_CA_TBL)[op]
     cb = jnp.asarray(_CB_TBL)[op]
     cab = jnp.asarray(_CAB_TBL)[op]
 
     vals = jnp.zeros((P, n_inputs + G, W), dtype=_U32)
-    vals = vals.at[:, :n_inputs].set(words32.astype(_U32)[None])
+    inw = words32.astype(_U32)
+    vals = vals.at[:, :n_inputs].set(inw[None] if inw.ndim == 2 else inw)
 
     def body(vals, xs):
         g, i0, i1, m0, ma, mb, mab = xs

@@ -1,0 +1,109 @@
+"""Backend dispatch + device sharding for population circuit simulation.
+
+One entry point, three interchangeable bit-identical executors for the
+population x packed-word gate-simulation hot loop:
+
+  * ``np``     — `NetlistPopulation` structure-of-arrays uint64 simulation
+    (host reference);
+  * ``swar``   — the jitted `lax.scan` uint32-SWAR twin in
+    `kernels.circuit_sim` (the PR 1 device path / benchmark baseline);
+  * ``pallas`` — the Pallas kernel in `kernels.pallas_circuit_sim`
+    (compiled on TPU, interpret-mode elsewhere).
+
+Device sharding: for the device backends the population axis is split
+round-even across `jax.local_devices()` (or an explicit device list) —
+fitness rows are independent, so each device simulates its slice of
+genomes against the (shared or per-individual) word plane and results
+concatenate on host.  On this container that degenerates to a single CPU
+device; the split logic is identical for an 8-chip pod.
+
+This lives in `kernels` (not `repro.evolve`) so consumers below the
+orchestration layer — e.g. `core.tnn.TNNApproxProblem` — can select a
+backend without importing upward; `repro.evolve.evaluator` re-exports it
+as the campaign-facing API.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.circuits import NetlistPopulation
+
+BACKENDS = ("np", "swar", "pallas")
+
+
+def _device_slices(P: int, n_dev: int) -> list[slice]:
+    """Round-even contiguous row slices, one per device (empty ones drop)."""
+    per = -(-P // n_dev)
+    return [slice(s, min(s + per, P)) for s in range(0, P, per)]
+
+
+def _eval_device(op, in0, in1, outputs, packed_u64, n_inputs, backend,
+                 devices) -> np.ndarray:
+    import jax
+
+    from repro.kernels import circuit_sim as CS
+    if backend == "pallas":
+        from repro.kernels import pallas_circuit_sim as PS
+        eval_fn = PS.population_eval_uint
+    else:
+        eval_fn = CS.population_eval_uint
+    words32 = CS.pack_words32(packed_u64)
+    per_individual = words32.ndim == 3
+    devices = list(devices) if devices is not None else jax.local_devices()
+    P = op.shape[0]
+    slices = (_device_slices(P, len(devices)) if len(devices) > 1
+              else [slice(0, P)])
+    outs = []
+    for sl, dev in zip(slices, devices):
+        shard = (op[sl], in0[sl], in1[sl], outputs[sl],
+                 words32[sl] if per_individual else words32)
+        if len(slices) > 1:
+            shard = tuple(jax.device_put(a, dev) for a in shard)
+        outs.append(np.asarray(eval_fn(*shard, n_inputs)))
+    return np.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
+
+
+def population_eval_uint(op: np.ndarray, in0: np.ndarray, in1: np.ndarray,
+                         outputs: np.ndarray, packed_u64: np.ndarray,
+                         n_inputs: int, backend: str = "swar",
+                         devices=None) -> np.ndarray:
+    """Per-vector decoded outputs `(P, S)` for a population of netlists.
+
+    `packed_u64` is `(n_inputs, W)` shared or `(P, n_inputs, W)`
+    per-individual uint64 words; every backend returns the same integers
+    for the same words (rows are `Netlist.eval_uint` of the row's genome).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown eval backend {backend!r}; "
+                         f"valid: {', '.join(BACKENDS)}")
+    if backend == "np":
+        pop = NetlistPopulation(n_inputs, np.asarray(op, dtype=np.int16),
+                                np.asarray(in0, dtype=np.int32),
+                                np.asarray(in1, dtype=np.int32),
+                                np.asarray(outputs, dtype=np.int32))
+        return pop.eval_uint(packed_u64)
+    op32 = np.asarray(op, dtype=np.int32)
+    return _eval_device(op32, np.asarray(in0, dtype=np.int32),
+                        np.asarray(in1, dtype=np.int32),
+                        np.asarray(outputs, dtype=np.int32),
+                        packed_u64, n_inputs, backend, devices).astype(np.int64)
+
+
+def population_eval_pop(pop: NetlistPopulation, packed_u64: np.ndarray,
+                        backend: str = "swar", devices=None) -> np.ndarray:
+    """`population_eval_uint` over an existing `NetlistPopulation`."""
+    return population_eval_uint(pop.op, pop.in0, pop.in1, pop.outputs,
+                                packed_u64, pop.n_inputs, backend=backend,
+                                devices=devices)
+
+
+def population_pc_errors(pop: NetlistPopulation, packed_u64: np.ndarray,
+                         true: np.ndarray, backend: str = "swar",
+                         devices=None) -> tuple[np.ndarray, np.ndarray]:
+    """Per-individual (mae, wcae) against true counts, any backend."""
+    if backend == "np":
+        return pop.pc_errors(packed_u64, true)
+    approx = population_eval_pop(pop, packed_u64, backend=backend,
+                                 devices=devices)
+    err = np.abs(approx - np.asarray(true)[None, :])
+    return err.mean(axis=1), err.max(axis=1).astype(np.float64)

@@ -1,0 +1,153 @@
+"""Pallas kernel: population-parallel gate-level circuit simulation.
+
+The campaign hot loop — (population of genomes) x (packed test words) —
+as a real Pallas kernel instead of the `lax.scan` SWAR twin in
+`kernels/circuit_sim.py`.  Grid is (population, word tiles): each program
+instance owns one individual's plan row and one `block_words`-wide slab of
+packed uint32 test words, walks the gate columns with a `fori_loop` over a
+VMEM value plane of shape (n_inputs + n_gates, block_words), and writes that
+individual's output words.  Gates apply through the same algebraic normal
+form r = m0 ^ (ma & a) ^ (mb & b) ^ (mab & (a & b)) as both existing
+evaluators, with the per-gate coefficient masks precomputed on the host —
+the kernel body is branch-free regardless of opcode mix.
+
+Bit-compatibility contract (pinned by tests/test_conformance.py): identical
+output words to `NetlistPopulation.simulate` (lane-split via `pack_words32`)
+and to `circuit_sim.simulate_population`, for both shared `(n_inputs, W)`
+and per-individual `(P, n_inputs, W)` word planes.
+
+On TPU the plan rows stay resident in VMEM and the word axis streams through
+the grid; off-TPU the kernel runs in interpret mode (the repo-wide dispatch
+policy, cf. `kernels/ops.py`), which is slower than the SWAR scan on CPU but
+exercises the exact kernel program the accelerator runs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.circuit_sim import (_C0_TBL, _CA_TBL, _CAB_TBL, _CB_TBL,
+                                       _U32)
+
+DEFAULT_BLOCK_WORDS = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _kernel(in0_ref, in1_ref, m0_ref, ma_ref, mb_ref, mab_ref, out_idx_ref,
+            words_ref, out_ref, vals_ref, *, n_inputs: int, n_gates: int,
+            n_out: int):
+    # blocks: plan rows (1, G) int32 / uint32; words (n_inputs, bw) or
+    # (1, n_inputs, bw) uint32; out (1, n_out, bw); vals scratch
+    # (n_inputs + G, bw) uint32.
+    w = words_ref[...]
+    vals_ref[pl.ds(0, n_inputs), :] = w.reshape(n_inputs, -1)
+    if n_gates:
+        vals_ref[pl.ds(n_inputs, n_gates), :] = jnp.zeros(
+            (n_gates, w.shape[-1]), dtype=_U32)
+
+    def body(g, carry):
+        a = vals_ref[pl.ds(in0_ref[0, g], 1), :]
+        b = vals_ref[pl.ds(in1_ref[0, g], 1), :]
+        r = (m0_ref[0, g] ^ (ma_ref[0, g] & a) ^ (mb_ref[0, g] & b)
+             ^ (mab_ref[0, g] & (a & b)))
+        vals_ref[pl.ds(n_inputs + g, 1), :] = r
+        return carry
+
+    if n_gates:
+        jax.lax.fori_loop(0, n_gates, body, 0)
+    for o in range(n_out):           # n_out is static and small (<= 8)
+        out_ref[0, pl.ds(o, 1), :] = vals_ref[pl.ds(out_idx_ref[0, o], 1), :]
+
+
+@partial(jax.jit,
+         static_argnames=("n_inputs", "block_words", "interpret"))
+def _simulate_padded(in0, in1, m0, ma, mb, mab, outputs, words32, *,
+                     n_inputs: int, block_words: int, interpret: bool):
+    P, G = in0.shape
+    n_out = outputs.shape[1]
+    Wp = words32.shape[-1]
+    shared = words32.ndim == 2
+    grid = (P, Wp // block_words)
+    words_spec = (pl.BlockSpec((n_inputs, block_words), lambda p, w: (0, w))
+                  if shared else
+                  pl.BlockSpec((1, n_inputs, block_words),
+                               lambda p, w: (p, 0, w)))
+    plan_spec = pl.BlockSpec((1, G), lambda p, w: (p, 0))
+    return pl.pallas_call(
+        partial(_kernel, n_inputs=n_inputs, n_gates=G, n_out=n_out),
+        grid=grid,
+        in_specs=[plan_spec, plan_spec, plan_spec, plan_spec, plan_spec,
+                  plan_spec,
+                  pl.BlockSpec((1, n_out), lambda p, w: (p, 0)),
+                  words_spec],
+        out_specs=pl.BlockSpec((1, n_out, block_words),
+                               lambda p, w: (p, 0, w)),
+        out_shape=jax.ShapeDtypeStruct((P, n_out, Wp), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((n_inputs + G, block_words), jnp.uint32)],
+        interpret=interpret,
+    )(in0, in1, m0, ma, mb, mab, outputs, words32)
+
+
+def simulate_population(op, in0, in1, outputs, words32, n_inputs: int, *,
+                        block_words: int = DEFAULT_BLOCK_WORDS,
+                        interpret: bool | None = None) -> jax.Array:
+    """Pallas twin of `circuit_sim.simulate_population`.
+
+    op/in0/in1: (P, G) int; outputs: (P, n_out) int; words32: (n_inputs, W)
+    shared or (P, n_inputs, W) per-individual uint32 words.  Returns
+    (P, n_out, W) uint32, bit-identical to both existing evaluators.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    op = np.asarray(op)
+    if op.shape[1] == 0:
+        # zero-size blocks are illegal in pallas_call — pad gateless plans
+        # with one dead CONST0 gate (node n_inputs, unreachable by outputs)
+        from repro.hw.egfet import Gate
+        P = op.shape[0]
+        op = np.full((P, 1), int(Gate.CONST0), dtype=np.int16)
+        in0 = np.zeros((P, 1), dtype=np.int32)
+        in1 = np.zeros((P, 1), dtype=np.int32)
+    m0 = _C0_TBL[op]                   # (P, G) uint32 ANF masks
+    ma = _CA_TBL[op]
+    mb = _CB_TBL[op]
+    mab = _CAB_TBL[op]
+    in0 = jnp.asarray(np.asarray(in0, dtype=np.int32))
+    in1 = jnp.asarray(np.asarray(in1, dtype=np.int32))
+    outputs = jnp.asarray(np.asarray(outputs, dtype=np.int32))
+    words32 = jnp.asarray(words32, dtype=jnp.uint32)
+    W = words32.shape[-1]
+    bw = min(block_words, max(W, 1))
+    pad = (-W) % bw
+    if pad:
+        pad_width = ([(0, 0), (0, pad)] if words32.ndim == 2
+                     else [(0, 0), (0, 0), (0, pad)])
+        words32 = jnp.pad(words32, pad_width)
+    out = _simulate_padded(in0, in1, jnp.asarray(m0), jnp.asarray(ma),
+                           jnp.asarray(mb), jnp.asarray(mab), outputs,
+                           words32, n_inputs=n_inputs, block_words=bw,
+                           interpret=interpret)
+    return out[:, :, :W]
+
+
+def population_eval_uint(op, in0, in1, outputs, words32, n_inputs: int, *,
+                         block_words: int = DEFAULT_BLOCK_WORDS,
+                         interpret: bool | None = None) -> jax.Array:
+    """Decode output words (LSB-first) into per-vector ints: (P, W*32) int32."""
+    outw = simulate_population(op, in0, in1, outputs, words32, n_inputs,
+                               block_words=block_words, interpret=interpret)
+    P, n_out, W = outw.shape
+    shifts = jnp.arange(32, dtype=_U32)
+    acc = jnp.zeros((P, W, 32), dtype=jnp.int32)
+    for o in range(n_out):
+        bits = ((outw[:, o, :, None] >> shifts) & _U32(1)).astype(jnp.int32)
+        acc = acc + (bits << o)
+    return acc.reshape(P, W * 32)

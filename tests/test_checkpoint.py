@@ -1,4 +1,5 @@
-"""Checkpoint manager: roundtrip, retention, atomicity, elastic restore."""
+"""Checkpoint manager: roundtrip, retention, atomicity, validation,
+corruption fallback, elastic restore."""
 import os
 
 import jax
@@ -6,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointCorruptError, CheckpointManager
 
 
 def _state(seed=0):
@@ -55,6 +56,57 @@ def test_structure_mismatch_rejected(tmp_path):
     bad = {"params": {"w": jnp.zeros((8, 4))}}   # missing leaves
     with pytest.raises(ValueError, match="structure mismatch"):
         cm.restore(bad)
+
+
+def test_truncated_checkpoint_detected_and_previous_loaded(tmp_path):
+    """A snapshot truncated mid-write (SIGKILL during save) fails its
+    checksum; restore() transparently falls back to the previous one."""
+    cm = CheckpointManager(str(tmp_path), keep=3)
+    cm.save(1, _state(1), extra={"epoch": 1})
+    cm.save(2, _state(2), extra={"epoch": 2})
+    leaves = os.path.join(tmp_path, "step_2", "leaves.npz")
+    payload = open(leaves, "rb").read()
+    with open(leaves, "wb") as f:
+        f.write(payload[: len(payload) // 2])          # torn write
+    assert not cm.validate(2) and cm.validate(1)
+    assert cm.latest_valid_step() == 1
+    step, restored, extra = cm.restore(
+        jax.tree.map(jnp.zeros_like, _state()))
+    assert step == 1 and extra["epoch"] == 1
+    want = _state(1)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # asking for the torn snapshot explicitly is an error, not garbage data
+    with pytest.raises(CheckpointCorruptError):
+        cm.restore(jax.tree.map(jnp.zeros_like, _state()), step=2)
+
+
+def test_bitflip_detected(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(1, _state())
+    leaves = os.path.join(tmp_path, "step_1", "leaves.npz")
+    payload = bytearray(open(leaves, "rb").read())
+    payload[len(payload) // 2] ^= 0xFF
+    open(leaves, "wb").write(bytes(payload))
+    assert not cm.validate(1)
+    with pytest.raises(FileNotFoundError, match="no valid checkpoints"):
+        cm.restore(jax.tree.map(jnp.zeros_like, _state()))
+
+
+def test_numpy_restore_preserves_wide_dtypes(tmp_path):
+    """to_device=False must keep int64/float64 exactly (jnp would narrow)."""
+    cm = CheckpointManager(str(tmp_path))
+    state = {"pop": np.arange(12, dtype=np.int64).reshape(3, 4),
+             "F": np.linspace(0, 1, 6, dtype=np.float64).reshape(3, 2)}
+    cm.save(1, state)
+    _, restored, _ = cm.restore({"pop": np.zeros((3, 4), np.int64),
+                                 "F": np.zeros((3, 2), np.float64)},
+                                to_device=False)
+    assert restored["pop"].dtype == np.int64
+    assert restored["F"].dtype == np.float64
+    np.testing.assert_array_equal(restored["pop"], state["pop"])
+    np.testing.assert_array_equal(restored["F"], state["F"])
 
 
 def test_elastic_restore_to_mesh(tmp_path):

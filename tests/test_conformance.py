@@ -1,0 +1,154 @@
+"""Cross-backend conformance: differential fuzz over every circuit evaluator.
+
+Five executors claim to compute the same function of (netlist, test
+vectors):
+
+  1. `Netlist.simulate` / `eval_uint` — the serial uint64 reference,
+  2. `NetlistPopulation` — structure-of-arrays batched numpy,
+  3. `kernels.circuit_sim.simulate_population` — jitted uint32-SWAR scan,
+  4. `kernels.pallas_circuit_sim` — the Pallas kernel (interpret off-TPU),
+  5. `CircuitProgram` (jax + np backends) over the lowered `CircuitIR`,
+plus the emitted-Verilog route: `compile.verilog.emit_netlist_module` ->
+`compile.vread.VerilogDesign`, an evaluator that never sees the IR.
+
+Any two of them disagreeing on any vector of any random netlist is a
+failure.  The seeded sweep always runs; when hypothesis is installed the
+same oracle is additionally driven by shrinking random shapes (example
+budget scales with REPRO_CONFORMANCE_EXAMPLES — the nightly CI job raises
+it), and the `slow`-marked sweep covers larger populations and widths.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.compile.program import CircuitProgram
+from repro.compile.verilog import emit_netlist_module
+from repro.compile.vread import VerilogDesign
+from repro.core import circuits as C
+from repro.kernels import circuit_sim as CS
+from repro.kernels import pallas_circuit_sim as PS
+
+
+def _rand_bits(rng, S, n):
+    return (rng.random((S, n)) < 0.5).astype(np.uint8)
+
+
+def assert_conformance(pop: C.NetlistPopulation, bits: np.ndarray,
+                       check_programs: bool = True) -> None:
+    """All evaluators must agree on every vector for every individual."""
+    S = bits.shape[0]
+    packed = C.pack_vectors(bits)
+    ref = pop.eval_uint(packed)[:, :S]                       # batched numpy
+
+    for p in range(pop.size):                                # serial reference
+        nl = pop.netlist(p)
+        np.testing.assert_array_equal(
+            nl.eval_uint(packed)[:S], ref[p],
+            err_msg=f"NetlistPopulation row {p} != Netlist.eval_uint")
+
+    words32 = CS.pack_words32(packed)
+    swar = np.asarray(CS.population_eval_uint(
+        pop.op.astype(np.int32), pop.in0, pop.in1, pop.outputs, words32,
+        pop.n_inputs))[:, :S]
+    np.testing.assert_array_equal(swar, ref, err_msg="SWAR scan != numpy")
+
+    pallas = np.asarray(PS.population_eval_uint(
+        pop.op, pop.in0, pop.in1, pop.outputs, words32, pop.n_inputs))[:, :S]
+    np.testing.assert_array_equal(pallas, ref,
+                                  err_msg="Pallas kernel != numpy")
+
+    if not check_programs:
+        return
+    for p in range(pop.size):
+        nl = pop.netlist(p, name=f"fuzz{p}")
+        for backend in ("jax", "np"):
+            got = CircuitProgram.from_netlist(nl, backend=backend)
+            np.testing.assert_array_equal(
+                got.eval_bits(bits), ref[p],
+                err_msg=f"CircuitProgram[{backend}] != numpy (row {p})")
+        design = VerilogDesign.parse(emit_netlist_module(nl, "fuzz"))
+        np.testing.assert_array_equal(
+            design.eval_uint("fuzz", bits), ref[p],
+            err_msg=f"Verilog reader != numpy (row {p})")
+
+
+def _fuzz_case(seed: int, max_inputs=8, max_gates=32, max_pop=8,
+               max_vectors=200, check_programs=True) -> None:
+    rng = np.random.default_rng(seed)
+    n_in = int(rng.integers(1, max_inputs + 1))
+    n_gates = int(rng.integers(0, max_gates + 1))
+    n_out = int(rng.integers(1, min(8, n_in + n_gates) + 1))
+    P = int(rng.integers(1, max_pop + 1))
+    S = int(rng.integers(1, max_vectors + 1))
+    pop = C.random_netlist_population(rng, n_in, n_gates, n_out, P)
+    assert_conformance(pop, _rand_bits(rng, S, n_in),
+                       check_programs=check_programs)
+
+
+N_EXAMPLES = int(os.environ.get("REPRO_CONFORMANCE_EXAMPLES", "20"))
+
+
+@pytest.mark.parametrize("seed", range(N_EXAMPLES))
+def test_random_netlists_all_backends_agree(seed):
+    _fuzz_case(seed)
+
+
+def test_per_individual_word_planes_agree():
+    """Device paths must also match when every genome gets its own words —
+    the TNN integration's output-plane shape."""
+    rng = np.random.default_rng(1234)
+    pop = C.random_netlist_population(rng, 6, 20, 3, 5)
+    S = 150
+    bits = np.stack([_rand_bits(rng, S, 6) for _ in range(pop.size)])
+    packed = C.pack_vectors(bits)                        # (P, n_in, W)
+    ref = pop.eval_uint(packed)[:, :S]
+    words32 = CS.pack_words32(packed)
+    swar = np.asarray(CS.population_eval_uint(
+        pop.op.astype(np.int32), pop.in0, pop.in1, pop.outputs, words32,
+        pop.n_inputs))[:, :S]
+    pallas = np.asarray(PS.population_eval_uint(
+        pop.op, pop.in0, pop.in1, pop.outputs, words32, pop.n_inputs))[:, :S]
+    np.testing.assert_array_equal(swar, ref)
+    np.testing.assert_array_equal(pallas, ref)
+
+
+def test_degenerate_shapes_agree():
+    """Gateless netlists, single-word batches, repeated output taps."""
+    rng = np.random.default_rng(99)
+    for (n_in, n_gates, n_out, P, S) in [(1, 0, 1, 1, 1), (2, 0, 2, 3, 5),
+                                         (4, 1, 4, 2, 64), (3, 40, 1, 6, 65),
+                                         (8, 16, 8, 4, 33)]:
+        pop = C.random_netlist_population(rng, n_in, n_gates, n_out, P)
+        assert_conformance(pop, _rand_bits(rng, S, n_in))
+
+
+@pytest.mark.slow
+def test_fuzz_sweep_large():
+    """Bigger populations / word planes; nightly raises the budget."""
+    for seed in range(max(N_EXAMPLES, 30)):
+        _fuzz_case(10_000 + seed, max_inputs=10, max_gates=96, max_pop=24,
+                   max_vectors=2100, check_programs=False)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-driven variant (shrinks failures to minimal netlists)
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+
+    @settings(max_examples=N_EXAMPLES, deadline=None)
+    @given(st.integers(1, 8), st.integers(0, 32), st.integers(1, 6),
+           st.integers(1, 8), st.integers(1, 200), st.integers(0, 2**31 - 1))
+    def test_hypothesis_netlists_all_backends_agree(n_in, n_gates, n_out,
+                                                    P, S, seed):
+        rng = np.random.default_rng(seed)
+        n_out = min(n_out, n_in + n_gates)
+        pop = C.random_netlist_population(rng, n_in, n_gates, n_out, P)
+        assert_conformance(pop, _rand_bits(rng, S, n_in),
+                           check_programs=False)

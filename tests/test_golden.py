@@ -1,0 +1,106 @@
+"""Golden-vector regression: pinned compiler output per Table-2 dataset.
+
+For every dataset a small fixture under tests/golden/ pins, for one
+deterministically constructed classifier, the `repro.compile` contract:
+end-to-end predictions of the compiled `CircuitProgram` on committed raw
+sensor readings, and the full EGFET report (gate counts, histogram, logic
+depth, area/power, power-source verdict).  Any silent drift in the lowering
+pipeline — builder composition, DCE, levelization, argmax semantics, cost
+tables — breaks an exact comparison here.
+
+The golden classifier is built without training: ternary weights come from
+a seeded numpy stream (sign/magnitude threshold), output columns are
+zero-balanced with the production `balance_zero_counts`, thresholds are the
+ABC medians.  Everything is integer or platform-stable float64/float32
+arithmetic, so fixtures generated on one x86 host verify on another.
+
+Regenerate (after an *intentional* compiler change) with:
+
+    PYTHONPATH=src python tests/test_golden.py --regen
+"""
+import hashlib
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.compile import CircuitProgram, egfet_report, lower_classifier
+from repro.core.tnn import TrainedTNN, balance_zero_counts, exact_netlists
+from repro.core.ternary import TERNARY_THRESHOLD, abc_fit_thresholds
+from repro.data.tabular import DATASETS, make_dataset
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+N_VECTORS = 96
+
+
+def golden_classifier(name: str):
+    """Deterministic (untrained) classifier + raw eval vectors for `name`."""
+    ds = make_dataset(name)
+    spec = ds.spec
+    F, H, Cc = spec.topology
+    digest = hashlib.sha256(f"golden:{name}".encode()).digest()
+    rng = np.random.default_rng(int.from_bytes(digest[:8], "little"))
+    w1_latent = rng.normal(0.0, 0.7, size=(F, H))
+    w2_latent = rng.normal(0.0, 0.7, size=(H, Cc))
+    w1t = (np.sign(w1_latent)
+           * (np.abs(w1_latent) > TERNARY_THRESHOLD)).astype(np.int8)
+    w2t = balance_zero_counts(w2_latent, TERNARY_THRESHOLD)
+    tnn = TrainedTNN(w1t=w1t, w2t=w2t,
+                     thresholds=abc_fit_thresholds(ds.x_train),
+                     train_acc=0.0, test_acc=0.0, name=name)
+    cc = lower_classifier(tnn, *exact_netlists(tnn))
+    x = ds.x_test[:N_VECTORS].astype(np.float32)
+    return cc, x
+
+
+def compute_golden(name: str) -> tuple[np.ndarray, np.ndarray, dict]:
+    cc, x = golden_classifier(name)
+    labels = CircuitProgram.from_classifier(cc).predict(x)
+    return x, labels, egfet_report(cc)
+
+
+@pytest.mark.parametrize("name", sorted(DATASETS))
+def test_compile_matches_golden(name):
+    npz_path = GOLDEN_DIR / f"{name}.npz"
+    report_path = GOLDEN_DIR / f"{name}_report.json"
+    assert npz_path.exists() and report_path.exists(), (
+        f"golden fixtures for {name!r} missing — run "
+        "`PYTHONPATH=src python tests/test_golden.py --regen`")
+    fix = np.load(npz_path)
+    want_report = json.loads(report_path.read_text())
+
+    cc, x = golden_classifier(name)
+    np.testing.assert_array_equal(
+        x, fix["x"], err_msg="golden input vectors drifted (dataset gen?)")
+    got_report = egfet_report(cc)
+    drift = {k: (want_report.get(k), got_report.get(k))
+             for k in set(want_report) | set(got_report)
+             if want_report.get(k) != got_report.get(k)}
+    assert got_report == want_report, f"EGFET report drift for {name}: {drift}"
+    program = CircuitProgram.from_classifier(cc)
+    np.testing.assert_array_equal(program.predict(fix["x"]), fix["labels"],
+                                  err_msg=f"compiled predictions drift "
+                                          f"({name})")
+    # np backend must pin to the same goldens (cross-backend safety net)
+    program_np = CircuitProgram.from_classifier(cc, backend="np")
+    np.testing.assert_array_equal(program_np.predict(fix["x"]),
+                                  fix["labels"])
+
+
+def regenerate() -> None:
+    GOLDEN_DIR.mkdir(exist_ok=True)
+    for name in sorted(DATASETS):
+        x, labels, report = compute_golden(name)
+        np.savez_compressed(GOLDEN_DIR / f"{name}.npz", x=x, labels=labels)
+        (GOLDEN_DIR / f"{name}_report.json").write_text(
+            json.dumps(report, indent=2, sort_keys=True) + "\n")
+        print(f"{name}: {report['n_gates']} gates, depth "
+              f"{report['logic_depth']}, labels {labels[:8].tolist()}...")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" not in sys.argv:
+        raise SystemExit("usage: python tests/test_golden.py --regen")
+    regenerate()
