@@ -1,10 +1,17 @@
-"""Sensor-stream serving throughput of the compiled circuit engine.
+"""Sensor-stream serving throughput: single engine + multi-tenant fleet.
 
-Compiles the cardio exact TNN (the paper's mid-size Table-2 design) to a
-`CircuitProgram` and measures end-to-end engine throughput — raw readings
-in, class labels out, including ABC binarization, bit-packing and decode —
-at batch sizes {1, 64, 1024}.  A numpy-backend row at the largest batch
-anchors the jitted SWAR speedup.  Writes BENCH_serve.json.
+Single-engine section: compiles the cardio exact TNN (the paper's mid-size
+Table-2 design) to a `CircuitProgram` and measures end-to-end engine
+throughput — raw readings in, class labels out, including ABC
+binarization, bit-packing and decode — at batch sizes {1, 64, 1024}, with
+a numpy-backend row at the largest batch anchoring the jitted SWAR
+speedup.
+
+Fleet section: a 2-tenant `ClassifierFleet` (cardio + breast_cancer)
+replays concurrent held-out streams from 4 producer threads through the
+deadline-driven micro-batching scheduler, recording per-tenant and
+fleet-wide rows (readings/s, request p50/p99, SLO misses) under
+`bench == "serve_fleet"`.  Writes BENCH_serve.json.
 
 Run directly to (re)generate the committed artifact:
 
@@ -24,6 +31,8 @@ from repro.compile.program import CircuitProgram
 from repro.serving.circuit_engine import CircuitServingEngine
 
 BATCH_SIZES = (1, 64, 1024)
+FLEET_DATASETS = ("cardio", "breast_cancer")
+FLEET_DEADLINE_MS = 250.0   # above the full-speed replay's queueing delay
 
 
 def _stream(x_test: np.ndarray, n: int, seed: int = 0) -> np.ndarray:
@@ -47,6 +56,50 @@ def _measure(prog: CircuitProgram, x_test: np.ndarray, batch: int,
     }
 
 
+def _measure_fleet(n_readings: int) -> list[dict]:
+    """2-tenant concurrent replay through the micro-batching scheduler."""
+    from repro.serve import ClassifierFleet, TenantSpec
+    from repro.serve.__main__ import replay_fleet
+
+    specs, streams = [], {}
+    for i, dataset in enumerate(FLEET_DATASETS):
+        ds, tnn = get_trained_tnn(dataset)
+        cc = lower_classifier(tnn, *exact_netlists(tnn))
+        name = f"tnn_{dataset}"
+        specs.append(TenantSpec(
+            name=name, program=CircuitProgram.from_classifier(cc),
+            backend="swar", max_batch=256, deadline_ms=FLEET_DEADLINE_MS,
+            dataset=dataset))
+        streams[name] = _stream(ds.x_test, n_readings, seed=i)
+    fleet = ClassifierFleet(specs)
+    try:
+        report = replay_fleet(fleet, streams, producers=4, timeout=600)
+    finally:
+        fleet.shutdown(drain=True)
+
+    rows = []
+    for name, t in report["tenants"].items():
+        rows.append({"bench": "serve_fleet", "tenant": name,
+                     "backend": t["backend"],
+                     "deadline_ms": FLEET_DEADLINE_MS,
+                     "readings": t["n_readings"],
+                     "readings_per_s": t["readings_per_s"],
+                     "req_p50_ms": t["req_p50_ms"],
+                     "req_p99_ms": t["req_p99_ms"],
+                     "n_slo_miss": t["n_slo_miss"],
+                     "labels_match_offline": t["labels_match_offline"]})
+    f = report["fleet"]
+    rows.append({"bench": "serve_fleet", "tenant": "__fleet__",
+                 "backend": "swar", "deadline_ms": FLEET_DEADLINE_MS,
+                 "readings": f["n_readings"],
+                 "readings_per_s": f["readings_per_s"],
+                 "req_p50_ms": f["req_p50_ms"],
+                 "req_p99_ms": f["req_p99_ms"],
+                 "n_slo_miss": f["n_slo_miss"],
+                 "labels_match_offline": report["labels_match_offline"]})
+    return rows
+
+
 def run() -> list[dict]:
     ds, tnn = get_trained_tnn("cardio")
     cc = lower_classifier(tnn, *exact_netlists(tnn))
@@ -65,6 +118,8 @@ def run() -> list[dict]:
     rows.append({"bench": "serve", "backend": "np",
                  "gates": cc.ir.n_gates, "depth": cc.ir.depth,
                  **_measure(prog_np, ds.x_test, 1024, n)})
+
+    rows.extend(_measure_fleet(2048 if QUICK else 16384))
 
     out = sys.argv[1] if (__name__ == "__main__" and len(sys.argv) > 1) \
         else "BENCH_serve.json"

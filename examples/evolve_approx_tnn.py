@@ -110,7 +110,8 @@ def main(dataset: str = "cardio", campaign: bool = False, islands: int = 4,
     # Phase 4: compile the winner -> emit RTL + report -> serve a stream
     acc, area, hnl, onl = best
     cc = lower_classifier(tnn, hnl, onl)
-    paths = write_artifacts(cc, "artifacts", base=f"tnn_{dataset}")
+    paths = write_artifacts(cc, "artifacts", base=f"tnn_{dataset}",
+                            dataset=dataset)
     rep = egfet_report(cc)
     print(f"[compile] winner acc={acc:.3f}: {cc.ir.n_gates} gates, "
           f"depth {cc.ir.depth}, {rep['total_area_mm2']:.2f} mm^2, "

@@ -6,6 +6,12 @@ program for batched sensor-stream inference, and synthesizable structural
 Verilog with an EGFET area/power report (plus an independent reader that
 re-evaluates the emitted RTL in Python).
 """
+from repro.compile.artifact import (
+    load_manifest,
+    load_program,
+    register_tenant,
+    save_program,
+)
 from repro.compile.ir import (
     CircuitIR,
     CompiledClassifier,
@@ -33,8 +39,12 @@ __all__ = [
     "emit_classifier_verilog",
     "emit_netlist_module",
     "eval_classifier_verilog",
+    "load_manifest",
+    "load_program",
     "lower",
     "lower_classifier",
     "lower_netlist",
+    "register_tenant",
+    "save_program",
     "write_artifacts",
 ]

@@ -1,0 +1,132 @@
+"""Servable artifact bundles + the fleet manifest.
+
+The Verilog + EGFET report that `write_artifacts` emits are what a printed
+fab consumes; a *serving* process needs the executable side of the same
+design — the levelized `CircuitIR` arrays plus the ABC thresholds — so it
+can rebuild a `CircuitProgram` without retraining or re-lowering anything.
+`save_program`/`load_program` round-trip exactly that as one compressed
+npz (pure integer arrays + float64 thresholds, so a bundle written on one
+host serves bit-identically on another).
+
+An emit directory accumulates one bundle per classifier plus a single
+``fleet.json`` manifest listing every tenant (`register_tenant` is
+last-write-wins per name, so re-emitting a design replaces its row).  The
+manifest is the handshake between the emit side (`repro.evolve --emit-dir`,
+`python -m repro.compile.export`) and the serving side
+(`repro.serve.ClassifierFleet.from_emit_dir`): a fleet is "whatever this
+directory says it serves".
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+
+from repro.compile.ir import CircuitIR, CompiledClassifier
+from repro.compile.program import CircuitProgram
+
+MANIFEST_NAME = "fleet.json"
+MANIFEST_VERSION = 1
+PROGRAM_SUFFIX = "_program.npz"
+
+
+def save_program(cc: CompiledClassifier, path: str | Path) -> str:
+    """Write the servable slice of a `CompiledClassifier` as one npz."""
+    ir = cc.ir
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    header = {
+        "version": MANIFEST_VERSION,
+        "name": ir.name,
+        "meta": ir.meta,
+        "taps": sorted(ir.taps),
+        "n_classes": cc.n_classes,
+        "score_bits": cc.score_bits,
+    }
+    arrays = {
+        "n_inputs": np.int64(ir.n_inputs),
+        "op": ir.op,
+        "in0": ir.in0,
+        "in1": ir.in1,
+        "outputs": ir.outputs,
+        "levels": ir.levels,
+        "thresholds": np.asarray(cc.thresholds, dtype=np.float64),
+        "header_json": np.frombuffer(
+            json.dumps(header, sort_keys=True).encode(), dtype=np.uint8),
+    }
+    for key in header["taps"]:
+        arrays[f"tap_{key}"] = ir.taps[key]
+    np.savez_compressed(path, **arrays)
+    return str(path)
+
+
+def load_program(path: str | Path, backend: str = "jax",
+                 devices: tuple | None = None) -> CircuitProgram:
+    """Rebuild a classifier `CircuitProgram` from a `save_program` bundle."""
+    with np.load(Path(path)) as fix:
+        header = json.loads(bytes(fix["header_json"]).decode())
+        ir = CircuitIR(
+            n_inputs=int(fix["n_inputs"]),
+            op=fix["op"].astype(np.int16),
+            in0=fix["in0"].astype(np.int32),
+            in1=fix["in1"].astype(np.int32),
+            outputs=fix["outputs"].astype(np.int32),
+            levels=fix["levels"].astype(np.int32),
+            taps={k: fix[f"tap_{k}"].astype(np.int32)
+                  for k in header["taps"]},
+            name=header["name"],
+            meta=header["meta"],
+        )
+        thresholds = fix["thresholds"].astype(np.float64)
+    ir.to_netlist()   # validates feed-forwardness before anything executes
+    return CircuitProgram(ir=ir, thresholds=thresholds,
+                          n_classes=header["n_classes"], backend=backend,
+                          devices=devices)
+
+
+# -- fleet manifest ---------------------------------------------------------
+def manifest_path(emit_dir: str | Path) -> Path:
+    return Path(emit_dir) / MANIFEST_NAME
+
+
+def load_manifest(emit_dir: str | Path) -> list[dict]:
+    """Tenant rows of `emit_dir`'s fleet manifest (sorted by name)."""
+    path = manifest_path(emit_dir)
+    if not path.exists():
+        raise FileNotFoundError(
+            f"no {MANIFEST_NAME} under {emit_dir} — emit artifacts first "
+            "(repro.evolve --emit-dir / python -m repro.compile.export)")
+    doc = json.loads(path.read_text())
+    if doc.get("version") != MANIFEST_VERSION:
+        raise ValueError(f"unsupported manifest version {doc.get('version')}")
+    return sorted(doc["tenants"], key=lambda t: t["name"])
+
+
+def register_tenant(emit_dir: str | Path, entry: dict) -> Path:
+    """Add/replace one tenant row in `emit_dir`'s manifest (atomic write).
+
+    `entry` must carry at least name/program; paths are stored relative to
+    the emit dir so the directory can be tarred up and served elsewhere.
+    """
+    if "name" not in entry or "program" not in entry:
+        raise ValueError("manifest entry needs at least name + program")
+    emit_dir = Path(emit_dir)
+    emit_dir.mkdir(parents=True, exist_ok=True)
+    path = manifest_path(emit_dir)
+    tenants = []
+    if path.exists():
+        doc = json.loads(path.read_text())
+        tenants = [t for t in doc.get("tenants", [])
+                   if t["name"] != entry["name"]]
+    entry = {k: (os.path.relpath(v, emit_dir)
+                 if k in ("program", "verilog", "report") else v)
+             for k, v in entry.items()}
+    tenants.append(entry)
+    doc = {"version": MANIFEST_VERSION,
+           "tenants": sorted(tenants, key=lambda t: t["name"])}
+    tmp = path.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    os.replace(tmp, path)
+    return path

@@ -31,7 +31,8 @@ def main(dataset: str = "breast_cancer", out_dir: str = "artifacts",
         n_hidden=ds.spec.topology[1], epochs=epochs, lr=1e-2))
     hidden_nls, out_nls = T.exact_netlists(tnn)
     cc = lower_classifier(tnn, hidden_nls, out_nls)
-    paths = write_artifacts(cc, out_dir, base=f"tnn_{dataset}")
+    paths = write_artifacts(cc, out_dir, base=f"tnn_{dataset}",
+                            dataset=dataset)
     report = egfet_report(cc)
     print(f"[compile] {dataset}: acc={tnn.test_acc:.3f} "
           f"gates={cc.ir.n_gates} depth={cc.ir.depth} "
@@ -39,6 +40,8 @@ def main(dataset: str = "breast_cancer", out_dir: str = "artifacts",
           f"power={report['total_power_mw']:.3f}mW "
           f"({report['power_source']})")
     print(f"[emit] {paths['verilog']}  {paths['report']}")
+    print(f"[emit] tenant tnn_{dataset} -> {paths['manifest']} "
+          f"(serve with: python -m repro.serve --emit-dir {out_dir})")
 
     # independent RTL re-evaluation vs the compiled device program
     rng = np.random.default_rng(0)

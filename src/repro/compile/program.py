@@ -26,21 +26,33 @@ from repro.core import circuits as C
 from repro.compile.ir import CircuitIR, CompiledClassifier, lower_netlist
 
 
+BACKENDS = ("jax", "np", "swar", "pallas")
+
+
 @dataclass
 class CircuitProgram:
-    """An executable compiled circuit (optionally a full classifier)."""
+    """An executable compiled circuit (optionally a full classifier).
+
+    `backend` picks the executor: ``np`` is the uint64 `Netlist` reference;
+    ``swar`` (alias ``jax``, the historical name) and ``pallas`` route
+    through `kernels.dispatch.program_eval_words`, which shards large
+    batches along the packed-word axis across `devices` (default: all
+    local devices).
+    """
 
     ir: CircuitIR
     thresholds: np.ndarray | None = None   # (F,) ABC V_q — classifier only
     n_classes: int | None = None
     backend: str = "jax"
+    devices: tuple | None = None
     _netlist: C.Netlist | None = field(default=None, repr=False)
     _jax_plan: tuple | None = field(default=None, repr=False)
 
     def __post_init__(self):
-        if self.backend not in ("jax", "np"):
-            raise ValueError(f"unknown backend {self.backend!r}")
-        if self.backend == "jax":
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"valid: {', '.join(BACKENDS)}")
+        if self.backend != "np":
             # plan arrays are P=1 population rows for kernels.circuit_sim
             self._jax_plan = (
                 self.ir.op.astype(np.int32)[None],
@@ -53,16 +65,16 @@ class CircuitProgram:
 
     # -- construction -------------------------------------------------------
     @classmethod
-    def from_netlist(cls, nl: C.Netlist, backend: str = "jax"
-                     ) -> "CircuitProgram":
+    def from_netlist(cls, nl: C.Netlist, backend: str = "jax",
+                     devices: tuple | None = None) -> "CircuitProgram":
         """Compile a bare netlist (DCE + levelize) into a program."""
-        return cls(ir=lower_netlist(nl), backend=backend)
+        return cls(ir=lower_netlist(nl), backend=backend, devices=devices)
 
     @classmethod
-    def from_classifier(cls, cc: CompiledClassifier, backend: str = "jax"
-                        ) -> "CircuitProgram":
+    def from_classifier(cls, cc: CompiledClassifier, backend: str = "jax",
+                        devices: tuple | None = None) -> "CircuitProgram":
         return cls(ir=cc.ir, thresholds=cc.thresholds,
-                   n_classes=cc.n_classes, backend=backend)
+                   n_classes=cc.n_classes, backend=backend, devices=devices)
 
     # -- execution ----------------------------------------------------------
     def eval_uint(self, packed_u64: np.ndarray) -> np.ndarray:
@@ -82,10 +94,12 @@ class CircuitProgram:
         return self._eval_words32(CS.pack_bits32(bits))[:S]
 
     def _eval_words32(self, words32: np.ndarray) -> np.ndarray:
-        from repro.kernels import circuit_sim as CS
+        from repro.kernels import dispatch as D
         op, in0, in1, outs = self._jax_plan
-        out = CS.population_eval_uint(op, in0, in1, outs, words32,
-                                      self.ir.n_inputs)
+        exec_backend = "swar" if self.backend == "jax" else self.backend
+        out = D.program_eval_words(op, in0, in1, outs, words32,
+                                   self.ir.n_inputs, backend=exec_backend,
+                                   devices=self.devices)
         return np.asarray(out[0], dtype=np.int64)
 
     # -- classifier inference ----------------------------------------------

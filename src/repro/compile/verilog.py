@@ -200,13 +200,33 @@ def egfet_report(cc: CompiledClassifier, interface: str | None = "abc") -> dict:
 
 def write_artifacts(cc: CompiledClassifier, out_dir: str | Path,
                     base: str | None = None,
-                    interface: str | None = "abc") -> dict[str, str]:
-    """Write `<base>.v` + `<base>_egfet.json` under `out_dir`."""
+                    interface: str | None = "abc",
+                    dataset: str | None = None) -> dict[str, str]:
+    """Write `<base>.v` + `<base>_egfet.json` + a servable program bundle
+    under `out_dir`, and register the design as tenant `base` in the
+    directory's `fleet.json` manifest (`repro.serve` consumes it)."""
+    from repro.compile import artifact as A
+
     out = Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
     base = base or _sanitize(cc.name or "tnn_classifier")
     vpath = out / f"{base}.v"
     rpath = out / f"{base}_egfet.json"
+    ppath = out / f"{base}{A.PROGRAM_SUFFIX}"
     vpath.write_text(emit_classifier_verilog(cc))
     rpath.write_text(json.dumps(egfet_report(cc, interface), indent=2) + "\n")
-    return {"verilog": str(vpath), "report": str(rpath)}
+    A.save_program(cc, ppath)
+    mpath = A.register_tenant(out, {
+        "name": base,
+        "program": str(ppath),
+        "verilog": str(vpath),
+        "report": str(rpath),
+        # only an explicit dataset is trustworthy here: ir.meta["dataset"]
+        # holds the model *name*, which need not be a loadable dataset
+        "dataset": dataset,
+        "n_features": cc.n_features,
+        "n_classes": cc.n_classes,
+        "n_gates": cc.ir.n_gates,
+    })
+    return {"verilog": str(vpath), "report": str(rpath),
+            "program": str(ppath), "manifest": str(mpath)}

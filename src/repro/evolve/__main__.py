@@ -119,11 +119,15 @@ def _run_one(args: argparse.Namespace, dataset: str | None) -> dict:
         from repro.compile import egfet_report, write_artifacts
         best_x = res.archive_x[int(np.argmin(res.archive_f[:, 0]))]
         cc = compile_archive_winner(problem, best_x)
-        paths = write_artifacts(cc, args.emit_dir, base=problem.name)
+        paths = write_artifacts(cc, args.emit_dir, base=problem.name,
+                                dataset=dataset)
         payload["artifacts"] = paths
         rep = egfet_report(cc)
         print(f"[{problem.name}] emitted winner: {cc.ir.n_gates} gates, "
               f"{rep['total_area_mm2']:.2f} mm^2 -> {paths['verilog']}")
+        print(f"[{problem.name}] fleet tenant registered in "
+              f"{paths['manifest']} (python -m repro.serve --emit-dir "
+              f"{args.emit_dir})")
     return payload
 
 

@@ -97,6 +97,73 @@ def population_eval_pop(pop: NetlistPopulation, packed_u64: np.ndarray,
                                 devices=devices)
 
 
+def program_eval_words(op: np.ndarray, in0: np.ndarray, in1: np.ndarray,
+                       outputs: np.ndarray, words32: np.ndarray,
+                       n_inputs: int, backend: str = "swar",
+                       devices=None) -> np.ndarray:
+    """Single-program serving dispatch: `(n_inputs, W)` uint32 words ->
+    `(P, W*32)` int64 decoded outputs, on any backend.
+
+    The population twin of `population_eval_uint` shards the *population*
+    axis; a serving engine runs one program (P=1 plan rows) over a large
+    batch, so here the independent axis is the packed *word* plane — for
+    the device backends large batches split round-even along the word axis
+    across `jax.local_devices()` (or an explicit device list) and results
+    concatenate on host.  `repro.serve` pins each fleet tenant's dispatches
+    through this entry point, so a tenant maps to `np`/`swar`/`pallas`
+    exactly like a campaign evaluator does.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown eval backend {backend!r}; "
+                         f"valid: {', '.join(BACKENDS)}")
+    op = np.asarray(op)
+    words32 = np.ascontiguousarray(words32, dtype=np.uint32)
+    if words32.ndim != 2:
+        raise ValueError("program_eval_words wants a shared (n_inputs, W) "
+                         "word plane")
+    if backend == "np":
+        # repack the uint32 lanes as the uint64 words the reference eats
+        # (inverse of pack_words32: little-endian lane pairs)
+        W32 = words32.shape[1]
+        if W32 % 2:
+            words32 = np.concatenate(
+                [words32, np.zeros((words32.shape[0], 1), np.uint32)], axis=1)
+        packed_u64 = np.ascontiguousarray(words32).view(np.uint64)
+        pop = NetlistPopulation(n_inputs, np.asarray(op, dtype=np.int16),
+                                np.asarray(in0, dtype=np.int32),
+                                np.asarray(in1, dtype=np.int32),
+                                np.asarray(outputs, dtype=np.int32))
+        return pop.eval_uint(packed_u64)[:, : W32 * 32]
+
+    import jax
+
+    from repro.kernels import circuit_sim as CS
+    if backend == "pallas":
+        from repro.kernels import pallas_circuit_sim as PS
+        eval_fn = PS.population_eval_uint
+    else:
+        eval_fn = CS.population_eval_uint
+    plan = (np.asarray(op, dtype=np.int32), np.asarray(in0, dtype=np.int32),
+            np.asarray(in1, dtype=np.int32),
+            np.asarray(outputs, dtype=np.int32))
+    # an explicit device list is a pinning request even when it yields a
+    # single shard — only the implicit all-local-devices default may skip
+    # the device_put and run wherever jit places it
+    pinned = devices is not None
+    devices = list(devices) if pinned else jax.local_devices()
+    W = words32.shape[1]
+    slices = (_device_slices(W, len(devices)) if len(devices) > 1
+              else [slice(0, W)])
+    outs = []
+    for sl, dev in zip(slices, devices):
+        shard = words32[:, sl]
+        if pinned or len(slices) > 1:
+            shard = jax.device_put(shard, dev)
+        outs.append(np.asarray(eval_fn(*plan, shard, n_inputs)))
+    out = np.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.astype(np.int64)
+
+
 def population_pc_errors(pop: NetlistPopulation, packed_u64: np.ndarray,
                          true: np.ndarray, backend: str = "swar",
                          devices=None) -> tuple[np.ndarray, np.ndarray]:

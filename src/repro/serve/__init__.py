@@ -1,0 +1,38 @@
+"""repro.serve — multi-tenant sensor-serving fleet.
+
+Loads every classifier artifact an emit directory's `fleet.json` manifest
+names into per-tenant `CircuitServingEngine`s behind one router, replaces
+manual `flush()` with a deadline-driven micro-batching scheduler (flush on
+`max_batch` *or* when the oldest queued request would outlive its latency
+budget), runs one background dispatch thread per execution backend
+(`np`/`swar`/`pallas` via `kernels.dispatch`), and tracks per-tenant +
+fleet-wide throughput / p50/p99 latency / SLO violations.
+
+    from repro.serve import ClassifierFleet
+    fleet = ClassifierFleet.from_emit_dir("artifacts", backends="swar")
+    req = fleet.submit("tnn_cardio", reading)      # returns immediately
+    label = req.result(timeout=1.0)                # blocks until served
+    fleet.shutdown(drain=True)
+
+CLI replay of held-out test streams:  python -m repro.serve --emit-dir ...
+"""
+from repro.serve.batcher import MicroBatcher, QueuedItem
+from repro.serve.fleet import (
+    DEFAULT_DEADLINE_MS,
+    DEFAULT_MAX_BATCH,
+    FLEET_BACKENDS,
+    ClassifierFleet,
+    FleetRequest,
+    TenantSpec,
+)
+
+__all__ = [
+    "DEFAULT_DEADLINE_MS",
+    "DEFAULT_MAX_BATCH",
+    "FLEET_BACKENDS",
+    "ClassifierFleet",
+    "FleetRequest",
+    "MicroBatcher",
+    "QueuedItem",
+    "TenantSpec",
+]

@@ -1,0 +1,217 @@
+"""Fleet CLI — replay held-out sensor streams against an emitted fleet.
+
+    PYTHONPATH=src python -m repro.serve --emit-dir artifacts \
+        --replay all --producers 4 --readings 1024 --deadline-ms 100
+
+Loads every tenant the emit dir's `fleet.json` manifest names (emitted by
+`repro.evolve --emit-dir` or `python -m repro.compile.export`), replays
+each tenant's held-out test split through the fleet from N concurrent
+producer threads, and prints a per-tenant report: throughput, p50/p99
+request latency, SLO violations, and bit-identity of the served labels
+against the offline `CircuitProgram.predict` reference.  `--strict` turns
+any mismatch, SLO violation or dispatch error into a nonzero exit — the CI
+fleet smoke runs exactly that.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+from pathlib import Path
+
+import numpy as np
+
+from repro.serve.fleet import (DEFAULT_DEADLINE_MS, DEFAULT_MAX_BATCH,
+                               FLEET_BACKENDS, ClassifierFleet)
+
+
+def _parse_args(argv=None) -> argparse.Namespace:
+    ap = argparse.ArgumentParser(prog="python -m repro.serve",
+                                 description=__doc__)
+    ap.add_argument("--emit-dir", required=True,
+                    help="directory holding fleet.json + program bundles")
+    ap.add_argument("--replay", default="all",
+                    help="comma list of tenant or dataset names (default: "
+                         "every tenant with a dataset)")
+    ap.add_argument("--backend", choices=FLEET_BACKENDS, default="swar",
+                    help="execution backend for every tenant")
+    ap.add_argument("--backends", default=None,
+                    help="per-tenant pins, e.g. 'tnn_cardio=pallas,"
+                         "tnn_breast_cancer=np' (overrides --backend)")
+    ap.add_argument("--max-batch", type=int, default=DEFAULT_MAX_BATCH)
+    ap.add_argument("--deadline-ms", type=float, default=DEFAULT_DEADLINE_MS,
+                    help="per-request latency budget (SLO)")
+    ap.add_argument("--producers", type=int, default=4,
+                    help="concurrent submitter threads")
+    ap.add_argument("--readings", type=int, default=1024,
+                    help="readings replayed per tenant")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--timeout", type=float, default=120.0,
+                    help="overall completion timeout (seconds)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero on any mismatch / SLO miss / error")
+    ap.add_argument("--out", default=None,
+                    help="write the replay report as JSON here")
+    return ap.parse_args(argv)
+
+
+def _build_streams(fleet: ClassifierFleet, selected: list[str],
+                   n_readings: int, seed: int) -> dict[str, np.ndarray]:
+    from repro.data.tabular import make_dataset
+
+    streams = {}
+    for i, name in enumerate(selected):
+        dataset = fleet._tenant(name).spec.dataset
+        if dataset is None:
+            raise SystemExit(f"tenant {name} has no dataset in the "
+                             "manifest — nothing to replay against")
+        ds = make_dataset(dataset)
+        rng = np.random.default_rng(seed + i)
+        idx = rng.integers(0, ds.x_test.shape[0], size=n_readings)
+        streams[name] = ds.x_test[idx]
+    return streams
+
+
+def _select_tenants(fleet: ClassifierFleet, replay: str) -> list[str]:
+    rows = {name: fleet._tenant(name).spec for name in fleet.tenants}
+    if replay == "all":
+        selected = [n for n, s in rows.items() if s.dataset]
+        skipped = [n for n, s in rows.items() if not s.dataset]
+        if skipped:
+            print(f"[fleet] skipping tenants without a dataset: "
+                  f"{', '.join(sorted(skipped))}")
+    else:
+        want = [w.strip() for w in replay.split(",") if w.strip()]
+        selected = [n for n, s in rows.items()
+                    if n in want or (s.dataset in want)]
+        missing = [w for w in want
+                   if not any(n == w or rows[n].dataset == w
+                              for n in rows)]
+        if missing:
+            raise SystemExit(f"--replay names not served by this fleet: "
+                             f"{', '.join(missing)}")
+    if not selected:
+        raise SystemExit("nothing to replay (no tenant with a dataset "
+                         "matched --replay)")
+    return sorted(selected)
+
+
+def replay_fleet(fleet: ClassifierFleet, streams: dict[str, np.ndarray],
+                 producers: int = 4, timeout: float = 120.0) -> dict:
+    """Submit every stream row from `producers` interleaved threads; wait;
+    verify served labels bit-identical to offline `CircuitProgram.predict`.
+    """
+    # interleave across tenants so every producer hits every tenant
+    tasks = []
+    order = sorted(streams)
+    max_len = max(x.shape[0] for x in streams.values())
+    for i in range(max_len):
+        for name in order:
+            if i < streams[name].shape[0]:
+                tasks.append((name, i))
+    results: dict[str, list] = {n: [None] * streams[n].shape[0]
+                                for n in order}
+    errors: list[str] = []
+
+    def produce(worker: int) -> None:
+        try:
+            for name, i in tasks[worker::producers]:
+                results[name][i] = fleet.submit(name, streams[name][i])
+        except Exception as exc:    # surface instead of hanging the join
+            errors.append(f"producer {worker}: {type(exc).__name__}: {exc}")
+
+    threads = [threading.Thread(target=produce, args=(w,), daemon=True)
+               for w in range(max(1, producers))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout)
+    stuck = [t.name for t in threads if t.is_alive()]
+    if stuck:
+        raise TimeoutError(f"producers still submitting after {timeout}s: "
+                           f"{', '.join(stuck)}")
+    if errors:
+        raise RuntimeError("; ".join(errors))
+
+    report = {"tenants": {}, "producers": producers}
+    ok = True
+    for name in order:
+        reqs = results[name]
+        for r in reqs:
+            r.result(timeout)                 # waits; raises on error
+        labels = np.array([r.label for r in reqs], dtype=np.int32)
+        prog = fleet._tenant(name).engine.program
+        ref = prog.predict(streams[name]).astype(np.int32)
+        match = bool((labels == ref).all())
+        ok &= match
+        misses = sum(r.slo_miss for r in reqs)
+        worst = max((r.latency_ms for r in reqs), default=0.0)
+        s = fleet._tenant(name).engine.stats.summary()
+        report["tenants"][name] = {
+            "backend": fleet.tenant_backend(name),
+            "dataset": fleet._tenant(name).spec.dataset,
+            "readings": len(reqs),
+            "labels_match_offline": match,
+            "slo_miss": int(misses),
+            "worst_latency_ms": round(worst, 3),
+            **s,
+        }
+    report["fleet"] = fleet.stats.summary()
+    report["errors"] = list(fleet.errors)
+    report["labels_match_offline"] = ok
+    return report
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv)
+    backends: str | dict = args.backend
+    if args.backends:
+        backends = {}
+        for pair in args.backends.split(","):
+            name, _, be = pair.strip().partition("=")
+            if be not in FLEET_BACKENDS:
+                raise SystemExit(f"bad --backends entry {pair!r}; backends: "
+                                 f"{', '.join(FLEET_BACKENDS)}")
+            backends[name] = be
+    fleet = ClassifierFleet.from_emit_dir(
+        args.emit_dir, backends=backends, max_batch=args.max_batch,
+        deadline_ms=args.deadline_ms)
+    try:
+        selected = _select_tenants(fleet, args.replay)
+        streams = _build_streams(fleet, selected, args.readings, args.seed)
+        print(f"[fleet] {len(fleet.tenants)} tenant(s) loaded, replaying "
+              f"{', '.join(selected)} x {args.readings} readings from "
+              f"{args.producers} producers (deadline {args.deadline_ms} ms)")
+        report = replay_fleet(fleet, streams, producers=args.producers,
+                              timeout=args.timeout)
+    finally:
+        fleet.shutdown(drain=True)
+
+    for name, row in report["tenants"].items():
+        verdict = "ok" if row["labels_match_offline"] else "MISMATCH"
+        print(f"[{name}] backend={row['backend']} "
+              f"{row['readings']} readings in {row['n_batches']} batches, "
+              f"{row['readings_per_s']:.0f} readings/s, req p50 "
+              f"{row['req_p50_ms']:.2f} ms p99 {row['req_p99_ms']:.2f} ms, "
+              f"slo_miss={row['slo_miss']} labels={verdict}")
+    f = report["fleet"]
+    print(f"[fleet] total {f['n_readings']} readings, "
+          f"{f['n_batches']} dispatches, slo_miss={f['n_slo_miss']}, "
+          f"req p99 {f['req_p99_ms']:.2f} ms")
+    if report["errors"]:
+        print(f"[fleet] dispatch errors: {report['errors']}")
+    if args.out:
+        Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.out).write_text(json.dumps(report, indent=2, sort_keys=True)
+                                  + "\n")
+        print(f"wrote {args.out}")
+
+    bad = (not report["labels_match_offline"]) or report["errors"]
+    if args.strict:
+        bad = bad or report["fleet"]["n_slo_miss"] > 0
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

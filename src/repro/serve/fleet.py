@@ -1,0 +1,414 @@
+"""Multi-tenant sensor-serving fleet: router + deadline-driven dispatch.
+
+One `ClassifierFleet` serves every classifier emitted under an emit
+directory (`repro.evolve --emit-dir`, `python -m repro.compile.export`):
+each manifest tenant gets its own `CircuitServingEngine` over the loaded
+program, pinned to an execution backend (`np`/`swar`/`pallas` — the same
+`kernels.dispatch` routing the campaign evaluators use, so a `swar` or
+`pallas` tenant shards large batches along the packed-word axis across
+local devices), and a single router fans `submit(tenant, reading)` calls
+into per-tenant `MicroBatcher` queues.
+
+Dispatch is pushed off the caller thread: one background scheduler thread
+per *backend* watches the queues of the tenants pinned to it and flushes a
+tenant the moment a batch is due — `max_batch` queued, or the oldest
+request about to outlive its latency budget (see `batcher.py`).  Per-batch
+execution cost is tracked as an EMA per tenant and fed back into the
+deadline policy, so "about to" means "could not survive one more dispatch
+interval".  Completed requests carry label + measured latency; per-tenant
+and fleet-wide `ServeStats` accumulate throughput, p50/p99 batch and
+request latency, and SLO-violation counts.
+
+Everything the scheduler adds is bookkeeping — labels come from the same
+`CircuitProgram` the offline path runs, so fleet output is bit-identical
+to `CircuitProgram.predict` per tenant on every backend (pinned by
+tests/test_serve_fleet.py and the tests/test_conformance.py fleet matrix).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import numpy as np
+
+from repro.compile.artifact import load_manifest, load_program
+from repro.compile.program import CircuitProgram
+from repro.serve.batcher import MicroBatcher, QueuedItem
+from repro.serving.circuit_engine import (STATS_WINDOW, CircuitServingEngine,
+                                          ServeStats)
+
+FLEET_BACKENDS = ("np", "swar", "pallas")
+DEFAULT_DEADLINE_MS = 50.0
+DEFAULT_MAX_BATCH = 256
+
+
+@dataclass
+class FleetRequest:
+    """One routed sensor reading; completion is signalled via `result()`."""
+
+    uid: int
+    tenant: str
+    readings: np.ndarray
+    deadline_ms: float
+    label: int | None = None
+    latency_ms: float | None = None
+    error: str | None = None
+    _t_submit: float = 0.0
+    _event: threading.Event = field(default_factory=threading.Event,
+                                    repr=False)
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> int:
+        """Block until the label is ready (raises on timeout/cancel)."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.uid} ({self.tenant}) not "
+                               f"served within {timeout}s")
+        if self.error is not None:
+            raise RuntimeError(f"request {self.uid} ({self.tenant}) failed: "
+                               f"{self.error}")
+        return self.label
+
+    @property
+    def slo_miss(self) -> bool:
+        return self.latency_ms is not None and self.latency_ms > self.deadline_ms
+
+
+@dataclass
+class TenantSpec:
+    """Everything needed to stand up one tenant engine."""
+
+    name: str
+    program: CircuitProgram
+    backend: str = "swar"              # np | swar | pallas
+    max_batch: int = DEFAULT_MAX_BATCH
+    deadline_ms: float = DEFAULT_DEADLINE_MS
+    dataset: str | None = None
+    meta: dict = field(default_factory=dict)
+
+
+class _Tenant:
+    """Runtime state: engine + queue + dispatch-cost estimate."""
+
+    def __init__(self, spec: TenantSpec, stats_window: int):
+        if spec.backend not in FLEET_BACKENDS:
+            raise ValueError(f"unknown tenant backend {spec.backend!r}; "
+                             f"valid: {', '.join(FLEET_BACKENDS)}")
+        self.spec = spec
+        self.engine = CircuitServingEngine(spec.program, spec.max_batch,
+                                           stats_window=stats_window)
+        self.batcher = MicroBatcher(spec.max_batch, spec.deadline_ms)
+        self.est_dispatch_s = 1e-3      # EMA of recent dispatch cost
+        self.last_dispatch_s = 1e-3     # most recent (spike-sensitive)
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+
+class _BackendWorker(threading.Thread):
+    """One dispatch thread per execution backend.
+
+    Owns the queues of every tenant pinned to its backend behind one
+    condition variable: producers notify on submit, the loop sleeps until
+    the earliest possible due instant, pops the most urgent due batch, and
+    dispatches it outside the lock so producers never block on device time.
+    """
+
+    def __init__(self, fleet: "ClassifierFleet", backend: str,
+                 tenants: list[_Tenant]):
+        super().__init__(name=f"fleet-dispatch-{backend}", daemon=True)
+        self.fleet = fleet
+        self.backend = backend
+        self.tenants = tenants
+        self.cond = threading.Condition()
+        self.stop = False          # set under cond; drain-all then exit
+        self.kick = False          # flush(): treat every queue as due
+        self.in_flight = 0
+
+    # policy: urgency-ordered among due tenants --------------------------
+    def _eta_s(self, t: _Tenant) -> float:
+        """Expected submit-of-flush -> completion cost for one batch.
+
+        Taking the max of the smoothed and the most recent dispatch time
+        keeps the deadline trigger honest when a backend's cost spikes
+        (e.g. pallas interpret retrace): an EMA alone lags the spike and
+        converts near-deadline flushes into systematic small overshoots.
+        """
+        return (max(t.est_dispatch_s, t.last_dispatch_s)
+                * self.fleet.safety_factor + self.fleet.sched_slack_s)
+
+    def _pick(self, now: float) -> _Tenant | None:
+        due = [t for t in self.tenants if len(t.batcher)
+               and (self.stop or self.kick
+                    or t.batcher.due(now, self._eta_s(t)))]
+        if not due:
+            return None
+        return min(due, key=lambda t: t.batcher.oldest_due_at)
+
+    def _wait_s(self, now: float) -> float | None:
+        wakes = [t.batcher.next_due_at(self._eta_s(t))
+                 for t in self.tenants if len(t.batcher)]
+        if not wakes:
+            return None                      # sleep until notified
+        return max(1e-4, min(wakes) - now)
+
+    def queued(self) -> int:
+        return sum(len(t.batcher) for t in self.tenants)
+
+    def run(self) -> None:
+        while True:
+            with self.cond:
+                while True:
+                    now = self.fleet._clock()
+                    tenant = self._pick(now)
+                    if tenant is not None:
+                        batch = tenant.batcher.pop_batch()
+                        self.in_flight += len(batch)
+                        break
+                    if self.stop and self.queued() == 0:
+                        return
+                    self.cond.wait(self._wait_s(now))
+            try:
+                self.fleet._dispatch(tenant, batch)
+            finally:
+                with self.cond:
+                    self.in_flight -= len(batch)
+                    self.cond.notify_all()
+
+
+class ClassifierFleet:
+    """Router + scheduler over per-tenant serving engines."""
+
+    def __init__(self, specs: list[TenantSpec], *,
+                 stats_window: int = STATS_WINDOW,
+                 safety_factor: float = 1.5, sched_slack_s: float = 5e-3,
+                 warmup: bool = True, autostart: bool = True,
+                 clock=time.perf_counter):
+        if not specs:
+            raise ValueError("a fleet needs at least one tenant")
+        names = [s.name for s in specs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names: {sorted(names)}")
+        self.stats = ServeStats(window=stats_window)
+        self.safety_factor = safety_factor
+        self.sched_slack_s = sched_slack_s
+        self._clock = clock
+        self._tenants: dict[str, _Tenant] = {
+            s.name: _Tenant(s, stats_window) for s in specs}
+        if warmup:
+            for t in self._tenants.values():
+                t.est_dispatch_s = max(t.engine.warmup(), 1e-4)
+                t.last_dispatch_s = t.est_dispatch_s
+        by_backend: dict[str, list[_Tenant]] = {}
+        for t in self._tenants.values():
+            by_backend.setdefault(t.spec.backend, []).append(t)
+        self._workers = {b: _BackendWorker(self, b, ts)
+                         for b, ts in sorted(by_backend.items())}
+        self._worker_of = {t.name: self._workers[t.spec.backend]
+                           for t in self._tenants.values()}
+        self._uid_lock = threading.Lock()
+        self._next_uid = 0
+        self.errors: list[str] = []     # dispatch-thread failures, in order
+        self._shutdown = False
+        self._started = False
+        if autostart:
+            self.start()
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_emit_dir(cls, emit_dir: str | Path,
+                      backends: str | dict[str, str] = "swar",
+                      max_batch: int = DEFAULT_MAX_BATCH,
+                      deadline_ms: float = DEFAULT_DEADLINE_MS,
+                      tenants: list[str] | None = None,
+                      **kw) -> "ClassifierFleet":
+        """Serve every artifact the emit dir's `fleet.json` manifest names.
+
+        `backends` pins execution: one string for the whole fleet, or a
+        `{tenant: backend}` map (missing names fall back to `swar`).
+        """
+        emit_dir = Path(emit_dir)
+        rows = load_manifest(emit_dir)
+        if tenants is not None:
+            known = {r["name"] for r in rows}
+            missing = sorted(set(tenants) - known)
+            if missing:
+                raise KeyError(f"tenants not in manifest: "
+                               f"{', '.join(missing)}; available: "
+                               f"{', '.join(sorted(known))}")
+            rows = [r for r in rows if r["name"] in tenants]
+        specs = []
+        for row in rows:
+            backend = (backends if isinstance(backends, str)
+                       else backends.get(row["name"], "swar"))
+            program = load_program(emit_dir / row["program"], backend=backend)
+            specs.append(TenantSpec(
+                name=row["name"], program=program, backend=backend,
+                max_batch=max_batch, deadline_ms=deadline_ms,
+                dataset=row.get("dataset"), meta=dict(row)))
+        return cls(specs, **kw)
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> None:
+        if not self._started:
+            self._started = True
+            for w in self._workers.values():
+                w.start()
+
+    def __enter__(self) -> "ClassifierFleet":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown(drain=exc == (None, None, None))
+
+    @property
+    def tenants(self) -> list[str]:
+        return sorted(self._tenants)
+
+    def tenant_backend(self, name: str) -> str:
+        return self._tenant(name).spec.backend
+
+    def n_features(self, name: str) -> int:
+        return self._tenant(name).engine.n_features
+
+    def _tenant(self, name: str) -> _Tenant:
+        try:
+            return self._tenants[name]
+        except KeyError:
+            raise KeyError(f"unknown tenant {name!r}; serving: "
+                           f"{', '.join(self.tenants)}") from None
+
+    @property
+    def pending(self) -> int:
+        return sum(w.queued() + w.in_flight for w in self._workers.values())
+
+    # -- request path --------------------------------------------------------
+    def submit(self, tenant: str, readings: np.ndarray,
+               deadline_ms: float | None = None) -> FleetRequest:
+        """Queue one reading for `tenant`; returns a completion handle."""
+        t = self._tenant(tenant)
+        readings = np.asarray(readings, dtype=np.float64).reshape(-1)
+        if readings.shape[0] != t.engine.n_features:
+            raise ValueError(f"{tenant}: expected {t.engine.n_features} "
+                             f"features, got {readings.shape[0]}")
+        if deadline_ms is None:
+            deadline_ms = t.spec.deadline_ms
+        with self._uid_lock:
+            uid = self._next_uid
+            self._next_uid += 1
+        req = FleetRequest(uid=uid, tenant=tenant, readings=readings,
+                           deadline_ms=deadline_ms)
+        worker = self._worker_of[tenant]
+        with worker.cond:
+            if self._shutdown:
+                raise RuntimeError("fleet is shut down")
+            entry = t.batcher.submit(req, now=self._clock(),
+                                     deadline_ms=deadline_ms)
+            req._t_submit = entry.t_submit
+            worker.cond.notify_all()
+        return req
+
+    def classify_stream(self, tenant: str, x: np.ndarray) -> np.ndarray:
+        """Bulk path: route a whole `(S, F)` stream straight to the engine."""
+        return self._tenant(tenant).engine.classify_stream(x)
+
+    # -- dispatch (worker threads) -------------------------------------------
+    def _dispatch(self, tenant: _Tenant, entries: list[QueuedItem]) -> None:
+        reqs: list[FleetRequest] = [e.item for e in entries]
+        try:
+            x = np.stack([r.readings for r in reqs])
+            t0 = self._clock()
+            labels = tenant.engine.classify_batch(x)
+            dt = self._clock() - t0
+        except Exception as exc:        # complete exceptionally, never hang
+            msg = f"{type(exc).__name__}: {exc}"
+            self.errors.append(f"{tenant.name}: {msg}")
+            for r in reqs:
+                r.error = msg
+                r._event.set()
+            return
+        tenant.est_dispatch_s = 0.7 * tenant.est_dispatch_s + 0.3 * dt
+        tenant.last_dispatch_s = dt
+        self.stats.record(len(reqs), dt)
+        # FleetRequest carries the same completion fields as SensorRequest,
+        # so the engine's label/latency/stats attach is reused verbatim
+        tenant.engine.complete(reqs, labels)
+        for r in reqs:
+            self.stats.record_request(r.latency_ms, r.deadline_ms)
+            r._event.set()
+
+    # -- drain / shutdown ----------------------------------------------------
+    def flush(self, timeout: float | None = 30.0) -> None:
+        """Force-dispatch the whole backlog and wait until it is served.
+
+        Waits on queued *and* in-flight work: a request popped by a worker
+        just before flush() is called is still awaited (workers notify the
+        condition after every dispatch completes).
+        """
+        deadline = None if timeout is None else self._clock() + timeout
+        for w in self._workers.values():
+            with w.cond:
+                w.kick = True
+                w.cond.notify_all()
+        try:
+            for w in self._workers.values():
+                with w.cond:
+                    while w.queued() or w.in_flight:
+                        left = (None if deadline is None
+                                else deadline - self._clock())
+                        if left is not None and left <= 0:
+                            raise TimeoutError(
+                                f"flush: {w.queued()} queued + "
+                                f"{w.in_flight} in-flight requests still "
+                                f"pending on backend {w.backend}")
+                        w.cond.wait(0.05 if left is None
+                                    else min(left, 0.05))
+        finally:
+            for w in self._workers.values():
+                with w.cond:
+                    w.kick = False
+
+    def shutdown(self, drain: bool = True, timeout: float = 60.0) -> None:
+        """Stop dispatch threads; `drain` serves the backlog first."""
+        if self._shutdown:
+            return
+        self._shutdown = True
+        for w in self._workers.values():
+            with w.cond:
+                if not drain:       # cancel the backlog deterministically
+                    for t in w.tenants:
+                        for batch in t.batcher.drain():
+                            for e in batch:
+                                e.item.error = "cancelled at shutdown"
+                                e.item._event.set()
+                w.stop = True
+                w.cond.notify_all()
+        if self._started:
+            for w in self._workers.values():
+                w.join(timeout)
+                if w.is_alive():
+                    raise TimeoutError(f"worker {w.name} did not stop "
+                                       f"within {timeout}s")
+
+    # -- observability -------------------------------------------------------
+    def stats_summary(self) -> dict:
+        """Fleet-wide + per-tenant `ServeStats` summaries."""
+        return {
+            "fleet": self.stats.summary(),
+            "tenants": {
+                name: {
+                    "backend": t.spec.backend,
+                    "max_batch": t.spec.max_batch,
+                    "deadline_ms": t.spec.deadline_ms,
+                    "dataset": t.spec.dataset,
+                    "pending": len(t.batcher),
+                    **t.engine.stats.summary(),
+                }
+                for name, t in sorted(self._tenants.items())
+            },
+        }

@@ -66,6 +66,74 @@ def test_stats_summary(toy):
     assert s["busy_s"] > 0
 
 
+def test_stats_rings_stay_bounded_on_long_streams(toy):
+    """Regression: ServeStats.batch_ms grew one entry per dispatch forever;
+    a day-long sensor stream must hold stats memory constant."""
+    _, _, prog = toy
+    engine = CircuitServingEngine(prog, max_batch=1, stats_window=64)
+    engine.warmup()
+    engine.classify_stream(np.random.default_rng(2).random((300, 9)))
+    s = engine.stats
+    assert s.n_batches == 300                       # exact totals survive
+    assert s.n_readings == 300
+    assert len(s.batch_ms) == 64                    # ring, not a list
+    assert len(s.batch_ms.values()) == 64
+    assert s.batch_ms.total_pushed == 300
+    assert s.percentile_ms(50) <= s.percentile_ms(99)
+    # request ring bounds identically
+    for _ in range(200):
+        s.record_request(1.0, deadline_ms=2.0)
+    assert len(s.request_ms) == 64
+    assert s.n_requests == 200 and s.n_slo_miss == 0
+    s.record_request(3.0, deadline_ms=2.0)
+    assert s.n_slo_miss == 1
+
+
+def test_concurrent_submit_flush_every_latency_set(toy):
+    """Regression: requests arriving while a dispatch was in flight (or a
+    second flusher racing the queue) could complete without latency_ms.
+    Under concurrent submit + double flush, every request must be answered
+    exactly once with label and latency both set."""
+    import threading
+
+    _, _, prog = toy
+    engine = CircuitServingEngine(prog, max_batch=4)
+    engine.warmup()
+    rng = np.random.default_rng(3)
+    x = rng.random((120, 9))
+    reqs: list = []
+    done_lists: list[list] = [[], []]
+    stop = threading.Event()
+
+    def producer():
+        for row in x:
+            reqs.append(engine.submit(row))
+            if len(reqs) % 10 == 0:
+                import time
+                time.sleep(0.0005)
+        stop.set()
+
+    def flusher(k: int):
+        while not stop.is_set() or engine.pending:
+            done_lists[k].extend(engine.flush())
+
+    threads = [threading.Thread(target=producer)] + [
+        threading.Thread(target=flusher, args=(k,)) for k in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30)
+
+    assert engine.pending == 0
+    served = done_lists[0] + done_lists[1]
+    assert sorted(r.uid for r in served) == list(range(120))  # exactly once
+    ref = prog.predict(x)
+    for r in reqs:
+        assert r.label == int(ref[r.uid])
+        assert r.latency_ms is not None and r.latency_ms >= 0.0
+    assert engine.stats.n_requests == 120
+
+
 def test_engine_input_validation(toy):
     _, cc, prog = toy
     engine = CircuitServingEngine(prog, max_batch=4)

@@ -132,6 +132,63 @@ def test_fuzz_sweep_large():
 
 
 # ---------------------------------------------------------------------------
+# Fleet serving path: emitted artifact -> ClassifierFleet -> labels must
+# match predict_with_circuits on every golden vector, on every backend
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def golden_fleet():
+    """Emit all five golden classifiers into one fleet dir (+ references)."""
+    import tempfile
+
+    from test_golden import GOLDEN_DIR, golden_classifier
+    from repro.compile.verilog import write_artifacts
+    from repro.core.ternary import abc_binarize
+    from repro.core.tnn import TrainedTNN, predict_with_circuits
+    from repro.data.tabular import DATASETS
+
+    tmp = tempfile.TemporaryDirectory(prefix="golden_fleet_")
+    refs = {}
+    for name in sorted(DATASETS):
+        cc, _ = golden_classifier(name)
+        write_artifacts(cc, tmp.name, base=f"tnn_{name}", dataset=name)
+        x = np.load(GOLDEN_DIR / f"{name}.npz")["x"]
+        # offline oracle: the pre-compile netlist evaluator over ABC bits
+        tnn = TrainedTNN(w1t=cc.w1t, w2t=cc.w2t, thresholds=cc.thresholds,
+                         train_acc=0.0, test_acc=0.0, name=name)
+        xbin = np.asarray(abc_binarize(x, cc.thresholds)).astype(np.uint8)
+        labels = predict_with_circuits(tnn, xbin, cc.hidden_nls, cc.out_nls)
+        refs[f"tnn_{name}"] = (x, labels)
+    yield tmp.name, refs
+    tmp.cleanup()
+
+
+@pytest.mark.parametrize("backend", ("np", "swar", "pallas"))
+def test_fleet_serving_matches_predict_with_circuits(golden_fleet, backend):
+    """The whole serving stack — manifest load, router, micro-batcher,
+    backend dispatch through kernels.dispatch — must be label-transparent:
+    every golden vector of every Table-2 dataset gets the exact
+    `predict_with_circuits` label, per tenant, on np/swar/pallas."""
+    from repro.serve import ClassifierFleet
+
+    emit_dir, refs = golden_fleet
+    fleet = ClassifierFleet.from_emit_dir(emit_dir, backends=backend,
+                                          max_batch=64, deadline_ms=5_000.0)
+    try:
+        handles = {tenant: [fleet.submit(tenant, row) for row in x]
+                   for tenant, (x, _) in sorted(refs.items())}
+        fleet.flush(timeout=120)
+        for tenant, (_, want) in refs.items():
+            got = np.array([r.result(timeout=120) for r in handles[tenant]],
+                           dtype=np.int32)
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"fleet[{backend}] != "
+                                   f"predict_with_circuits ({tenant})")
+        assert fleet.errors == []
+    finally:
+        fleet.shutdown(drain=True)
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis-driven variant (shrinks failures to minimal netlists)
 # ---------------------------------------------------------------------------
 try:

@@ -1,0 +1,276 @@
+"""Concurrency/soak tier for the multi-tenant serving fleet.
+
+Three layers of pinning:
+
+  * **soak** — N producer threads blast interleaved readings at a
+    multi-tenant fleet for a fixed wall-clock budget; every request must be
+    answered exactly once, bit-identical to the offline
+    `CircuitProgram.predict`, and no request may exceed its deadline by
+    more than one dispatch interval (+ CI scheduling slack).
+  * **property** — the deadline-driven `MicroBatcher` policy is pure logic
+    over an injected clock, so hypothesis drives arbitrary arrival orders,
+    batch sizes and budgets through the exact production decision code:
+    never reorders within a tenant, never exceeds `max_batch`, drains to
+    empty on shutdown.
+  * **lifecycle** — manifest round-trips, deadline-triggered partial
+    flushes, drain-vs-cancel shutdown, validation errors.
+
+Budget knob: the hypothesis example count follows the repo-wide
+REPRO_CONFORMANCE_EXAMPLES (nightly CI raises it).
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.compile import CircuitProgram, lower_classifier, write_artifacts
+from repro.compile.artifact import load_manifest
+from repro.core import tnn as T
+from repro.serve import ClassifierFleet, MicroBatcher, TenantSpec
+
+N_EXAMPLES = int(os.environ.get("REPRO_CONFORMANCE_EXAMPLES", "20"))
+
+# (features, hidden, classes, rng seed) per toy tenant
+TOY_TENANTS = {
+    "toy_a": (9, 5, 4, 7),
+    "toy_b": (6, 4, 3, 11),
+    "toy_c": (12, 6, 5, 13),
+}
+
+
+def _toy_classifier(F, H, Cc, seed):
+    rng = np.random.default_rng(seed)
+    w1t = rng.integers(-1, 2, size=(F, H)).astype(np.int8)
+    w2t = T.balance_zero_counts(rng.normal(size=(H, Cc)), 1 / 3)
+    tnn = T.TrainedTNN(w1t=w1t, w2t=w2t, thresholds=np.full(F, 0.5),
+                       train_acc=0.0, test_acc=0.0, name=f"toy{seed}")
+    return lower_classifier(tnn, *T.exact_netlists(tnn))
+
+
+@pytest.fixture(scope="module")
+def emit_dir(tmp_path_factory):
+    """An emit directory holding every toy tenant + its manifest."""
+    out = tmp_path_factory.mktemp("fleet_artifacts")
+    ccs = {}
+    for name, (F, H, Cc, seed) in TOY_TENANTS.items():
+        cc = _toy_classifier(F, H, Cc, seed)
+        write_artifacts(cc, out, base=name)
+        ccs[name] = cc
+    return out, ccs
+
+
+def test_manifest_lists_every_tenant(emit_dir):
+    out, ccs = emit_dir
+    rows = load_manifest(out)
+    assert [r["name"] for r in rows] == sorted(TOY_TENANTS)
+    for r in rows:
+        F = TOY_TENANTS[r["name"]][0]
+        assert r["n_features"] == F
+        assert (out / r["program"]).exists()
+
+
+def test_reemit_replaces_manifest_row(emit_dir, tmp_path):
+    cc = _toy_classifier(5, 3, 2, 42)
+    for _ in range(2):
+        write_artifacts(cc, tmp_path, base="twice")
+    rows = load_manifest(tmp_path)
+    assert [r["name"] for r in rows] == ["twice"]
+
+
+def test_fleet_loads_and_routes(emit_dir):
+    out, ccs = emit_dir
+    fleet = ClassifierFleet.from_emit_dir(out, backends="swar", max_batch=32)
+    try:
+        assert fleet.tenants == sorted(TOY_TENANTS)
+        for name, (F, _, _, _) in TOY_TENANTS.items():
+            assert fleet.n_features(name) == F
+        with pytest.raises(KeyError):
+            fleet.submit("nope", np.zeros(9))
+        with pytest.raises(ValueError):
+            fleet.submit("toy_a", np.zeros(5))       # wrong feature count
+    finally:
+        fleet.shutdown(drain=True)
+
+
+def test_unknown_tenant_selection_and_duplicates(emit_dir):
+    out, ccs = emit_dir
+    with pytest.raises(KeyError):
+        ClassifierFleet.from_emit_dir(out, tenants=["missing"])
+    prog = CircuitProgram.from_classifier(ccs["toy_a"])
+    spec = TenantSpec(name="dup", program=prog)
+    with pytest.raises(ValueError):
+        ClassifierFleet([spec, spec], warmup=False, autostart=False)
+    with pytest.raises(ValueError):
+        ClassifierFleet([TenantSpec(name="x", program=prog,
+                                    backend="cuda")],
+                        warmup=False, autostart=False)
+
+
+# ---------------------------------------------------------------------------
+# Soak: concurrent producers, multiple tenants, mixed backends
+# ---------------------------------------------------------------------------
+def test_soak_concurrent_producers_exactly_once_bit_identical(emit_dir):
+    out, ccs = emit_dir
+    deadline_ms = 150.0
+    fleet = ClassifierFleet.from_emit_dir(
+        out, backends={"toy_a": "np", "toy_b": "swar", "toy_c": "swar"},
+        max_batch=64, deadline_ms=deadline_ms)
+    n_producers = 4
+    budget_s = 0.6
+    pools = {name: np.random.default_rng(i).random((50, spec[0]))
+             for i, (name, spec) in enumerate(sorted(TOY_TENANTS.items()))}
+    names = sorted(TOY_TENANTS)
+    submitted: list[list] = [[] for _ in range(n_producers)]
+
+    def produce(w: int) -> None:
+        rng = np.random.default_rng(1000 + w)
+        t_end = time.perf_counter() + budget_s
+        k = 0
+        while time.perf_counter() < t_end:
+            name = names[(w + k) % len(names)]           # interleave tenants
+            idx = int(rng.integers(0, pools[name].shape[0]))
+            req = fleet.submit(name, pools[name][idx])
+            submitted[w].append((name, idx, req))
+            k += 1
+            if k % 7 == 0:                  # vary arrival pattern a little
+                time.sleep(0.001)
+
+    threads = [threading.Thread(target=produce, args=(w,))
+               for w in range(n_producers)]
+    try:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(30)
+        fleet.flush(timeout=30)
+    finally:
+        fleet.shutdown(drain=True)
+
+    flat = [item for per_worker in submitted for item in per_worker]
+    assert len(flat) > 0
+    assert fleet.errors == []
+
+    # answered exactly once: every handle completed, uids unique, and the
+    # engines served exactly as many requests as were submitted
+    uids = [req.uid for _, _, req in flat]
+    assert len(set(uids)) == len(uids)
+    assert all(req.done() and req.label is not None for _, _, req in flat)
+    assert fleet.stats.n_requests == len(flat)
+    per_tenant = {name: sum(1 for n, _, _ in flat if n == name)
+                  for name in names}
+    summaries = fleet.stats_summary()["tenants"]
+    for name in names:
+        assert summaries[name]["n_requests"] == per_tenant[name]
+
+    # bit-identical to the offline program on every backend
+    refs = {name: CircuitProgram.from_classifier(ccs[name]).predict(
+        pools[name]) for name in names}
+    for name, idx, req in flat:
+        assert req.label == int(refs[name][idx]), (name, idx)
+
+    # latency: nothing may overshoot its deadline by more than one
+    # dispatch interval (worst observed batch) + scheduling slack for a
+    # loaded CI worker
+    worst_batch_ms = max(summaries[name]["p99_ms"] for name in names)
+    tol_ms = deadline_ms + max(2 * worst_batch_ms, 250.0)
+    late = [(name, req.latency_ms) for name, _, req in flat
+            if req.latency_ms > tol_ms]
+    assert not late, f"requests busted deadline+interval: {late[:5]}"
+
+
+def test_deadline_triggers_partial_flush(emit_dir):
+    """A lone request (far below max_batch) must be served by its deadline
+    without anyone calling flush — the scheduler's whole point."""
+    out, _ = emit_dir
+    fleet = ClassifierFleet.from_emit_dir(out, backends="swar",
+                                          max_batch=256, deadline_ms=100.0)
+    try:
+        req = fleet.submit("toy_a", np.zeros(9))
+        label = req.result(timeout=10.0)
+        assert label is not None and req.latency_ms is not None
+        # served once due, not held for max_batch company that never comes
+        assert req.latency_ms < 5_000.0
+    finally:
+        fleet.shutdown(drain=True)
+
+
+def test_shutdown_drains_backlog(emit_dir):
+    out, ccs = emit_dir
+    fleet = ClassifierFleet.from_emit_dir(out, backends="swar",
+                                          max_batch=128,
+                                          deadline_ms=60_000.0)
+    x = np.random.default_rng(5).random((40, 9))
+    reqs = [fleet.submit("toy_a", row) for row in x]
+    fleet.shutdown(drain=True)          # far before any deadline
+    ref = CircuitProgram.from_classifier(ccs["toy_a"]).predict(x)
+    assert [r.label for r in reqs] == [int(v) for v in ref]
+    with pytest.raises(RuntimeError):
+        fleet.submit("toy_a", x[0])     # fleet is closed
+
+
+def test_shutdown_cancel_completes_exceptionally(emit_dir):
+    out, _ = emit_dir
+    fleet = ClassifierFleet.from_emit_dir(out, backends="swar",
+                                          max_batch=128,
+                                          deadline_ms=60_000.0)
+    req = fleet.submit("toy_b", np.zeros(6))
+    fleet.shutdown(drain=False)
+    assert req.done() and req.error is not None
+    with pytest.raises(RuntimeError):
+        req.result(timeout=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: the micro-batcher policy under arbitrary schedules
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+
+    arrival = st.tuples(
+        st.floats(0.0, 50.0, allow_nan=False),       # inter-arrival gap, ms
+        st.floats(0.5, 200.0, allow_nan=False),      # deadline budget, ms
+    )
+
+    @settings(max_examples=N_EXAMPLES, deadline=None)
+    @given(st.integers(1, 8), st.lists(arrival, max_size=64),
+           st.floats(0.0, 20.0, allow_nan=False))
+    def test_microbatcher_order_size_drain(max_batch, arrivals, est_ms):
+        """For arbitrary arrival orders / batch sizes / budgets: arrival
+        order is preserved, no batch exceeds max_batch, due() never fires
+        while the oldest request still has headroom, and shutdown drains
+        to empty."""
+        mb = MicroBatcher(max_batch, default_deadline_ms=50.0)
+        est_s = est_ms * 1e-3
+        now = 0.0
+        seq = 0
+        popped: list[int] = []
+        for gap_ms, deadline_ms in arrivals:
+            now += gap_ms * 1e-3
+            mb.submit(seq, now, deadline_ms=deadline_ms)
+            seq += 1
+            while mb.due(now, est_s):
+                batch = mb.pop_batch()
+                assert 1 <= len(batch) <= max_batch
+                popped.extend(e.item for e in batch)
+            if len(mb):
+                # not due: queue below max_batch and oldest has headroom
+                assert len(mb) < max_batch
+                assert now + est_s < mb.oldest_due_at
+                # the advertised wakeup is exactly when due() flips
+                wake = mb.next_due_at(est_s)
+                assert wake is not None
+                assert mb.due(wake + 1e-9, est_s)
+                if wake - 1e-6 > now:
+                    assert not mb.due(wake - 1e-6, est_s)
+        for batch in mb.drain():                     # shutdown path
+            assert 1 <= len(batch) <= max_batch
+            popped.extend(e.item for e in batch)
+        assert len(mb) == 0
+        assert popped == list(range(seq))            # exactly once, in order

@@ -22,6 +22,7 @@ from __future__ import annotations
 import dis
 import os
 import sys
+import threading
 from collections import defaultdict
 from pathlib import Path
 
@@ -33,12 +34,28 @@ _prefix = str(PKG) + os.sep
 
 
 def _tracer(frame, event, arg):
-    fname = frame.f_code.co_filename
-    if not fname.startswith(_prefix):
+    # Never let an exception escape: CPython silently *disables* tracing
+    # for the whole thread if the trace function raises, and the deep
+    # recursion in jax tracing tests can push even these few operations
+    # over the recursion limit (RecursionError here used to kill coverage
+    # of every test after test_models_smoke).
+    try:
+        fname = frame.f_code.co_filename
+        if not fname.startswith(_prefix):
+            return None
+        if event == "line":
+            _executed[fname].add(frame.f_lineno)
+        return _tracer
+    except Exception:
         return None
-    if event == "line":
-        _executed[fname].add(frame.f_lineno)
-    return _tracer
+
+
+class _RearmTracing:
+    """Pytest plugin: re-install the tracer if anything knocked it out."""
+
+    def pytest_runtest_teardown(self, item):
+        if sys.gettrace() is not _tracer:
+            sys.settrace(_tracer)
 
 
 def _executable_lines(path: Path) -> set[int]:
@@ -56,13 +73,27 @@ def _executable_lines(path: Path) -> set[int]:
 
 
 def main(argv: list[str]) -> int:
+    # running as a script puts tools/ (not the repo root) first on
+    # sys.path, so `from tests.conftest import ...` failed to resolve and
+    # pytest aborted the whole run at collection — silently measuring
+    # import-time coverage only.  Match `python -m pytest`, which always
+    # has the invocation directory importable.
+    root = str(SRC.parent)
+    if root not in sys.path:
+        sys.path.insert(0, root)
     import pytest
 
+    # threading.settrace covers worker/producer threads (the serve fleet's
+    # dispatch loops run entirely off the main thread); sys.settrace alone
+    # would blind the measurement to the whole concurrency tier
+    threading.settrace(_tracer)
     sys.settrace(_tracer)
     try:
-        rc = pytest.main(argv or ["-q", "-p", "no:cacheprovider"])
+        rc = pytest.main(argv or ["-q", "-p", "no:cacheprovider"],
+                         plugins=[_RearmTracing()])
     finally:
         sys.settrace(None)
+        threading.settrace(None)  # type: ignore[arg-type]
 
     total_exec, total_hit = 0, 0
     rows = []
