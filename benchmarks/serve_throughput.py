@@ -11,7 +11,13 @@ Fleet section: a 2-tenant `ClassifierFleet` (cardio + breast_cancer)
 replays concurrent held-out streams from 4 producer threads through the
 deadline-driven micro-batching scheduler, recording per-tenant and
 fleet-wide rows (readings/s, request p50/p99, SLO misses) under
-`bench == "serve_fleet"`.  Writes BENCH_serve.json.
+`bench == "serve_fleet"`.
+
+Socket section: the same 2-tenant replay, but every reading crosses the
+length-prefixed TCP transport (`serve/server.py` + `serve/client.py`) —
+rows land under `bench == "serve_socket"`, so the in-process vs
+cross-process overhead (readings/s and request p99) is one diff away.
+Writes BENCH_serve.json.
 
 Run directly to (re)generate the committed artifact:
 
@@ -28,7 +34,7 @@ from benchmarks.common import QUICK, get_trained_tnn
 from repro.core.tnn import exact_netlists
 from repro.compile.ir import lower_classifier
 from repro.compile.program import CircuitProgram
-from repro.serving.circuit_engine import CircuitServingEngine
+from repro.serve.engine import CircuitServingEngine
 
 BATCH_SIZES = (1, 64, 1024)
 FLEET_DATASETS = ("cardio", "breast_cancer")
@@ -56,10 +62,8 @@ def _measure(prog: CircuitProgram, x_test: np.ndarray, batch: int,
     }
 
 
-def _measure_fleet(n_readings: int) -> list[dict]:
-    """2-tenant concurrent replay through the micro-batching scheduler."""
-    from repro.serve import ClassifierFleet, TenantSpec
-    from repro.serve.__main__ import replay_fleet
+def _fleet_specs_and_streams(n_readings: int):
+    from repro.serve import TenantSpec
 
     specs, streams = [], {}
     for i, dataset in enumerate(FLEET_DATASETS):
@@ -71,15 +75,13 @@ def _measure_fleet(n_readings: int) -> list[dict]:
             backend="swar", max_batch=256, deadline_ms=FLEET_DEADLINE_MS,
             dataset=dataset))
         streams[name] = _stream(ds.x_test, n_readings, seed=i)
-    fleet = ClassifierFleet(specs)
-    try:
-        report = replay_fleet(fleet, streams, producers=4, timeout=600)
-    finally:
-        fleet.shutdown(drain=True)
+    return specs, streams
 
+
+def _report_rows(bench: str, report: dict) -> list[dict]:
     rows = []
     for name, t in report["tenants"].items():
-        rows.append({"bench": "serve_fleet", "tenant": name,
+        rows.append({"bench": bench, "tenant": name,
                      "backend": t["backend"],
                      "deadline_ms": FLEET_DEADLINE_MS,
                      "readings": t["n_readings"],
@@ -89,7 +91,7 @@ def _measure_fleet(n_readings: int) -> list[dict]:
                      "n_slo_miss": t["n_slo_miss"],
                      "labels_match_offline": t["labels_match_offline"]})
     f = report["fleet"]
-    rows.append({"bench": "serve_fleet", "tenant": "__fleet__",
+    rows.append({"bench": bench, "tenant": "__fleet__",
                  "backend": "swar", "deadline_ms": FLEET_DEADLINE_MS,
                  "readings": f["n_readings"],
                  "readings_per_s": f["readings_per_s"],
@@ -98,6 +100,41 @@ def _measure_fleet(n_readings: int) -> list[dict]:
                  "n_slo_miss": f["n_slo_miss"],
                  "labels_match_offline": report["labels_match_offline"]})
     return rows
+
+
+def _measure_fleet(n_readings: int) -> list[dict]:
+    """2-tenant concurrent replay through the micro-batching scheduler."""
+    from repro.serve import ClassifierFleet
+    from repro.serve.__main__ import replay_fleet
+
+    specs, streams = _fleet_specs_and_streams(n_readings)
+    fleet = ClassifierFleet(specs)
+    try:
+        report = replay_fleet(fleet, streams, producers=4, timeout=600)
+    finally:
+        fleet.shutdown(drain=True)
+    return _report_rows("serve_fleet", report)
+
+
+def _measure_socket(n_readings: int) -> list[dict]:
+    """The same 2-tenant replay, every reading over the TCP transport."""
+    from repro.serve import ClassifierFleet
+    from repro.serve.__main__ import replay_client
+    from repro.serve.client import FleetClient
+    from repro.serve.server import FleetServer
+
+    specs, streams = _fleet_specs_and_streams(n_readings)
+    fleet = ClassifierFleet(specs)
+    server = FleetServer(fleet)
+    try:
+        host, port = server.start_background()
+        with FleetClient(host, port) as client:
+            report = replay_client(client, fleet, streams, producers=4,
+                                   timeout=600)
+    finally:
+        server.stop()
+        fleet.shutdown(drain=True)
+    return _report_rows("serve_socket", report)
 
 
 def run() -> list[dict]:
@@ -120,6 +157,7 @@ def run() -> list[dict]:
                  **_measure(prog_np, ds.x_test, 1024, n)})
 
     rows.extend(_measure_fleet(2048 if QUICK else 16384))
+    rows.extend(_measure_socket(2048 if QUICK else 16384))
 
     out = sys.argv[1] if (__name__ == "__main__" and len(sys.argv) > 1) \
         else "BENCH_serve.json"

@@ -33,7 +33,7 @@ from repro.core.ternary import abc_binarize
 from repro.data.tabular import make_dataset
 from repro.compile import CircuitProgram, egfet_report, lower_classifier, \
     write_artifacts
-from repro.serving.circuit_engine import CircuitServingEngine
+from repro.serve.engine import CircuitServingEngine
 
 
 def main(dataset: str = "cardio", campaign: bool = False, islands: int = 4,

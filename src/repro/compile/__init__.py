@@ -7,10 +7,13 @@ Verilog with an EGFET area/power report (plus an independent reader that
 re-evaluates the emitted RTL in Python).
 """
 from repro.compile.artifact import (
+    ArtifactCorruptError,
     load_manifest,
+    load_manifest_doc,
     load_program,
     register_tenant,
     save_program,
+    verify_program_bundle,
 )
 from repro.compile.ir import (
     CircuitIR,
@@ -30,6 +33,7 @@ from repro.compile.verilog import (
 from repro.compile.vread import VerilogDesign, eval_classifier_verilog
 
 __all__ = [
+    "ArtifactCorruptError",
     "CircuitIR",
     "CompiledClassifier",
     "CircuitProgram",
@@ -40,7 +44,9 @@ __all__ = [
     "emit_netlist_module",
     "eval_classifier_verilog",
     "load_manifest",
+    "load_manifest_doc",
     "load_program",
+    "verify_program_bundle",
     "lower",
     "lower_classifier",
     "lower_netlist",

@@ -6,18 +6,28 @@ design — the levelized `CircuitIR` arrays plus the ABC thresholds — so it
 can rebuild a `CircuitProgram` without retraining or re-lowering anything.
 `save_program`/`load_program` round-trip exactly that as one compressed
 npz (pure integer arrays + float64 thresholds, so a bundle written on one
-host serves bit-identically on another).
+host serves bit-identically on another).  Every bundle is written with a
+sha256 sidecar (`<bundle>.sha256`, same story as
+`checkpoint/manager.py`'s leaves checksum): `load_program` refuses a
+truncated or bit-flipped bundle with `ArtifactCorruptError` instead of
+serving garbage labels.
 
 An emit directory accumulates one bundle per classifier plus a single
 ``fleet.json`` manifest listing every tenant (`register_tenant` is
 last-write-wins per name, so re-emitting a design replaces its row).  The
-manifest is the handshake between the emit side (`repro.evolve --emit-dir`,
-`python -m repro.compile.export`) and the serving side
+manifest carries a monotonically increasing **generation** counter —
+bumped on every register — and stamps each row with the generation that
+wrote it, which is what lets a live `ClassifierFleet.sync_manifest()`
+tell "same tenant, re-emitted program" from "nothing changed" without
+hashing bundles.  Rows may also carry serving hints (`replicas`): the
+manifest is the handshake between the emit side (`repro.evolve
+--emit-dir`, `python -m repro.compile.export`) and the serving side
 (`repro.serve.ClassifierFleet.from_emit_dir`): a fleet is "whatever this
 directory says it serves".
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 from pathlib import Path
@@ -30,10 +40,28 @@ from repro.compile.program import CircuitProgram
 MANIFEST_NAME = "fleet.json"
 MANIFEST_VERSION = 1
 PROGRAM_SUFFIX = "_program.npz"
+SHA_SUFFIX = ".sha256"
+
+
+class ArtifactCorruptError(RuntimeError):
+    """A program bundle failed its sha256 (truncated/bit-flipped on disk)."""
+
+
+def _sha256_file(path: Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def save_program(cc: CompiledClassifier, path: str | Path) -> str:
-    """Write the servable slice of a `CompiledClassifier` as one npz."""
+    """Write the servable slice of a `CompiledClassifier` as one npz.
+
+    A `<path>.sha256` sidecar records the bundle digest (written only
+    after the payload it vouches for), so `load_program` can detect
+    corruption the way checkpoint restore does.
+    """
     ir = cc.ir
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
@@ -58,28 +86,71 @@ def save_program(cc: CompiledClassifier, path: str | Path) -> str:
     }
     for key in header["taps"]:
         arrays[f"tap_{key}"] = ir.taps[key]
-    np.savez_compressed(path, **arrays)
+    with open(path, "wb") as f:
+        np.savez_compressed(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    digest = _sha256_file(path)
+    path.with_name(path.name + SHA_SUFFIX).write_text(digest + "\n")
     return str(path)
+
+
+def verify_program_bundle(path: str | Path) -> str | None:
+    """Check `path` against its sha256 sidecar; returns the digest.
+
+    Returns None when no sidecar exists (pre-checksum bundle — accepted
+    for compatibility); raises `ArtifactCorruptError` on any mismatch or
+    an unreadable payload.
+    """
+    path = Path(path)
+    sidecar = path.with_name(path.name + SHA_SUFFIX)
+    if not path.exists():
+        raise ArtifactCorruptError(f"program bundle {path} does not exist")
+    if not sidecar.exists():
+        return None
+    want = sidecar.read_text().strip()
+    got = _sha256_file(path)
+    if got != want:
+        raise ArtifactCorruptError(
+            f"program bundle {path} fails its checksum "
+            f"(sha256 {got[:12]}… != recorded {want[:12]}…) — the bundle "
+            "was truncated or corrupted on disk; re-emit the artifact")
+    return got
 
 
 def load_program(path: str | Path, backend: str = "jax",
                  devices: tuple | None = None) -> CircuitProgram:
-    """Rebuild a classifier `CircuitProgram` from a `save_program` bundle."""
-    with np.load(Path(path)) as fix:
-        header = json.loads(bytes(fix["header_json"]).decode())
-        ir = CircuitIR(
-            n_inputs=int(fix["n_inputs"]),
-            op=fix["op"].astype(np.int16),
-            in0=fix["in0"].astype(np.int32),
-            in1=fix["in1"].astype(np.int32),
-            outputs=fix["outputs"].astype(np.int32),
-            levels=fix["levels"].astype(np.int32),
-            taps={k: fix[f"tap_{k}"].astype(np.int32)
-                  for k in header["taps"]},
-            name=header["name"],
-            meta=header["meta"],
-        )
-        thresholds = fix["thresholds"].astype(np.float64)
+    """Rebuild a classifier `CircuitProgram` from a `save_program` bundle.
+
+    Validates the bundle against its sha256 sidecar first: a truncated or
+    bit-flipped npz raises `ArtifactCorruptError` with a clear message
+    instead of a deep numpy decode error (or, worse, silently wrong
+    labels).
+    """
+    path = Path(path)
+    verify_program_bundle(path)
+    try:
+        with np.load(path) as fix:
+            header = json.loads(bytes(fix["header_json"]).decode())
+            ir = CircuitIR(
+                n_inputs=int(fix["n_inputs"]),
+                op=fix["op"].astype(np.int16),
+                in0=fix["in0"].astype(np.int32),
+                in1=fix["in1"].astype(np.int32),
+                outputs=fix["outputs"].astype(np.int32),
+                levels=fix["levels"].astype(np.int32),
+                taps={k: fix[f"tap_{k}"].astype(np.int32)
+                      for k in header["taps"]},
+                name=header["name"],
+                meta=header["meta"],
+            )
+            thresholds = fix["thresholds"].astype(np.float64)
+    except ArtifactCorruptError:
+        raise
+    except Exception as exc:   # an unreadable archive that passed (or had no)
+        raise ArtifactCorruptError(          # checksum is still corruption
+            f"program bundle {path} cannot be decoded "
+            f"({type(exc).__name__}: {exc}) — re-emit the artifact") from exc
     ir.to_netlist()   # validates feed-forwardness before anything executes
     return CircuitProgram(ir=ir, thresholds=thresholds,
                           n_classes=header["n_classes"], backend=backend,
@@ -91,8 +162,8 @@ def manifest_path(emit_dir: str | Path) -> Path:
     return Path(emit_dir) / MANIFEST_NAME
 
 
-def load_manifest(emit_dir: str | Path) -> list[dict]:
-    """Tenant rows of `emit_dir`'s fleet manifest (sorted by name)."""
+def load_manifest_doc(emit_dir: str | Path) -> dict:
+    """The full manifest document: version, generation, sorted tenant rows."""
     path = manifest_path(emit_dir)
     if not path.exists():
         raise FileNotFoundError(
@@ -101,7 +172,14 @@ def load_manifest(emit_dir: str | Path) -> list[dict]:
     doc = json.loads(path.read_text())
     if doc.get("version") != MANIFEST_VERSION:
         raise ValueError(f"unsupported manifest version {doc.get('version')}")
-    return sorted(doc["tenants"], key=lambda t: t["name"])
+    doc.setdefault("generation", 0)
+    doc["tenants"] = sorted(doc["tenants"], key=lambda t: t["name"])
+    return doc
+
+
+def load_manifest(emit_dir: str | Path) -> list[dict]:
+    """Tenant rows of `emit_dir`'s fleet manifest (sorted by name)."""
+    return load_manifest_doc(emit_dir)["tenants"]
 
 
 def register_tenant(emit_dir: str | Path, entry: dict) -> Path:
@@ -109,22 +187,28 @@ def register_tenant(emit_dir: str | Path, entry: dict) -> Path:
 
     `entry` must carry at least name/program; paths are stored relative to
     the emit dir so the directory can be tarred up and served elsewhere.
+    Every call bumps the manifest's generation counter and stamps the row
+    with it — a live fleet watching the file reloads exactly the rows
+    whose generation moved.
     """
     if "name" not in entry or "program" not in entry:
         raise ValueError("manifest entry needs at least name + program")
     emit_dir = Path(emit_dir)
     emit_dir.mkdir(parents=True, exist_ok=True)
     path = manifest_path(emit_dir)
-    tenants = []
+    tenants, generation = [], 0
     if path.exists():
         doc = json.loads(path.read_text())
+        generation = int(doc.get("generation", 0))
         tenants = [t for t in doc.get("tenants", [])
                    if t["name"] != entry["name"]]
+    generation += 1
     entry = {k: (os.path.relpath(v, emit_dir)
                  if k in ("program", "verilog", "report") else v)
              for k, v in entry.items()}
+    entry["generation"] = generation
     tenants.append(entry)
-    doc = {"version": MANIFEST_VERSION,
+    doc = {"version": MANIFEST_VERSION, "generation": generation,
            "tenants": sorted(tenants, key=lambda t: t["name"])}
     tmp = path.with_suffix(".json.tmp")
     tmp.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")

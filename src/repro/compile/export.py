@@ -21,7 +21,7 @@ from repro.compile.ir import lower_classifier
 from repro.compile.program import CircuitProgram
 from repro.compile.verilog import egfet_report, write_artifacts
 from repro.compile.vread import VerilogDesign, eval_classifier_verilog
-from repro.serving.circuit_engine import CircuitServingEngine
+from repro.serve.engine import CircuitServingEngine
 
 
 def main(dataset: str = "breast_cancer", out_dir: str = "artifacts",

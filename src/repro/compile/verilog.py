@@ -201,10 +201,13 @@ def egfet_report(cc: CompiledClassifier, interface: str | None = "abc") -> dict:
 def write_artifacts(cc: CompiledClassifier, out_dir: str | Path,
                     base: str | None = None,
                     interface: str | None = "abc",
-                    dataset: str | None = None) -> dict[str, str]:
+                    dataset: str | None = None,
+                    replicas: int = 1) -> dict[str, str]:
     """Write `<base>.v` + `<base>_egfet.json` + a servable program bundle
     under `out_dir`, and register the design as tenant `base` in the
-    directory's `fleet.json` manifest (`repro.serve` consumes it)."""
+    directory's `fleet.json` manifest (`repro.serve` consumes it).
+    `replicas` is a serving hint: how many engine replicas the fleet
+    should stand up for this tenant by default."""
     from repro.compile import artifact as A
 
     out = Path(out_dir)
@@ -227,6 +230,10 @@ def write_artifacts(cc: CompiledClassifier, out_dir: str | Path,
         "n_features": cc.n_features,
         "n_classes": cc.n_classes,
         "n_gates": cc.ir.n_gates,
+        "replicas": int(replicas),
+        # the digest save_program just wrote — no need to re-hash the npz
+        "sha256": ppath.with_name(ppath.name
+                                  + A.SHA_SUFFIX).read_text().strip(),
     })
     return {"verilog": str(vpath), "report": str(rpath),
             "program": str(ppath), "manifest": str(mpath)}

@@ -31,6 +31,28 @@ from repro.core.circuits import NetlistPopulation
 BACKENDS = ("np", "swar", "pallas")
 
 
+def replica_devices(index: int, devices=None) -> tuple:
+    """Round-robin device pin for serving-engine replica `index`.
+
+    A fleet tenant running N engine replicas wants replica i's dispatches
+    resident on local device ``i % n_devices`` so hot-tenant batches
+    overlap across chips instead of queueing on one; the returned 1-tuple
+    plugs straight into `CircuitProgram(devices=...)`, whose
+    `program_eval_words` treats any explicit device list as a pinning
+    request (device_put even for a single shard).  On this single-device
+    container every replica pins to the same CPU device — the round-robin
+    is identical on an 8-chip pod.
+    """
+    if index < 0:
+        raise ValueError("replica index must be >= 0")
+    import jax
+
+    devs = list(devices) if devices is not None else jax.local_devices()
+    if not devs:
+        raise ValueError("no devices to pin replicas to")
+    return (devs[index % len(devs)],)
+
+
 def _device_slices(P: int, n_dev: int) -> list[slice]:
     """Round-even contiguous row slices, one per device (empty ones drop)."""
     per = -(-P // n_dev)

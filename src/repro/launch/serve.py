@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models.params import init_params, param_count
-from repro.serving.engine import Request, ServingEngine
+from repro.serve.lm_engine import Request, ServingEngine
 
 
 def main() -> None:

@@ -1,38 +1,65 @@
-"""repro.serve — multi-tenant sensor-serving fleet.
+"""repro.serve — the unified multi-tenant sensor-serving stack.
 
-Loads every classifier artifact an emit directory's `fleet.json` manifest
-names into per-tenant `CircuitServingEngine`s behind one router, replaces
-manual `flush()` with a deadline-driven micro-batching scheduler (flush on
-`max_batch` *or* when the oldest queued request would outlive its latency
-budget), runs one background dispatch thread per execution backend
-(`np`/`swar`/`pallas` via `kernels.dispatch`), and tracks per-tenant +
-fleet-wide throughput / p50/p99 latency / SLO violations.
+One package now holds every serving layer: the batched execution engine
+(`engine.py`, formerly `repro.serving.circuit_engine`), per-tenant engine
+**replica pools** with least-loaded routing and per-replica device pins
+(`replicas.py`), the fleet router with deadline-driven micro-batching,
+queue-depth **admission control** and manifest **hot-reload**
+(`fleet.py` + `batcher.py`), and a real network front: a length-prefixed
+binary wire protocol (`protocol.py`), an asyncio socket server
+(`server.py`) and a blocking client library (`client.py`).
+
+In-process:
 
     from repro.serve import ClassifierFleet
-    fleet = ClassifierFleet.from_emit_dir("artifacts", backends="swar")
+    fleet = ClassifierFleet.from_emit_dir("artifacts", backends="swar",
+                                          replicas=2, max_queue=2048)
     req = fleet.submit("tnn_cardio", reading)      # returns immediately
     label = req.result(timeout=1.0)                # blocks until served
     fleet.shutdown(drain=True)
 
-CLI replay of held-out test streams:  python -m repro.serve --emit-dir ...
+Over the wire:
+
+    python -m repro.serve serve --emit-dir artifacts --port 7341   # server
+    python -m repro.serve replay --emit-dir artifacts \
+        --connect 127.0.0.1:7341                                   # client
+
+    from repro.serve.client import FleetClient
+    with FleetClient("127.0.0.1", 7341) as c:
+        label = c.submit("tnn_cardio", reading).result(timeout=1.0)
 """
 from repro.serve.batcher import MicroBatcher, QueuedItem
+from repro.serve.engine import (
+    STATS_WINDOW,
+    CircuitServingEngine,
+    SensorRequest,
+    ServeStats,
+)
 from repro.serve.fleet import (
     DEFAULT_DEADLINE_MS,
     DEFAULT_MAX_BATCH,
     FLEET_BACKENDS,
     ClassifierFleet,
+    FleetOverloadError,
     FleetRequest,
     TenantSpec,
 )
+from repro.serve.replicas import EngineReplica, ReplicaPool
 
 __all__ = [
     "DEFAULT_DEADLINE_MS",
     "DEFAULT_MAX_BATCH",
     "FLEET_BACKENDS",
+    "STATS_WINDOW",
+    "CircuitServingEngine",
     "ClassifierFleet",
+    "EngineReplica",
+    "FleetOverloadError",
     "FleetRequest",
     "MicroBatcher",
     "QueuedItem",
+    "ReplicaPool",
+    "SensorRequest",
+    "ServeStats",
     "TenantSpec",
 ]

@@ -1,16 +1,29 @@
-"""Fleet CLI — replay held-out sensor streams against an emitted fleet.
+"""Fleet CLI — serve an emitted fleet over a socket, or replay against it.
 
-    PYTHONPATH=src python -m repro.serve --emit-dir artifacts \
+    # stand the emit dir up as a network service (hot-reloads fleet.json)
+    PYTHONPATH=src python -m repro.serve serve --emit-dir artifacts \
+        --port 7341 --replicas 2 --max-queue 4096 --watch
+
+    # replay held-out sensor streams in-process (the classic mode; the
+    # bare-flag legacy form `python -m repro.serve --emit-dir ...` still
+    # resolves here)
+    PYTHONPATH=src python -m repro.serve replay --emit-dir artifacts \
         --replay all --producers 4 --readings 1024 --deadline-ms 100
 
-Loads every tenant the emit dir's `fleet.json` manifest names (emitted by
-`repro.evolve --emit-dir` or `python -m repro.compile.export`), replays
-each tenant's held-out test split through the fleet from N concurrent
-producer threads, and prints a per-tenant report: throughput, p50/p99
-request latency, SLO violations, and bit-identity of the served labels
-against the offline `CircuitProgram.predict` reference.  `--strict` turns
-any mismatch, SLO violation or dispatch error into a nonzero exit — the CI
-fleet smoke runs exactly that.
+    # same replay, but through the wire against a running server
+    PYTHONPATH=src python -m repro.serve replay --emit-dir artifacts \
+        --connect 127.0.0.1:7341 --replay all
+
+Both replay modes load every tenant the emit dir's `fleet.json` manifest
+names (emitted by `repro.evolve --emit-dir` or `python -m
+repro.compile.export`), replay each tenant's held-out test split from N
+concurrent producer threads, and print a per-tenant report: throughput,
+p50/p99 request latency, SLO violations, admission sheds, and
+bit-identity of the served labels against the offline
+`CircuitProgram.predict` reference.  **Any label mismatch or dispatch
+error exits nonzero on its own**; `--strict` additionally turns SLO
+violations and sheds into a nonzero exit — the CI fleet smoke runs
+exactly that.
 """
 from __future__ import annotations
 
@@ -25,15 +38,12 @@ import numpy as np
 from repro.serve.fleet import (DEFAULT_DEADLINE_MS, DEFAULT_MAX_BATCH,
                                FLEET_BACKENDS, ClassifierFleet)
 
+SUBCOMMANDS = ("serve", "replay")
 
-def _parse_args(argv=None) -> argparse.Namespace:
-    ap = argparse.ArgumentParser(prog="python -m repro.serve",
-                                 description=__doc__)
+
+def _add_fleet_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--emit-dir", required=True,
                     help="directory holding fleet.json + program bundles")
-    ap.add_argument("--replay", default="all",
-                    help="comma list of tenant or dataset names (default: "
-                         "every tenant with a dataset)")
     ap.add_argument("--backend", choices=FLEET_BACKENDS, default="swar",
                     help="execution backend for every tenant")
     ap.add_argument("--backends", default=None,
@@ -42,18 +52,75 @@ def _parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--max-batch", type=int, default=DEFAULT_MAX_BATCH)
     ap.add_argument("--deadline-ms", type=float, default=DEFAULT_DEADLINE_MS,
                     help="per-request latency budget (SLO)")
-    ap.add_argument("--producers", type=int, default=4,
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="engine replicas per tenant (default: manifest "
+                         "hint, else 1)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission limit: shed submits beyond this queue "
+                         "depth (default: never shed)")
+
+
+def _parse_args(argv=None) -> argparse.Namespace:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    # legacy spelling: `python -m repro.serve --emit-dir ...` == replay
+    if argv and argv[0].startswith("-"):
+        argv = ["replay"] + argv
+    ap = argparse.ArgumentParser(prog="python -m repro.serve",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    sp = sub.add_parser("serve", help="serve the fleet over a TCP socket")
+    _add_fleet_args(sp)
+    sp.add_argument("--host", default="127.0.0.1")
+    sp.add_argument("--port", type=int, default=7341)
+    sp.add_argument("--watch", action="store_true",
+                    help="watch fleet.json and hot-reload tenants")
+
+    rp = sub.add_parser("replay", help="replay held-out streams and verify")
+    _add_fleet_args(rp)
+    rp.add_argument("--connect", default=None, metavar="HOST:PORT",
+                    help="replay through a running server instead of "
+                         "in-process")
+    rp.add_argument("--replay", default="all",
+                    help="comma list of tenant or dataset names (default: "
+                         "every tenant with a dataset)")
+    rp.add_argument("--producers", type=int, default=4,
                     help="concurrent submitter threads")
-    ap.add_argument("--readings", type=int, default=1024,
+    rp.add_argument("--readings", type=int, default=1024,
                     help="readings replayed per tenant")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--timeout", type=float, default=120.0,
+    rp.add_argument("--seed", type=int, default=0)
+    rp.add_argument("--timeout", type=float, default=120.0,
                     help="overall completion timeout (seconds)")
-    ap.add_argument("--strict", action="store_true",
-                    help="exit nonzero on any mismatch / SLO miss / error")
-    ap.add_argument("--out", default=None,
+    rp.add_argument("--strict", action="store_true",
+                    help="also exit nonzero on any SLO miss or shed "
+                         "(mismatches and errors always exit nonzero)")
+    rp.add_argument("--out", default=None,
                     help="write the replay report as JSON here")
     return ap.parse_args(argv)
+
+
+def _parse_backends(args) -> str | dict:
+    if not args.backends:
+        return args.backend
+    backends = {}
+    for pair in args.backends.split(","):
+        name, _, be = pair.strip().partition("=")
+        if be not in FLEET_BACKENDS:
+            raise SystemExit(f"bad --backends entry {pair!r}; backends: "
+                             f"{', '.join(FLEET_BACKENDS)}")
+        backends[name] = be
+    return backends
+
+
+def _build_fleet(args, live: bool = True) -> ClassifierFleet:
+    """`live=False` builds a reference-only fleet (the --connect client
+    path: offline programs + tenant metadata, no warmup jit, no replica
+    pools spun hot, no scheduler threads)."""
+    return ClassifierFleet.from_emit_dir(
+        args.emit_dir, backends=_parse_backends(args),
+        max_batch=args.max_batch, deadline_ms=args.deadline_ms,
+        replicas=(args.replicas if live else 1), max_queue=args.max_queue,
+        warmup=live, autostart=live)
 
 
 def _build_streams(fleet: ClassifierFleet, selected: list[str],
@@ -97,28 +164,30 @@ def _select_tenants(fleet: ClassifierFleet, replay: str) -> list[str]:
     return sorted(selected)
 
 
-def replay_fleet(fleet: ClassifierFleet, streams: dict[str, np.ndarray],
-                 producers: int = 4, timeout: float = 120.0) -> dict:
-    """Submit every stream row from `producers` interleaved threads; wait;
-    verify served labels bit-identical to offline `CircuitProgram.predict`.
-    """
-    # interleave across tenants so every producer hits every tenant
-    tasks = []
+def _interleave(streams: dict[str, np.ndarray]):
+    """(sorted tenant order, [(tenant, row)] interleaved across tenants)
+    — so every producer hits every tenant rather than draining them one
+    at a time."""
     order = sorted(streams)
+    tasks = []
     max_len = max(x.shape[0] for x in streams.values())
     for i in range(max_len):
         for name in order:
             if i < streams[name].shape[0]:
                 tasks.append((name, i))
-    results: dict[str, list] = {n: [None] * streams[n].shape[0]
-                                for n in order}
+    return order, tasks
+
+
+def _run_producers(tasks, producers: int, submit_one, timeout: float) -> None:
+    """Drive `submit_one(tenant, row_index)` from N interleaved threads;
+    surface producer exceptions instead of hanging the join."""
     errors: list[str] = []
 
     def produce(worker: int) -> None:
         try:
             for name, i in tasks[worker::producers]:
-                results[name][i] = fleet.submit(name, streams[name][i])
-        except Exception as exc:    # surface instead of hanging the join
+                submit_one(name, i)
+        except Exception as exc:
             errors.append(f"producer {worker}: {type(exc).__name__}: {exc}")
 
     threads = [threading.Thread(target=produce, args=(w,), daemon=True)
@@ -134,7 +203,39 @@ def replay_fleet(fleet: ClassifierFleet, streams: dict[str, np.ndarray],
     if errors:
         raise RuntimeError("; ".join(errors))
 
-    report = {"tenants": {}, "producers": producers}
+
+def replay_fleet(fleet: ClassifierFleet, streams: dict[str, np.ndarray],
+                 producers: int = 4, timeout: float = 120.0) -> dict:
+    """Submit every stream row from `producers` interleaved threads; wait;
+    verify served labels bit-identical to offline `CircuitProgram.predict`.
+
+    When the fleet has admission control armed (`max_queue`), a shed
+    producer honors the `retry_after_ms` hint and resubmits; sheds are
+    counted per tenant.
+    """
+    import time as _time
+
+    from repro.serve.fleet import FleetOverloadError
+
+    order, tasks = _interleave(streams)
+    results: dict[str, list] = {n: [None] * streams[n].shape[0]
+                                for n in order}
+    shed_counts = {n: 0 for n in order}
+    shed_lock = threading.Lock()
+
+    def submit_one(name: str, i: int) -> None:
+        while True:
+            try:
+                results[name][i] = fleet.submit(name, streams[name][i])
+                return
+            except FleetOverloadError as exc:
+                with shed_lock:
+                    shed_counts[name] += 1
+                _time.sleep(min(exc.retry_after_ms, 1000.0) * 1e-3)
+
+    _run_producers(tasks, producers, submit_one, timeout)
+
+    report = {"tenants": {}, "producers": producers, "transport": "inproc"}
     ok = True
     for name in order:
         reqs = results[name]
@@ -147,13 +248,15 @@ def replay_fleet(fleet: ClassifierFleet, streams: dict[str, np.ndarray],
         ok &= match
         misses = sum(r.slo_miss for r in reqs)
         worst = max((r.latency_ms for r in reqs), default=0.0)
-        s = fleet._tenant(name).engine.stats.summary()
+        s = fleet._tenant(name).stats.summary()
         report["tenants"][name] = {
             "backend": fleet.tenant_backend(name),
+            "replicas": fleet.tenant_replicas(name),
             "dataset": fleet._tenant(name).spec.dataset,
             "readings": len(reqs),
             "labels_match_offline": match,
             "slo_miss": int(misses),
+            "n_shed": shed_counts[name],
             "worst_latency_ms": round(worst, 3),
             **s,
         }
@@ -163,54 +266,173 @@ def replay_fleet(fleet: ClassifierFleet, streams: dict[str, np.ndarray],
     return report
 
 
-def main(argv=None) -> int:
-    args = _parse_args(argv)
-    backends: str | dict = args.backend
-    if args.backends:
-        backends = {}
-        for pair in args.backends.split(","):
-            name, _, be = pair.strip().partition("=")
-            if be not in FLEET_BACKENDS:
-                raise SystemExit(f"bad --backends entry {pair!r}; backends: "
-                                 f"{', '.join(FLEET_BACKENDS)}")
-            backends[name] = be
-    fleet = ClassifierFleet.from_emit_dir(
-        args.emit_dir, backends=backends, max_batch=args.max_batch,
-        deadline_ms=args.deadline_ms)
-    try:
-        selected = _select_tenants(fleet, args.replay)
-        streams = _build_streams(fleet, selected, args.readings, args.seed)
-        print(f"[fleet] {len(fleet.tenants)} tenant(s) loaded, replaying "
-              f"{', '.join(selected)} x {args.readings} readings from "
-              f"{args.producers} producers (deadline {args.deadline_ms} ms)")
-        report = replay_fleet(fleet, streams, producers=args.producers,
-                              timeout=args.timeout)
-    finally:
-        fleet.shutdown(drain=True)
+def replay_client(client, fleet: ClassifierFleet,
+                  streams: dict[str, np.ndarray], producers: int = 4,
+                  timeout: float = 120.0) -> dict:
+    """`replay_fleet`, but every reading crosses the socket transport.
 
+    `fleet` here is the *local* reference (offline programs + tenant
+    metadata — it may be built with `warmup=False, autostart=False`);
+    nothing is submitted to it.  Producers are submit-only so batching,
+    not round-trips, sets the pace; sheds are retried in the collection
+    pass with the server's `retry_after_ms` hint and counted.
+    """
+    import time as _time
+
+    from repro.serve.client import FleetShedError
+
+    order, tasks = _interleave(streams)
+    results: dict[str, list] = {n: [None] * streams[n].shape[0]
+                                for n in order}
+    shed_counts = {n: 0 for n in order}
+
+    def submit_one(name: str, i: int) -> None:
+        results[name][i] = client.submit(
+            name, streams[name][i],
+            deadline_ms=fleet._tenant(name).spec.deadline_ms)
+
+    _run_producers(tasks, producers, submit_one, timeout)
+
+    for name in order:          # collect; a shed row backs off and retries
+        deadline_ms = fleet._tenant(name).spec.deadline_ms
+        for i, pend in enumerate(results[name]):
+            while True:
+                try:
+                    pend.result(timeout)
+                except FleetShedError as exc:
+                    shed_counts[name] += 1
+                    _time.sleep(min(exc.retry_after_ms, 1000.0) * 1e-3)
+                    pend = client.submit(name, streams[name][i],
+                                         deadline_ms=deadline_ms)
+                    continue
+                results[name][i] = pend
+                break
+
+    server_stats = client.stats()
+    report = {"tenants": {}, "producers": producers, "transport": "socket"}
+    ok = True
+    total_miss = total = 0
+    for name in order:
+        pends = results[name]
+        labels = np.array([p.label for p in pends], dtype=np.int32)
+        prog = fleet._tenant(name).engine.program
+        ref = prog.predict(streams[name]).astype(np.int32)
+        match = bool((labels == ref).all())
+        ok &= match
+        deadline_ms = fleet._tenant(name).spec.deadline_ms
+        lat = np.array([p.latency_ms for p in pends])
+        misses = int((lat > deadline_ms).sum())
+        total_miss += misses
+        total += len(pends)
+        remote = server_stats["tenants"].get(name, {})
+        report["tenants"][name] = {
+            "backend": remote.get("backend"),
+            "replicas": len(remote.get("replicas", [])) or None,
+            "dataset": fleet._tenant(name).spec.dataset,
+            "readings": len(pends),
+            "labels_match_offline": match,
+            "slo_miss": misses,
+            "n_shed": shed_counts[name],
+            "worst_latency_ms": round(float(lat.max()), 3),
+            **{k: remote[k] for k in ("n_readings", "n_batches",
+                                      "readings_per_s", "req_p50_ms",
+                                      "req_p99_ms", "n_slo_miss")
+               if k in remote},
+        }
+    sf = server_stats["fleet"]
+    # gate (n_slo_miss / n_shed) on *this replay's* traffic — the server's
+    # lifetime counters may carry misses/sheds from earlier clients; its
+    # throughput/latency figures stay as informational context
+    report["fleet"] = {
+        **sf,
+        "n_readings": total,
+        "n_slo_miss": total_miss,
+        "n_shed": sum(shed_counts.values()),
+    }
+    report["server_fleet_lifetime"] = sf
+    report["errors"] = []
+    report["labels_match_offline"] = ok
+    return report
+
+
+def exit_code(report: dict, strict: bool) -> int:
+    """1 on any mismatch or dispatch error — strict or not; `strict`
+    additionally fails on SLO misses and admission sheds."""
+    bad = (not report["labels_match_offline"]) or bool(report["errors"])
+    if strict:
+        bad = (bad or report["fleet"].get("n_slo_miss", 0) > 0
+               or report["fleet"].get("n_shed", 0) > 0
+               or any(t.get("n_shed", 0) > 0
+                      for t in report["tenants"].values()))
+    return 1 if bad else 0
+
+
+def _print_report(report: dict) -> None:
     for name, row in report["tenants"].items():
         verdict = "ok" if row["labels_match_offline"] else "MISMATCH"
         print(f"[{name}] backend={row['backend']} "
-              f"{row['readings']} readings in {row['n_batches']} batches, "
-              f"{row['readings_per_s']:.0f} readings/s, req p50 "
-              f"{row['req_p50_ms']:.2f} ms p99 {row['req_p99_ms']:.2f} ms, "
-              f"slo_miss={row['slo_miss']} labels={verdict}")
+              f"replicas={row.get('replicas')} "
+              f"{row['readings']} readings, "
+              f"req p50 {row.get('req_p50_ms', 0):.2f} ms "
+              f"p99 {row.get('req_p99_ms', 0):.2f} ms, "
+              f"slo_miss={row['slo_miss']} "
+              f"shed={row.get('n_shed', 0)} labels={verdict}")
     f = report["fleet"]
-    print(f"[fleet] total {f['n_readings']} readings, "
+    print(f"[fleet/{report['transport']}] total {f['n_readings']} readings, "
           f"{f['n_batches']} dispatches, slo_miss={f['n_slo_miss']}, "
-          f"req p99 {f['req_p99_ms']:.2f} ms")
+          f"shed={f.get('n_shed', 0)}, req p99 {f['req_p99_ms']:.2f} ms")
     if report["errors"]:
         print(f"[fleet] dispatch errors: {report['errors']}")
+
+
+def _main_serve(args) -> int:
+    from repro.serve.server import serve_forever
+
+    fleet = _build_fleet(args)
+    serve_forever(fleet, args.host, args.port, watch_manifest=args.watch)
+    return 0
+
+
+def _main_replay(args) -> int:
+    fleet = _build_fleet(args, live=not args.connect)
+    client = None
+    try:
+        selected = _select_tenants(fleet, args.replay)
+        streams = _build_streams(fleet, selected, args.readings, args.seed)
+        mode = f"socket {args.connect}" if args.connect else "in-process"
+        print(f"[fleet] {len(fleet.tenants)} tenant(s) loaded, replaying "
+              f"{', '.join(selected)} x {args.readings} readings from "
+              f"{args.producers} producers (deadline {args.deadline_ms} ms, "
+              f"{mode})")
+        if args.connect:
+            from repro.serve.client import FleetClient
+
+            host, _, port = args.connect.rpartition(":")
+            client = FleetClient(host or "127.0.0.1", int(port))
+            report = replay_client(client, fleet, streams,
+                                   producers=args.producers,
+                                   timeout=args.timeout)
+        else:
+            report = replay_fleet(fleet, streams, producers=args.producers,
+                                  timeout=args.timeout)
+    finally:
+        if client is not None:
+            client.close()
+        fleet.shutdown(drain=True)
+
+    _print_report(report)
     if args.out:
         Path(args.out).parent.mkdir(parents=True, exist_ok=True)
         Path(args.out).write_text(json.dumps(report, indent=2, sort_keys=True)
                                   + "\n")
         print(f"wrote {args.out}")
+    return exit_code(report, args.strict)
 
-    bad = (not report["labels_match_offline"]) or report["errors"]
-    if args.strict:
-        bad = bad or report["fleet"]["n_slo_miss"] > 0
-    return 1 if bad else 0
+
+def main(argv=None) -> int:
+    args = _parse_args(argv)
+    return _main_serve(args) if args.command == "serve" \
+        else _main_replay(args)
 
 
 if __name__ == "__main__":

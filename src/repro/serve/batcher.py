@@ -70,6 +70,16 @@ class MicroBatcher:
         self._queue.append(entry)
         return entry
 
+    def adopt(self, entries: list[QueuedItem]) -> None:
+        """Take over already-timed entries from another batcher, in order.
+
+        The hot-reload transfer path: when a tenant is replaced, its
+        queued-but-undispatched requests move to the successor's queue
+        with their original submit times and budgets intact, so a reload
+        never resets anyone's deadline clock.
+        """
+        self._queue.extend(entries)
+
     @property
     def oldest_due_at(self) -> float | None:
         return self._queue[0].due_at if self._queue else None

@@ -1,0 +1,257 @@
+"""Blocking client for the fleet's socket transport.
+
+The consumer half of `protocol.py`: one TCP connection, a background
+reader thread that de-frames RESULT/SHED/ERROR messages and resolves
+them against pending request handles by req_id, and a pipelined submit
+path — `submit` returns a `PendingResult` immediately, so a producer can
+keep thousands of readings in flight and collect labels in completion
+order.  This is what the replay CLI (`python -m repro.serve replay
+--connect host:port`) and the cross-process CI smoke drive; it has no
+dependency on the fleet, so a sensor gateway can vendor just
+`protocol.py` + this file.
+
+Admission sheds surface as `FleetShedError` (carrying the server's
+`retry_after_ms` hint) from `PendingResult.result()`; `classify` can
+optionally honor the hint and resubmit (`retry_shed=True`), which is the
+polite-producer loop the admission controller is designed for.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from queue import Empty, Queue
+
+import numpy as np
+
+from repro.serve import protocol as P
+
+
+class FleetClientError(RuntimeError):
+    """Connection-level failure (bad handshake, server error, disconnect)."""
+
+
+class FleetShedError(RuntimeError):
+    """The server shed this submission; retry after `retry_after_ms`."""
+
+    def __init__(self, req_id: int, retry_after_ms: float):
+        super().__init__(f"request {req_id} shed by admission control; "
+                         f"retry after {retry_after_ms:.1f} ms")
+        self.req_id = req_id
+        self.retry_after_ms = retry_after_ms
+
+
+class PendingResult:
+    """Completion handle for one submitted reading."""
+
+    def __init__(self, req_id: int, tenant: str):
+        self.req_id = req_id
+        self.tenant = tenant
+        self.label: int | None = None
+        self.latency_ms: float | None = None    # server-side submit -> label
+        self.error: str | None = None
+        self.retry_after_ms: float | None = None    # set iff shed
+        self._event = threading.Event()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def shed(self) -> bool:
+        return self.retry_after_ms is not None
+
+    def result(self, timeout: float | None = None) -> int:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.req_id} ({self.tenant}) not "
+                               f"answered within {timeout}s")
+        if self.retry_after_ms is not None:
+            raise FleetShedError(self.req_id, self.retry_after_ms)
+        if self.error is not None:
+            raise FleetClientError(f"request {self.req_id} ({self.tenant}) "
+                                   f"failed: {self.error}")
+        return self.label
+
+
+class FleetClient:
+    """One connection to a `FleetServer`; safe for multi-threaded submits."""
+
+    def __init__(self, host: str, port: int, *,
+                 connect_timeout: float = 10.0):
+        self._sock = socket.create_connection((host, port),
+                                              timeout=connect_timeout)
+        self._sock.settimeout(None)
+        self._send_lock = threading.Lock()
+        self._pending: dict[int, PendingResult] = {}
+        self._pending_lock = threading.Lock()
+        self._next_id = 1
+        self._closed = False
+        self._conn_error: str | None = None
+        self._welcome = threading.Event()
+        self._rpc: dict[int, Queue] = {P.MSG_TENANTS: Queue(),
+                                       P.MSG_STATS_REPLY: Queue(),
+                                       P.MSG_RELOADED: Queue()}
+        self._rpc_lock = threading.Lock()
+        self._reader = threading.Thread(target=self._read_loop,
+                                        name="fleet-client-reader",
+                                        daemon=True)
+        self._reader.start()
+        self._sendall(P.encode_hello())
+        if not self._welcome.wait(connect_timeout):
+            err = self._conn_error or "no WELCOME from server"
+            self.close()
+            raise FleetClientError(f"handshake failed: {err}")
+
+    # -- wire plumbing -------------------------------------------------------
+    def _sendall(self, data: bytes) -> None:
+        with self._send_lock:
+            if self._closed:
+                raise FleetClientError("client is closed")
+            try:
+                self._sock.sendall(data)
+            except OSError as exc:
+                raise FleetClientError(f"send failed: {exc}") from exc
+
+    def _read_loop(self) -> None:
+        framer = P.FrameReader()
+        try:
+            while True:
+                chunk = self._sock.recv(1 << 16)
+                if not chunk:
+                    break
+                for payload in framer.feed(chunk):
+                    self._on_message(P.decode_message(payload))
+        except (OSError, P.ProtocolError) as exc:
+            if not self._closed:
+                self._conn_error = self._conn_error or str(exc)
+        finally:
+            self._fail_all(self._conn_error or "connection closed")
+            self._welcome.set()     # unblock a handshake waiter, if any
+
+    def _on_message(self, msg: P.Message) -> None:
+        if msg.type == P.MSG_WELCOME:
+            self._welcome.set()
+        elif msg.type in (P.MSG_RESULT, P.MSG_SHED, P.MSG_ERROR):
+            if msg.type == P.MSG_ERROR and msg.req_id == P.CONN_ERR:
+                self._conn_error = msg.message
+                self._fail_all(f"server: {msg.message}")
+                return
+            with self._pending_lock:
+                pend = self._pending.pop(msg.req_id, None)
+            if pend is None:
+                return              # late answer for an abandoned request
+            if msg.type == P.MSG_RESULT:
+                pend.label = msg.label
+                pend.latency_ms = msg.latency_ms
+            elif msg.type == P.MSG_SHED:
+                pend.retry_after_ms = msg.retry_after_ms
+            else:
+                pend.error = msg.message
+            pend._event.set()
+        elif msg.type in self._rpc:
+            self._rpc[msg.type].put(msg.doc)
+
+    def _fail_all(self, why: str) -> None:
+        with self._pending_lock:
+            pending, self._pending = self._pending, {}
+        for pend in pending.values():
+            pend.error = why
+            pend._event.set()
+
+    # -- request path --------------------------------------------------------
+    def submit(self, tenant: str, readings: np.ndarray,
+               deadline_ms: float | None = None) -> PendingResult:
+        """Pipeline one reading; returns immediately with a handle."""
+        if self._conn_error is not None:
+            raise FleetClientError(self._conn_error)
+        with self._pending_lock:
+            req_id = self._next_id
+            self._next_id += 1
+            pend = PendingResult(req_id, tenant)
+            self._pending[req_id] = pend
+        try:
+            self._sendall(P.encode_submit(req_id, tenant, readings,
+                                          deadline_ms))
+        except FleetClientError:
+            with self._pending_lock:
+                self._pending.pop(req_id, None)
+            raise
+        return pend
+
+    def classify(self, tenant: str, x: np.ndarray,
+                 deadline_ms: float | None = None, *,
+                 timeout: float = 120.0, retry_shed: bool = False,
+                 max_retries: int = 64) -> np.ndarray:
+        """Submit every row of `(S, F)` readings; block for `(S,)` labels.
+
+        With `retry_shed`, a shed row sleeps out the server's
+        `retry_after_ms` hint and resubmits (up to `max_retries` times) —
+        the cooperative backoff loop admission control expects of bulk
+        producers.
+        """
+        x = np.asarray(x)
+        if x.ndim != 2:
+            raise ValueError(f"expected (S, F) readings, got {x.shape}")
+        handles = [self.submit(tenant, row, deadline_ms) for row in x]
+        labels = np.empty(x.shape[0], dtype=np.int32)
+        deadline = time.monotonic() + timeout
+        for i, pend in enumerate(handles):
+            for attempt in range(max_retries + 1):
+                try:
+                    labels[i] = pend.result(max(0.0, deadline
+                                                - time.monotonic()))
+                    break
+                except FleetShedError as exc:
+                    if not retry_shed or attempt == max_retries:
+                        raise
+                    time.sleep(min(exc.retry_after_ms, 1000.0) * 1e-3)
+                    pend = self.submit(tenant, x[i], deadline_ms)
+        return labels
+
+    # -- admin round-trips ---------------------------------------------------
+    def _rpc_call(self, request: bytes, reply_type: int,
+                  timeout: float):
+        with self._rpc_lock:        # one outstanding admin call at a time
+            q = self._rpc[reply_type]
+            while True:     # a reply that arrived after a past timeout is
+                try:        # stale — drop it or every later call is off by one
+                    q.get_nowait()
+                except Empty:
+                    break
+            self._sendall(request)
+            try:
+                return q.get(timeout=timeout)
+            except Empty:
+                raise TimeoutError(
+                    f"no reply (type {reply_type}) within {timeout}s; "
+                    + (self._conn_error or "server unresponsive")) from None
+
+    def tenants(self, timeout: float = 30.0) -> list[dict]:
+        """The server's tenant table (name, n_features, backend, ...)."""
+        return self._rpc_call(P.encode_list(), P.MSG_TENANTS, timeout)
+
+    def stats(self, timeout: float = 30.0) -> dict:
+        """The server fleet's `stats_summary()`."""
+        return self._rpc_call(P.encode_stats(), P.MSG_STATS_REPLY, timeout)
+
+    def reload(self, timeout: float = 120.0) -> dict:
+        """Ask the server to `sync_manifest()`; returns the action record."""
+        return self._rpc_call(P.encode_reload(), P.MSG_RELOADED, timeout)
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+        if threading.current_thread() is not self._reader:
+            self._reader.join(5.0)
+
+    def __enter__(self) -> "FleetClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,47 +1,79 @@
-"""Multi-tenant sensor-serving fleet: router + deadline-driven dispatch.
+"""Multi-tenant sensor-serving fleet: router, replica pools, admission.
 
 One `ClassifierFleet` serves every classifier emitted under an emit
 directory (`repro.evolve --emit-dir`, `python -m repro.compile.export`):
-each manifest tenant gets its own `CircuitServingEngine` over the loaded
-program, pinned to an execution backend (`np`/`swar`/`pallas` — the same
-`kernels.dispatch` routing the campaign evaluators use, so a `swar` or
-`pallas` tenant shards large batches along the packed-word axis across
-local devices), and a single router fans `submit(tenant, reading)` calls
-into per-tenant `MicroBatcher` queues.
+each manifest tenant gets a **replica pool** of `CircuitServingEngine`s
+over the loaded program (`serve/replicas.py` — least-loaded pick, devices
+round-robined via `kernels.dispatch.replica_devices`), pinned to an
+execution backend (`np`/`swar`/`pallas` — the same `kernels.dispatch`
+routing the campaign evaluators use), and a single router fans
+`submit(tenant, reading)` calls into per-tenant `MicroBatcher` queues.
 
 Dispatch is pushed off the caller thread: one background scheduler thread
-per *backend* watches the queues of the tenants pinned to it and flushes a
-tenant the moment a batch is due — `max_batch` queued, or the oldest
-request about to outlive its latency budget (see `batcher.py`).  Per-batch
+per *backend* watches the queues of the tenants pinned to it and hands a
+due batch — `max_batch` queued, or the oldest request about to outlive
+its latency budget (see `batcher.py`) — to the least-loaded idle replica
+on a per-backend dispatch executor, so a hot tenant's batches overlap
+across replicas instead of queueing behind each other.  Per-batch
 execution cost is tracked as an EMA per tenant and fed back into the
 deadline policy, so "about to" means "could not survive one more dispatch
-interval".  Completed requests carry label + measured latency; per-tenant
-and fleet-wide `ServeStats` accumulate throughput, p50/p99 batch and
-request latency, and SLO-violation counts.
+interval".
+
+**Admission control**: a tenant with `max_queue` set sheds new
+submissions once its queue is that deep — `submit` raises
+`FleetOverloadError` carrying a `retry_after_ms` hint sized from the
+backlog and the tenant's dispatch-cost estimate — so overload shows up as
+explicit sheds (counted in `ServeStats.n_shed`) instead of silent SLO
+misses on accepted traffic.
+
+**Hot reload**: a fleet built by `from_emit_dir` can `sync_manifest()` at
+any time — new manifest rows become tenants, rows whose generation
+counter moved are replaced (queued requests transfer to the successor
+with their deadline clocks intact; in-flight batches finish on the old
+engines), and vanished rows retire after their backlog is served.  The
+socket server (`serve/server.py`) drives this from an mtime watcher.
 
 Everything the scheduler adds is bookkeeping — labels come from the same
 `CircuitProgram` the offline path runs, so fleet output is bit-identical
 to `CircuitProgram.predict` per tenant on every backend (pinned by
-tests/test_serve_fleet.py and the tests/test_conformance.py fleet matrix).
+tests/test_serve_fleet.py, the tests/test_conformance.py fleet matrix,
+and over the wire by tests/test_serve_transport.py).
 """
 from __future__ import annotations
 
+import math
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from pathlib import Path
 
 import numpy as np
 
-from repro.compile.artifact import load_manifest, load_program
+from repro.compile.artifact import load_manifest_doc, load_program
 from repro.compile.program import CircuitProgram
 from repro.serve.batcher import MicroBatcher, QueuedItem
-from repro.serving.circuit_engine import (STATS_WINDOW, CircuitServingEngine,
-                                          ServeStats)
+from repro.serve.engine import (STATS_WINDOW, CircuitServingEngine,
+                                ServeStats)
+from repro.serve.replicas import EngineReplica, ReplicaPool
 
 FLEET_BACKENDS = ("np", "swar", "pallas")
 DEFAULT_DEADLINE_MS = 50.0
 DEFAULT_MAX_BATCH = 256
+
+
+class FleetOverloadError(RuntimeError):
+    """Submission shed by admission control; retry after `retry_after_ms`."""
+
+    def __init__(self, tenant: str, queue_depth: int, max_queue: int,
+                 retry_after_ms: float):
+        super().__init__(
+            f"tenant {tenant!r} is over capacity ({queue_depth} queued, "
+            f"limit {max_queue}); retry after {retry_after_ms:.1f} ms")
+        self.tenant = tenant
+        self.queue_depth = queue_depth
+        self.max_queue = max_queue
+        self.retry_after_ms = retry_after_ms
 
 
 @dataclass
@@ -58,9 +90,29 @@ class FleetRequest:
     _t_submit: float = 0.0
     _event: threading.Event = field(default_factory=threading.Event,
                                     repr=False)
+    _callbacks: list = field(default_factory=list, repr=False)
+    _cb_lock: threading.Lock = field(default_factory=threading.Lock,
+                                     repr=False)
 
     def done(self) -> bool:
         return self._event.is_set()
+
+    def add_done_callback(self, fn) -> None:
+        """Run `fn(self)` when the request completes (immediately if it
+        already has) — the hook the socket server uses to stream results
+        back without parking a thread per request."""
+        with self._cb_lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    def _complete(self) -> None:
+        with self._cb_lock:
+            self._event.set()
+            callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            fn(self)
 
     def result(self, timeout: float | None = None) -> int:
         """Block until the label is ready (raises on timeout/cancel)."""
@@ -79,43 +131,61 @@ class FleetRequest:
 
 @dataclass
 class TenantSpec:
-    """Everything needed to stand up one tenant engine."""
+    """Everything needed to stand up one tenant's replica pool."""
 
     name: str
     program: CircuitProgram
     backend: str = "swar"              # np | swar | pallas
     max_batch: int = DEFAULT_MAX_BATCH
     deadline_ms: float = DEFAULT_DEADLINE_MS
+    replicas: int = 1
+    max_queue: int | None = None       # admission limit; None = never shed
     dataset: str | None = None
+    generation: int = 0                # manifest generation that emitted it
     meta: dict = field(default_factory=dict)
 
 
 class _Tenant:
-    """Runtime state: engine + queue + dispatch-cost estimate."""
+    """Runtime state: replica pool + queue + dispatch-cost estimate."""
 
     def __init__(self, spec: TenantSpec, stats_window: int):
         if spec.backend not in FLEET_BACKENDS:
             raise ValueError(f"unknown tenant backend {spec.backend!r}; "
                              f"valid: {', '.join(FLEET_BACKENDS)}")
+        if spec.replicas < 1:
+            raise ValueError("a tenant needs at least one replica")
+        if spec.max_queue is not None and spec.max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None)")
         self.spec = spec
-        self.engine = CircuitServingEngine(spec.program, spec.max_batch,
-                                           stats_window=stats_window)
+        self.pool = ReplicaPool.from_program(spec.program, spec.replicas,
+                                             spec.max_batch,
+                                             stats_window=stats_window)
         self.batcher = MicroBatcher(spec.max_batch, spec.deadline_ms)
+        self.stats = ServeStats(window=stats_window)
         self.est_dispatch_s = 1e-3      # EMA of recent dispatch cost
         self.last_dispatch_s = 1e-3     # most recent (spike-sensitive)
+        self.retiring = False           # drain, then drop from the worker
+        self.from_manifest = False      # sync_manifest may retire it
 
     @property
     def name(self) -> str:
         return self.spec.name
 
+    @property
+    def engine(self) -> CircuitServingEngine:
+        """Replica 0 — the bulk/offline-reference engine."""
+        return self.pool.replicas[0].engine
+
 
 class _BackendWorker(threading.Thread):
-    """One dispatch thread per execution backend.
+    """One scheduler thread per execution backend.
 
     Owns the queues of every tenant pinned to its backend behind one
     condition variable: producers notify on submit, the loop sleeps until
-    the earliest possible due instant, pops the most urgent due batch, and
-    dispatches it outside the lock so producers never block on device time.
+    the earliest possible due instant, pops the most urgent due batch
+    *that has an idle replica*, and hands it to the dispatch executor so
+    the scheduler never blocks on device time — that is what lets two due
+    batches of one hot tenant overlap on different replicas.
     """
 
     def __init__(self, fleet: "ClassifierFleet", backend: str,
@@ -128,6 +198,20 @@ class _BackendWorker(threading.Thread):
         self.stop = False          # set under cond; drain-all then exit
         self.kick = False          # flush(): treat every queue as due
         self.in_flight = 0
+        self._exec: ThreadPoolExecutor | None = None
+        self._exec_workers = 0
+
+    def _ensure_executor(self) -> ThreadPoolExecutor:
+        want = max(2, sum(t.pool.size for t in self.tenants))
+        if self._exec is None or want > self._exec_workers:
+            old = self._exec
+            self._exec = ThreadPoolExecutor(
+                max_workers=want,
+                thread_name_prefix=f"fleet-exec-{self.backend}")
+            self._exec_workers = want
+            if old is not None:     # running dispatches finish on old threads
+                old.shutdown(wait=False)
+        return self._exec
 
     # policy: urgency-ordered among due tenants --------------------------
     def _eta_s(self, t: _Tenant) -> float:
@@ -141,17 +225,24 @@ class _BackendWorker(threading.Thread):
         return (max(t.est_dispatch_s, t.last_dispatch_s)
                 * self.fleet.safety_factor + self.fleet.sched_slack_s)
 
+    def _due(self, t: _Tenant, now: float) -> bool:
+        return bool(len(t.batcher)) and (
+            self.stop or self.kick or t.retiring
+            or t.batcher.due(now, self._eta_s(t)))
+
     def _pick(self, now: float) -> _Tenant | None:
-        due = [t for t in self.tenants if len(t.batcher)
-               and (self.stop or self.kick
-                    or t.batcher.due(now, self._eta_s(t)))]
+        due = [t for t in self.tenants
+               if self._due(t, now) and t.pool.has_idle()]
         if not due:
             return None
         return min(due, key=lambda t: t.batcher.oldest_due_at)
 
     def _wait_s(self, now: float) -> float | None:
+        # tenants whose pool is saturated wake via the release notify, not
+        # a timer — including them here would spin the scheduler
         wakes = [t.batcher.next_due_at(self._eta_s(t))
-                 for t in self.tenants if len(t.batcher)]
+                 for t in self.tenants if len(t.batcher)
+                 and t.pool.has_idle()]
         if not wakes:
             return None                      # sleep until notified
         return max(1e-4, min(wakes) - now)
@@ -159,29 +250,49 @@ class _BackendWorker(threading.Thread):
     def queued(self) -> int:
         return sum(len(t.batcher) for t in self.tenants)
 
+    def _reap_retired(self) -> None:
+        """Drop fully drained retiring tenants (caller holds `cond`)."""
+        drained = [t for t in self.tenants
+                   if t.retiring and not len(t.batcher) and t.pool.idle()]
+        if drained:
+            self.tenants = [t for t in self.tenants if t not in drained]
+            self.cond.notify_all()
+
     def run(self) -> None:
         while True:
             with self.cond:
                 while True:
+                    self._reap_retired()
                     now = self.fleet._clock()
                     tenant = self._pick(now)
                     if tenant is not None:
                         batch = tenant.batcher.pop_batch()
+                        replica = tenant.pool.acquire(len(batch))
                         self.in_flight += len(batch)
                         break
-                    if self.stop and self.queued() == 0:
+                    if (self.stop and self.queued() == 0
+                            and self.in_flight == 0):
+                        if self._exec is not None:
+                            self._exec.shutdown(wait=False)
                         return
                     self.cond.wait(self._wait_s(now))
-            try:
-                self.fleet._dispatch(tenant, batch)
-            finally:
-                with self.cond:
-                    self.in_flight -= len(batch)
-                    self.cond.notify_all()
+                ex = self._ensure_executor()
+            ex.submit(self._run_dispatch, tenant, replica, batch)
+
+    def _run_dispatch(self, tenant: _Tenant, replica: EngineReplica,
+                      batch: list[QueuedItem]) -> None:
+        try:
+            self.fleet._dispatch(tenant, replica, batch)
+        finally:
+            with self.cond:
+                tenant.pool.release(replica)
+                self.in_flight -= len(batch)
+                self._reap_retired()
+                self.cond.notify_all()
 
 
 class ClassifierFleet:
-    """Router + scheduler over per-tenant serving engines."""
+    """Router + scheduler over per-tenant replica pools."""
 
     def __init__(self, specs: list[TenantSpec], *,
                  stats_window: int = STATS_WINDOW,
@@ -194,29 +305,42 @@ class ClassifierFleet:
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tenant names: {sorted(names)}")
         self.stats = ServeStats(window=stats_window)
+        self.stats_window = stats_window
         self.safety_factor = safety_factor
         self.sched_slack_s = sched_slack_s
+        self.warmup_on_load = warmup
         self._clock = clock
         self._tenants: dict[str, _Tenant] = {
-            s.name: _Tenant(s, stats_window) for s in specs}
-        if warmup:
-            for t in self._tenants.values():
-                t.est_dispatch_s = max(t.engine.warmup(), 1e-4)
-                t.last_dispatch_s = t.est_dispatch_s
+            s.name: self._build_tenant(s) for s in specs}
         by_backend: dict[str, list[_Tenant]] = {}
         for t in self._tenants.values():
             by_backend.setdefault(t.spec.backend, []).append(t)
         self._workers = {b: _BackendWorker(self, b, ts)
                          for b, ts in sorted(by_backend.items())}
-        self._worker_of = {t.name: self._workers[t.spec.backend]
-                           for t in self._tenants.values()}
         self._uid_lock = threading.Lock()
         self._next_uid = 0
         self.errors: list[str] = []     # dispatch-thread failures, in order
         self._shutdown = False
         self._started = False
+        self._admin_lock = threading.Lock()   # add/replace/retire
+        self._sync_lock = threading.Lock()    # one manifest reconcile at a
+                                              # time (watcher + RELOAD RPC)
+        self._manifest_ctx: dict | None = None   # set by from_emit_dir
         if autostart:
             self.start()
+
+    def _build_tenant(self, spec: TenantSpec) -> _Tenant:
+        t = _Tenant(spec, self.stats_window)
+        if self.warmup_on_load:
+            # every replica: each is pinned to its own device, so each has
+            # its own executable to compile — a cold replica would pay jit
+            # inside its first deadline-bound batch
+            est = 1e-4
+            for rep in t.pool.replicas:
+                est = max(est, rep.engine.warmup())
+            t.est_dispatch_s = est
+            t.last_dispatch_s = est
+        return t
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -225,14 +349,25 @@ class ClassifierFleet:
                       max_batch: int = DEFAULT_MAX_BATCH,
                       deadline_ms: float = DEFAULT_DEADLINE_MS,
                       tenants: list[str] | None = None,
+                      replicas: int | dict[str, int] | None = None,
+                      max_queue: int | None = None,
                       **kw) -> "ClassifierFleet":
         """Serve every artifact the emit dir's `fleet.json` manifest names.
 
         `backends` pins execution: one string for the whole fleet, or a
         `{tenant: backend}` map (missing names fall back to `swar`).
+        `replicas` overrides the manifest's per-tenant replica hints the
+        same way; `max_queue` arms admission control for every tenant.
+        The resulting fleet remembers the directory, so `sync_manifest()`
+        hot-reloads added/replaced/retired manifest rows later.
         """
         emit_dir = Path(emit_dir)
-        rows = load_manifest(emit_dir)
+        ctx = {"emit_dir": emit_dir, "backends": backends,
+               "max_batch": max_batch, "deadline_ms": deadline_ms,
+               "tenants": tenants, "replicas": replicas,
+               "max_queue": max_queue}
+        doc = load_manifest_doc(emit_dir)
+        rows = doc["tenants"]
         if tenants is not None:
             known = {r["name"] for r in rows}
             missing = sorted(set(tenants) - known)
@@ -241,16 +376,31 @@ class ClassifierFleet:
                                f"{', '.join(missing)}; available: "
                                f"{', '.join(sorted(known))}")
             rows = [r for r in rows if r["name"] in tenants]
-        specs = []
-        for row in rows:
-            backend = (backends if isinstance(backends, str)
-                       else backends.get(row["name"], "swar"))
-            program = load_program(emit_dir / row["program"], backend=backend)
-            specs.append(TenantSpec(
-                name=row["name"], program=program, backend=backend,
-                max_batch=max_batch, deadline_ms=deadline_ms,
-                dataset=row.get("dataset"), meta=dict(row)))
-        return cls(specs, **kw)
+        specs = [cls._spec_from_row(row, ctx) for row in rows]
+        fleet = cls(specs, **kw)
+        fleet._manifest_ctx = ctx
+        fleet._manifest_generation = doc.get("generation", 0)
+        for t in fleet._tenants.values():
+            t.from_manifest = True
+        return fleet
+
+    @staticmethod
+    def _spec_from_row(row: dict, ctx: dict) -> TenantSpec:
+        backends = ctx["backends"]
+        backend = (backends if isinstance(backends, str)
+                   else backends.get(row["name"], "swar"))
+        replicas = ctx["replicas"]
+        n_replicas = (replicas if isinstance(replicas, int)
+                      else (replicas or {}).get(row["name"],
+                                                int(row.get("replicas", 1))))
+        program = load_program(ctx["emit_dir"] / row["program"],
+                               backend=backend)
+        return TenantSpec(
+            name=row["name"], program=program, backend=backend,
+            max_batch=ctx["max_batch"], deadline_ms=ctx["deadline_ms"],
+            replicas=max(1, n_replicas), max_queue=ctx["max_queue"],
+            dataset=row.get("dataset"),
+            generation=int(row.get("generation", 0)), meta=dict(row))
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> None:
@@ -273,6 +423,9 @@ class ClassifierFleet:
     def tenant_backend(self, name: str) -> str:
         return self._tenant(name).spec.backend
 
+    def tenant_replicas(self, name: str) -> int:
+        return self._tenant(name).pool.size
+
     def n_features(self, name: str) -> int:
         return self._tenant(name).engine.n_features
 
@@ -288,59 +441,216 @@ class ClassifierFleet:
         return sum(w.queued() + w.in_flight for w in self._workers.values())
 
     # -- request path --------------------------------------------------------
+    def _retry_after_ms(self, t: _Tenant, depth: int) -> float:
+        """How long until the backlog plausibly fits under `max_queue`:
+        batches ahead of a new arrival, spread over the replica pool, at
+        the tenant's current dispatch-cost estimate."""
+        batches_ahead = math.ceil(max(1, depth) / t.spec.max_batch)
+        est = max(t.est_dispatch_s, t.last_dispatch_s, 1e-4)
+        return max(1.0, batches_ahead * est * 1e3 / t.pool.size)
+
     def submit(self, tenant: str, readings: np.ndarray,
                deadline_ms: float | None = None) -> FleetRequest:
-        """Queue one reading for `tenant`; returns a completion handle."""
-        t = self._tenant(tenant)
+        """Queue one reading for `tenant`; returns a completion handle.
+
+        Raises `FleetOverloadError` (with a `retry_after_ms` hint) instead
+        of queueing when the tenant's `max_queue` admission limit is hit —
+        accepted requests keep meeting their deadlines, overload becomes
+        visible as sheds rather than SLO misses.
+        """
         readings = np.asarray(readings, dtype=np.float64).reshape(-1)
-        if readings.shape[0] != t.engine.n_features:
-            raise ValueError(f"{tenant}: expected {t.engine.n_features} "
-                             f"features, got {readings.shape[0]}")
-        if deadline_ms is None:
-            deadline_ms = t.spec.deadline_ms
-        with self._uid_lock:
-            uid = self._next_uid
-            self._next_uid += 1
-        req = FleetRequest(uid=uid, tenant=tenant, readings=readings,
-                           deadline_ms=deadline_ms)
-        worker = self._worker_of[tenant]
-        with worker.cond:
-            if self._shutdown:
-                raise RuntimeError("fleet is shut down")
-            entry = t.batcher.submit(req, now=self._clock(),
-                                     deadline_ms=deadline_ms)
-            req._t_submit = entry.t_submit
-            worker.cond.notify_all()
-        return req
+        while True:
+            t = self._tenant(tenant)
+            if readings.shape[0] != t.engine.n_features:
+                raise ValueError(f"{tenant}: expected {t.engine.n_features} "
+                                 f"features, got {readings.shape[0]}")
+            worker = self._worker_of(t)
+            with worker.cond:
+                if self._shutdown:
+                    raise RuntimeError("fleet is shut down")
+                if self._tenants.get(tenant) is not t:
+                    continue        # replaced mid-flight; retry on successor
+                depth = len(t.batcher)
+                if t.spec.max_queue is not None and depth >= t.spec.max_queue:
+                    retry_ms = self._retry_after_ms(t, depth)
+                    t.stats.record_shed()
+                    self.stats.record_shed()
+                    raise FleetOverloadError(tenant, depth, t.spec.max_queue,
+                                             retry_ms)
+                with self._uid_lock:
+                    uid = self._next_uid
+                    self._next_uid += 1
+                req = FleetRequest(
+                    uid=uid, tenant=tenant, readings=readings,
+                    deadline_ms=(t.spec.deadline_ms if deadline_ms is None
+                                 else deadline_ms))
+                entry = t.batcher.submit(req, now=self._clock(),
+                                         deadline_ms=req.deadline_ms)
+                req._t_submit = entry.t_submit
+                worker.cond.notify_all()
+            return req
+
+    def _worker_of(self, t: _Tenant) -> _BackendWorker:
+        return self._workers[t.spec.backend]
 
     def classify_stream(self, tenant: str, x: np.ndarray) -> np.ndarray:
-        """Bulk path: route a whole `(S, F)` stream straight to the engine."""
+        """Bulk path: route a whole `(S, F)` stream straight to replica 0."""
         return self._tenant(tenant).engine.classify_stream(x)
 
-    # -- dispatch (worker threads) -------------------------------------------
-    def _dispatch(self, tenant: _Tenant, entries: list[QueuedItem]) -> None:
+    # -- dispatch (executor threads) -----------------------------------------
+    def _dispatch(self, tenant: _Tenant, replica: EngineReplica,
+                  entries: list[QueuedItem]) -> None:
         reqs: list[FleetRequest] = [e.item for e in entries]
         try:
             x = np.stack([r.readings for r in reqs])
             t0 = self._clock()
-            labels = tenant.engine.classify_batch(x)
+            labels = replica.engine.classify_batch(x)
             dt = self._clock() - t0
         except Exception as exc:        # complete exceptionally, never hang
             msg = f"{type(exc).__name__}: {exc}"
             self.errors.append(f"{tenant.name}: {msg}")
             for r in reqs:
                 r.error = msg
-                r._event.set()
+                r._complete()
             return
         tenant.est_dispatch_s = 0.7 * tenant.est_dispatch_s + 0.3 * dt
         tenant.last_dispatch_s = dt
         self.stats.record(len(reqs), dt)
+        tenant.stats.record(len(reqs), dt)
         # FleetRequest carries the same completion fields as SensorRequest,
-        # so the engine's label/latency/stats attach is reused verbatim
-        tenant.engine.complete(reqs, labels)
+        # so the engine's label/latency attach is reused verbatim (request
+        # stats land on the replica's engine; tenant + fleet get them here)
+        replica.engine.complete(reqs, labels)
         for r in reqs:
             self.stats.record_request(r.latency_ms, r.deadline_ms)
-            r._event.set()
+            tenant.stats.record_request(r.latency_ms, r.deadline_ms)
+            r._complete()
+
+    # -- hot reload ----------------------------------------------------------
+    def add_tenant(self, spec: TenantSpec) -> None:
+        """Stand up a new tenant without draining anything."""
+        with self._admin_lock:
+            # shutdown() flips the flag under this lock, so checking here
+            # can't race a concurrent shutdown into leaking a worker
+            # thread that nobody will ever stop
+            if self._shutdown:
+                raise RuntimeError("fleet is shut down")
+            if spec.name in self._tenants:
+                raise ValueError(f"tenant {spec.name!r} already exists "
+                                 "(use replace_tenant)")
+            t = self._build_tenant(spec)    # warmup outside any worker lock
+            worker = self._workers.get(spec.backend)
+            if worker is None:
+                worker = _BackendWorker(self, spec.backend, [])
+                self._workers[spec.backend] = worker
+                if self._started:
+                    worker.start()
+            with worker.cond:
+                self._tenants[spec.name] = t
+                worker.tenants.append(t)
+                worker.cond.notify_all()
+
+    def replace_tenant(self, spec: TenantSpec) -> None:
+        """Swap a tenant for a new program/config without dropping requests.
+
+        Queued requests transfer to the successor (original submit times
+        and budgets intact) when the feature count still matches; batches
+        already in flight finish on the old replicas.  The old pool drains
+        and is dropped by its scheduler.
+        """
+        with self._admin_lock:
+            if self._shutdown:
+                raise RuntimeError("fleet is shut down")
+            old = self._tenant(spec.name)
+            new = self._build_tenant(spec)
+            new.from_manifest = old.from_manifest
+            old_worker = self._worker_of(old)
+            new_worker = self._workers.get(spec.backend)
+            if new_worker is None:
+                new_worker = _BackendWorker(self, spec.backend, [])
+                self._workers[spec.backend] = new_worker
+                if self._started:
+                    new_worker.start()
+            first, second = ((old_worker, new_worker)
+                             if id(old_worker) <= id(new_worker)
+                             else (new_worker, old_worker))
+            with first.cond:
+                ctx = second.cond if second is not first else \
+                    threading.Lock()        # dummy when same worker
+                with ctx:
+                    moved = [e for b in old.batcher.drain() for e in b]
+                    compatible = (new.engine.n_features
+                                  == old.engine.n_features)
+                    if compatible:
+                        new.batcher.adopt(moved)
+                    self._tenants[spec.name] = new
+                    new_worker.tenants.append(new)
+                    old.retiring = True
+                    old_worker.cond.notify_all()
+                    new_worker.cond.notify_all()
+            if not compatible:
+                for e in moved:
+                    e.item.error = (f"tenant {spec.name!r} replaced with an "
+                                    f"incompatible feature count")
+                    e.item._complete()
+
+    def retire_tenant(self, name: str, timeout: float = 30.0) -> None:
+        """Remove a tenant: refuse new submits, serve the backlog, drop it."""
+        with self._admin_lock:
+            t = self._tenant(name)
+            worker = self._worker_of(t)
+            with worker.cond:
+                del self._tenants[name]
+                t.retiring = True
+                worker.cond.notify_all()
+        deadline = self._clock() + timeout
+        with worker.cond:
+            while t in worker.tenants:
+                left = deadline - self._clock()
+                if left <= 0:
+                    raise TimeoutError(
+                        f"tenant {name!r} still draining after {timeout}s "
+                        f"({len(t.batcher)} queued)")
+                worker.cond.wait(min(left, 0.05))
+
+    def sync_manifest(self) -> dict:
+        """Reconcile live tenants with the emit dir's current `fleet.json`.
+
+        Only fleets built by `from_emit_dir` can sync.  Returns the action
+        summary `{"added": [...], "replaced": [...], "retired": [...],
+        "generation": N}` — empty lists mean the manifest generation
+        matched and nothing moved.
+        """
+        if self._manifest_ctx is None:
+            raise RuntimeError("fleet was not built from an emit dir; "
+                               "nothing to sync against")
+        with self._sync_lock:
+            return self._sync_manifest_locked()
+
+    def _sync_manifest_locked(self) -> dict:
+        ctx = self._manifest_ctx
+        doc = load_manifest_doc(ctx["emit_dir"])
+        actions = {"added": [], "replaced": [], "retired": [],
+                   "generation": doc.get("generation", 0)}
+        rows = {r["name"]: r for r in doc["tenants"]}
+        if ctx["tenants"] is not None:
+            rows = {n: r for n, r in rows.items() if n in ctx["tenants"]}
+        for name in sorted(set(self._tenants) - set(rows)):
+            if self._tenants[name].from_manifest:
+                self.retire_tenant(name)
+                actions["retired"].append(name)
+        for name, row in sorted(rows.items()):
+            cur = self._tenants.get(name)
+            if cur is None:
+                spec = self._spec_from_row(row, ctx)
+                self.add_tenant(spec)
+                self._tenants[name].from_manifest = True
+                actions["added"].append(name)
+            elif int(row.get("generation", 0)) != cur.spec.generation:
+                self.replace_tenant(self._spec_from_row(row, ctx))
+                actions["replaced"].append(name)
+        self._manifest_generation = actions["generation"]
+        return actions
 
     # -- drain / shutdown ----------------------------------------------------
     def flush(self, timeout: float | None = 30.0) -> None:
@@ -351,12 +661,12 @@ class ClassifierFleet:
         condition after every dispatch completes).
         """
         deadline = None if timeout is None else self._clock() + timeout
-        for w in self._workers.values():
+        for w in list(self._workers.values()):
             with w.cond:
                 w.kick = True
                 w.cond.notify_all()
         try:
-            for w in self._workers.values():
+            for w in list(self._workers.values()):
                 with w.cond:
                     while w.queued() or w.in_flight:
                         left = (None if deadline is None
@@ -369,15 +679,16 @@ class ClassifierFleet:
                         w.cond.wait(0.05 if left is None
                                     else min(left, 0.05))
         finally:
-            for w in self._workers.values():
+            for w in list(self._workers.values()):
                 with w.cond:
                     w.kick = False
 
     def shutdown(self, drain: bool = True, timeout: float = 60.0) -> None:
         """Stop dispatch threads; `drain` serves the backlog first."""
-        if self._shutdown:
-            return
-        self._shutdown = True
+        with self._admin_lock:      # serialized against add/replace, so no
+            if self._shutdown:      # worker can be created+started after
+                return              # the flag flips
+            self._shutdown = True
         for w in self._workers.values():
             with w.cond:
                 if not drain:       # cancel the backlog deterministically
@@ -385,7 +696,7 @@ class ClassifierFleet:
                         for batch in t.batcher.drain():
                             for e in batch:
                                 e.item.error = "cancelled at shutdown"
-                                e.item._event.set()
+                                e.item._complete()
                 w.stop = True
                 w.cond.notify_all()
         if self._started:
@@ -397,7 +708,7 @@ class ClassifierFleet:
 
     # -- observability -------------------------------------------------------
     def stats_summary(self) -> dict:
-        """Fleet-wide + per-tenant `ServeStats` summaries."""
+        """Fleet-wide + per-tenant (+ per-replica) `ServeStats` summaries."""
         return {
             "fleet": self.stats.summary(),
             "tenants": {
@@ -405,9 +716,12 @@ class ClassifierFleet:
                     "backend": t.spec.backend,
                     "max_batch": t.spec.max_batch,
                     "deadline_ms": t.spec.deadline_ms,
+                    "max_queue": t.spec.max_queue,
                     "dataset": t.spec.dataset,
+                    "generation": t.spec.generation,
                     "pending": len(t.batcher),
-                    **t.engine.stats.summary(),
+                    "replicas": t.pool.summary(),
+                    **t.stats.summary(),
                 }
                 for name, t in sorted(self._tenants.items())
             },

@@ -1,4 +1,9 @@
-"""Batched serving engine: prefill + decode with slot-based batching.
+"""Batched LM serving engine: prefill + decode with slot-based batching.
+
+Folded into `repro.serve` when the serving layers were unified (formerly
+`repro.serving.engine`): the token engine and the sensor-stream circuit
+engine (`serve/engine.py`) now live in one stack, with
+`launch/serve.py` driving this one.
 
 Requests are bucketed by prompt length (the decode step is batch-uniform in
 position — see models/transformer.decode_step), padded into a fixed batch,

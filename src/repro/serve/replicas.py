@@ -1,0 +1,138 @@
+"""Per-tenant engine replica pools: least-loaded pick, device round-robin.
+
+One fleet tenant used to be exactly one `CircuitServingEngine`, so a hot
+tenant's dispatches serialized on a single engine no matter how many
+devices the host had.  A `ReplicaPool` runs N engines over the *same*
+compiled classifier behind the tenant's one micro-batch queue: the fleet
+scheduler acquires the least-loaded idle replica for each due batch, so
+two due batches of the same tenant overlap on different replicas (each
+pinned to its own local device via `kernels.dispatch.replica_devices` —
+the word-axis sharding in `program_eval_words` is the intra-dispatch half
+of that story, this pool is the inter-dispatch half).
+
+The pick policy is pure bookkeeping with no threads or clocks in it —
+`acquire`/`release` mutate integer counters under whatever lock the
+caller already holds (the fleet holds its scheduler condition) — which is
+what lets the hypothesis suite drive arbitrary acquire/release schedules
+through the exact production code and pin the invariants:
+
+  * **work conserving** — `acquire` refuses only when *every* replica is
+    busy; an idle replica is always handed out;
+  * **least-loaded** — among idle replicas the one with the fewest total
+    dispatched readings wins (index breaks ties), so sustained load
+    spreads over the whole pool and no replica starves;
+  * **conservation** — readings handed out equal readings accounted, and
+    `inflight` returns to zero once every dispatch is released.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.serve.engine import STATS_WINDOW, CircuitServingEngine
+
+
+@dataclass
+class EngineReplica:
+    """One engine of a tenant's pool + its scheduling counters."""
+
+    index: int
+    engine: CircuitServingEngine
+    devices: tuple | None = None
+    inflight: int = 0            # dispatches currently executing
+    n_dispatches: int = 0        # total batches handed to this replica
+    n_readings: int = 0          # total readings handed to this replica
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def busy(self) -> bool:
+        return self.inflight > 0
+
+    def summary(self) -> dict:
+        return {
+            "index": self.index,
+            "devices": [str(d) for d in (self.devices or ())],
+            "inflight": self.inflight,
+            "n_dispatches": self.n_dispatches,
+            "n_readings": self.n_readings,
+            **{k: self.engine.stats.summary()[k]
+               for k in ("busy_s", "readings_per_s", "p50_ms", "p99_ms")},
+        }
+
+
+class ReplicaPool:
+    """Least-loaded routing over N replicas of one compiled classifier."""
+
+    def __init__(self, replicas: list[EngineReplica]):
+        if not replicas:
+            raise ValueError("a replica pool needs at least one replica")
+        self.replicas = list(replicas)
+
+    @classmethod
+    def from_program(cls, program, n_replicas: int, max_batch: int,
+                     stats_window: int = STATS_WINDOW) -> "ReplicaPool":
+        """Clone `program` into `n_replicas` engines, one per device slot.
+
+        Device backends (`swar`/`pallas` and the historical `jax` alias)
+        pin replica i to local device ``i % n_devices``; the `np`
+        reference backend has no device placement, so replicas share the
+        host and only the overlap (one GIL-releasing jit-free dispatch per
+        replica thread) remains.
+        """
+        from repro.compile.program import CircuitProgram
+
+        if n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        replicas = []
+        for i in range(n_replicas):
+            devices = None
+            if program.backend != "np":
+                from repro.kernels.dispatch import replica_devices
+                devices = replica_devices(i)
+            prog = CircuitProgram(ir=program.ir, thresholds=program.thresholds,
+                                  n_classes=program.n_classes,
+                                  backend=program.backend, devices=devices)
+            replicas.append(EngineReplica(
+                index=i,
+                engine=CircuitServingEngine(prog, max_batch,
+                                            stats_window=stats_window),
+                devices=devices))
+        return cls(replicas)
+
+    @property
+    def size(self) -> int:
+        return len(self.replicas)
+
+    def idle(self) -> bool:
+        return all(r.inflight == 0 for r in self.replicas)
+
+    def has_idle(self) -> bool:
+        return any(r.inflight == 0 for r in self.replicas)
+
+    @property
+    def total_inflight(self) -> int:
+        return sum(r.inflight for r in self.replicas)
+
+    def acquire(self, n_readings: int = 0) -> EngineReplica | None:
+        """Claim the least-loaded idle replica for a batch of `n_readings`.
+
+        Returns None iff every replica is mid-dispatch (the scheduler then
+        leaves the batch queued and retries when a release notifies it).
+        Load is total readings ever handed out — not inflight count — so
+        ties from identical batch sizes rotate deterministically by index.
+        """
+        idle = [r for r in self.replicas if r.inflight == 0]
+        if not idle:
+            return None
+        pick = min(idle, key=lambda r: (r.n_readings, r.index))
+        pick.inflight += 1
+        pick.n_dispatches += 1
+        pick.n_readings += n_readings
+        return pick
+
+    def release(self, replica: EngineReplica) -> None:
+        if replica.inflight <= 0:
+            raise ValueError(f"replica {replica.index} released while idle")
+        replica.inflight -= 1
+
+    def summary(self) -> list[dict]:
+        return [r.summary() for r in self.replicas]

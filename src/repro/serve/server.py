@@ -1,0 +1,279 @@
+"""Asyncio socket front for a `ClassifierFleet`.
+
+One `FleetServer` owns a listening TCP socket and a running fleet: each
+connection is de-framed by `protocol.FrameReader`, SUBMIT messages are
+deserialized straight into `ClassifierFleet.submit`, and completions
+stream back as RESULT frames from a per-connection writer task — the
+fleet's dispatch threads hand finished requests to the event loop via
+`FleetRequest.add_done_callback` + `loop.call_soon_threadsafe`, so no
+thread ever parks on a request and a connection can pipeline thousands
+of readings.
+
+Admission-control sheds (`FleetOverloadError`) become SHED frames with
+the `retry_after_ms` hint; bad tenants / feature counts become per-request
+ERROR frames; a protocol violation gets one connection-level ERROR
+(`CONN_ERR`) and the connection is closed.  LIST/STATS/RELOAD are
+JSON-bodied admin round-trips (RELOAD runs `fleet.sync_manifest()`).
+
+With `watch_manifest=True` the server also polls the emit dir's
+`fleet.json` mtime + generation and hot-reloads added/replaced/retired
+tenants without draining anything — the network half of the manifest
+story (`compile/artifact.py` bumps the generation, the fleet reconciles).
+
+The server runs either in the foreground (`python -m repro.serve serve`)
+or on a background thread (`start_background()` — what the tests and the
+cross-process CI smoke use), in both cases on a plain `asyncio.run` loop.
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+import time
+from pathlib import Path
+
+from repro.compile.artifact import manifest_path
+from repro.serve import protocol as P
+from repro.serve.fleet import ClassifierFleet, FleetOverloadError
+
+
+class FleetServer:
+    """Socket transport + lifecycle around one running fleet."""
+
+    def __init__(self, fleet: ClassifierFleet, host: str = "127.0.0.1",
+                 port: int = 0, *, watch_manifest: bool = False,
+                 watch_interval_s: float = 0.5):
+        self.fleet = fleet
+        self.host = host
+        self.port = port
+        self.watch_manifest = watch_manifest
+        self.watch_interval_s = watch_interval_s
+        self.address: tuple[str, int] | None = None
+        self.reloads: list[dict] = []       # sync_manifest action records
+        self.n_connections = 0
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._stop: asyncio.Event | None = None
+        self._ready = threading.Event()
+        self._startup_exc: BaseException | None = None
+        self._thread: threading.Thread | None = None
+
+    # -- tenant table (LIST) -------------------------------------------------
+    def _tenant_rows(self) -> list[dict]:
+        rows = []
+        for name in self.fleet.tenants:
+            t = self.fleet._tenant(name)
+            rows.append({
+                "name": name,
+                "n_features": t.engine.n_features,
+                "n_classes": t.engine.program.n_classes,
+                "backend": t.spec.backend,
+                "deadline_ms": t.spec.deadline_ms,
+                "max_batch": t.spec.max_batch,
+                "max_queue": t.spec.max_queue,
+                "replicas": t.pool.size,
+                "dataset": t.spec.dataset,
+                "generation": t.spec.generation,
+            })
+        return rows
+
+    # -- per-connection plumbing ---------------------------------------------
+    async def _writer_loop(self, writer: asyncio.StreamWriter,
+                           out_q: asyncio.Queue) -> None:
+        closing = False
+        while not closing:
+            chunks = [await out_q.get()]
+            while True:     # coalesce whatever else is ready into one write
+                try:
+                    chunks.append(out_q.get_nowait())
+                except asyncio.QueueEmpty:
+                    break
+            if None in chunks:      # close sentinel — may arrive mid-burst
+                closing = True      # (a dispatch completing after the
+                chunks = [c for c in chunks if c is not None]   # disconnect)
+            if chunks:
+                writer.write(b"".join(chunks))
+                try:
+                    await writer.drain()
+                except (ConnectionError, OSError):
+                    return
+
+    def _completion_callback(self, req_id: int, out_q: asyncio.Queue):
+        """Bridge a fleet dispatch thread back onto this connection's loop."""
+        loop = self._loop
+
+        def on_done(freq) -> None:
+            data = (P.encode_error(req_id, freq.error)
+                    if freq.error is not None else
+                    P.encode_result(req_id, freq.label, freq.latency_ms))
+            try:
+                loop.call_soon_threadsafe(out_q.put_nowait, data)
+            except RuntimeError:
+                pass        # loop already closed; connection is gone anyway
+
+        return on_done
+
+    async def _handle_message(self, msg: P.Message,
+                              out_q: asyncio.Queue) -> None:
+        if msg.type == P.MSG_SUBMIT:
+            try:
+                req = self.fleet.submit(msg.tenant, msg.readings,
+                                        deadline_ms=msg.deadline_ms)
+            except FleetOverloadError as exc:
+                out_q.put_nowait(P.encode_shed(msg.req_id,
+                                               exc.retry_after_ms))
+                return
+            except (KeyError, ValueError, RuntimeError) as exc:
+                out_q.put_nowait(P.encode_error(msg.req_id, str(exc)))
+                return
+            req.add_done_callback(self._completion_callback(msg.req_id,
+                                                            out_q))
+        elif msg.type == P.MSG_LIST:
+            out_q.put_nowait(P.encode_tenants(self._tenant_rows()))
+        elif msg.type == P.MSG_STATS:
+            out_q.put_nowait(P.encode_stats_reply(self.fleet.stats_summary()))
+        elif msg.type == P.MSG_RELOAD:
+            actions = await asyncio.get_running_loop().run_in_executor(
+                None, self.fleet.sync_manifest)
+            self.reloads.append(actions)
+            out_q.put_nowait(P.encode_reloaded(actions))
+        else:
+            raise P.ProtocolError(f"unexpected message type {msg.type}")
+
+    async def _handle_connection(self, reader: asyncio.StreamReader,
+                                 writer: asyncio.StreamWriter) -> None:
+        out_q: asyncio.Queue = asyncio.Queue()
+        wtask = asyncio.ensure_future(self._writer_loop(writer, out_q))
+        framer = P.FrameReader()
+        self.n_connections += 1
+        greeted = False
+        try:
+            while True:
+                chunk = await reader.read(1 << 16)
+                if not chunk:
+                    break
+                for payload in framer.feed(chunk):
+                    msg = P.decode_message(payload)
+                    if not greeted:
+                        if msg.type != P.MSG_HELLO:
+                            raise P.ProtocolError(
+                                "first message must be HELLO")
+                        out_q.put_nowait(P.encode_welcome())
+                        greeted = True
+                        continue
+                    await self._handle_message(msg, out_q)
+        except P.ProtocolError as exc:
+            out_q.put_nowait(P.encode_error(P.CONN_ERR, str(exc)))
+        except (ConnectionError, OSError):
+            pass
+        finally:
+            out_q.put_nowait(None)
+            await wtask
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    # -- manifest watcher ----------------------------------------------------
+    async def _watch_manifest(self) -> None:
+        ctx = self.fleet._manifest_ctx
+        if ctx is None:
+            return
+        path: Path = manifest_path(ctx["emit_dir"])
+        loop = asyncio.get_running_loop()
+        # baseline 0, not the current mtime: an emit that landed between
+        # fleet load and watcher start must trigger the first sync (a
+        # clean first poll just runs one no-op reconcile)
+        last_mtime = 0
+        while True:
+            await asyncio.sleep(self.watch_interval_s)
+            try:
+                mtime = path.stat().st_mtime_ns
+            except OSError:
+                continue
+            if mtime == last_mtime:
+                continue
+            last_mtime = mtime
+            try:
+                actions = await loop.run_in_executor(
+                    None, self.fleet.sync_manifest)
+            except Exception as exc:    # a half-written emit: retry next poll
+                print(f"[serve] manifest sync failed: {exc}", flush=True)
+                continue
+            if any(actions[k] for k in ("added", "replaced", "retired")):
+                self.reloads.append(actions)
+                print(f"[serve] manifest gen {actions['generation']}: "
+                      f"+{actions['added']} ~{actions['replaced']} "
+                      f"-{actions['retired']}", flush=True)
+
+    # -- lifecycle -----------------------------------------------------------
+    async def serve(self) -> None:
+        """Bind, announce readiness, and serve until `stop()` (or cancel)."""
+        self._loop = asyncio.get_running_loop()
+        self._stop = asyncio.Event()
+        try:
+            server = await asyncio.start_server(self._handle_connection,
+                                                self.host, self.port)
+        except BaseException as exc:
+            self._startup_exc = exc
+            self._ready.set()
+            raise
+        self.address = server.sockets[0].getsockname()[:2]
+        watcher = (asyncio.ensure_future(self._watch_manifest())
+                   if self.watch_manifest else None)
+        self._ready.set()
+        try:
+            async with server:
+                await self._stop.wait()
+        finally:
+            if watcher is not None:
+                watcher.cancel()
+
+    def start_background(self) -> tuple[str, int]:
+        """Run the server on a daemon thread; returns the bound address."""
+        self._thread = threading.Thread(
+            target=lambda: asyncio.run(self.serve()),
+            name="fleet-server", daemon=True)
+        self._thread.start()
+        if not self._ready.wait(30.0):
+            raise TimeoutError("fleet server did not come up within 30s")
+        if self._startup_exc is not None:
+            raise self._startup_exc
+        return self.address
+
+    def stop(self, timeout: float = 30.0) -> None:
+        """Stop serving (background-thread mode); the fleet stays up."""
+        if self._loop is None or self._stop is None:
+            return
+        try:
+            self._loop.call_soon_threadsafe(self._stop.set)
+        except RuntimeError:
+            return                           # loop already gone
+        if self._thread is not None:
+            self._thread.join(timeout)
+            if self._thread.is_alive():
+                raise TimeoutError("fleet server did not stop "
+                                   f"within {timeout}s")
+
+
+def serve_forever(fleet: ClassifierFleet, host: str, port: int, *,
+                  watch_manifest: bool = False) -> None:
+    """Foreground entry point for the CLI: serve until KeyboardInterrupt."""
+    server = FleetServer(fleet, host, port, watch_manifest=watch_manifest)
+
+    async def _main() -> None:
+        task = asyncio.ensure_future(server.serve())
+        while server.address is None and not task.done():
+            await asyncio.sleep(0.01)
+        if server.address is not None:
+            h, p = server.address
+            print(f"[serve] fleet of {len(fleet.tenants)} tenant(s) "
+                  f"listening on {h}:{p} "
+                  f"(watch={'on' if watch_manifest else 'off'})", flush=True)
+        await task
+
+    try:
+        asyncio.run(_main())
+    except KeyboardInterrupt:
+        print("[serve] interrupted; draining fleet", flush=True)
+    finally:
+        fleet.shutdown(drain=True)

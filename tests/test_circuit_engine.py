@@ -5,7 +5,7 @@ import pytest
 
 from repro.core import tnn as T
 from repro.compile import CircuitProgram, lower_classifier
-from repro.serving.circuit_engine import CircuitServingEngine
+from repro.serve.engine import CircuitServingEngine
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,350 @@
+"""Replica pools, manifest hot-reload, and artifact-bundle integrity.
+
+  * **property** — the least-loaded replica policy is pure counter
+    bookkeeping (`ReplicaPool.acquire`/`release`), so hypothesis drives
+    arbitrary acquire/release schedules through the production code:
+    work conserving (an idle replica is always handed out, refusal only
+    when all are busy), conservation (readings handed out are accounted
+    exactly once; inflight returns to zero), and no starvation (under
+    sustained balanced load every replica serves within one batch of its
+    fair share).
+  * **hot reload** — `sync_manifest()` add/replace/retire against a live
+    fleet: queued requests survive a replace with their deadline clocks
+    intact, in-flight batches finish on the old engines, retired tenants
+    drain before vanishing.
+  * **integrity** — `save_program` bundles carry a sha256 sidecar;
+    truncation or a bit flip turns `load_program` into a clear
+    `ArtifactCorruptError` (mirroring checkpoint/manager.py), and the
+    manifest generation counter increments per register so a watcher can
+    tell re-emits from no-ops.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.compile import (ArtifactCorruptError, CircuitProgram,
+                           load_manifest_doc, load_program, lower_classifier,
+                           save_program, verify_program_bundle)
+from repro.compile.verilog import write_artifacts
+from repro.core import tnn as T
+from repro.serve import ClassifierFleet, ReplicaPool, TenantSpec
+
+N_EXAMPLES = int(os.environ.get("REPRO_CONFORMANCE_EXAMPLES", "20"))
+
+
+def _toy_classifier(F=9, H=5, Cc=4, seed=7):
+    rng = np.random.default_rng(seed)
+    w1t = rng.integers(-1, 2, size=(F, H)).astype(np.int8)
+    w2t = T.balance_zero_counts(rng.normal(size=(H, Cc)), 1 / 3)
+    tnn = T.TrainedTNN(w1t=w1t, w2t=w2t, thresholds=np.full(F, 0.5),
+                       train_acc=0.0, test_acc=0.0, name=f"toy{seed}")
+    return lower_classifier(tnn, *T.exact_netlists(tnn))
+
+
+def _pool(n: int, seed=7) -> ReplicaPool:
+    prog = CircuitProgram.from_classifier(_toy_classifier(seed=seed))
+    return ReplicaPool.from_program(prog, n, max_batch=32)
+
+
+# ---------------------------------------------------------------------------
+# Replica pool: the pick policy as pure logic
+# ---------------------------------------------------------------------------
+def test_pool_routes_least_loaded_and_refuses_only_when_saturated():
+    pool = _pool(3)
+    a = pool.acquire(10)
+    b = pool.acquire(10)
+    c = pool.acquire(10)
+    assert {r.index for r in (a, b, c)} == {0, 1, 2}
+    assert pool.acquire(1) is None          # saturated: refuse, don't stack
+    pool.release(b)
+    d = pool.acquire(4)                     # the only idle replica wins
+    assert d is b
+    pool.release(a), pool.release(c), pool.release(d)
+    # now idle: least total readings (b: 14? no — b got 10+4) → a or c (10)
+    e = pool.acquire(1)
+    assert e.index == min(r.index for r in (a, c))
+    pool.release(e)
+    with pytest.raises(ValueError):
+        pool.release(e)                     # double release
+
+
+def test_pool_replicas_pin_round_robin_devices():
+    import jax
+
+    pool = _pool(4)
+    n_dev = len(jax.local_devices())
+    for r in pool.replicas:
+        assert r.devices is not None and len(r.devices) == 1
+        assert r.devices[0] == jax.local_devices()[r.index % n_dev]
+    # np pools have no device placement
+    prog = CircuitProgram.from_classifier(_toy_classifier(), backend="np")
+    for r in ReplicaPool.from_program(prog, 2, max_batch=8).replicas:
+        assert r.devices is None
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+
+    @settings(max_examples=N_EXAMPLES, deadline=None)
+    @given(st.integers(1, 5),
+           st.lists(st.one_of(st.integers(1, 64),      # acquire(n readings)
+                              st.just("release")),     # release oldest held
+                    max_size=80))
+    def test_pool_work_conserving_and_balanced(n_replicas, ops):
+        """Arbitrary acquire/release schedules: refusal iff saturated,
+        accounting conserved, and—because ties rotate by index—no idle
+        replica ever lags the pool by more than one batch of readings."""
+        pool = _pool(n_replicas)
+        held = []
+        handed = n_acquired = 0
+        for op in ops:
+            if op == "release":
+                if held:
+                    pool.release(held.pop(0))
+            else:
+                rep = pool.acquire(op)
+                if rep is None:
+                    # work conserving: refusal only when all busy
+                    assert all(r.inflight > 0 for r in pool.replicas)
+                    continue
+                # least-loaded: no *idle* replica had strictly less load
+                idle_loads = [r.n_readings for r in pool.replicas
+                              if r.inflight == 0]
+                if idle_loads:
+                    assert rep.n_readings - op <= min(idle_loads)
+                handed += op
+                n_acquired += 1
+                held.append(rep)
+        for rep in held:
+            pool.release(rep)
+        assert pool.idle()
+        assert sum(r.n_readings for r in pool.replicas) == handed
+        assert sum(r.n_dispatches for r in pool.replicas) == n_acquired
+
+    @settings(max_examples=N_EXAMPLES, deadline=None)
+    @given(st.integers(1, 5), st.integers(1, 60))
+    def test_pool_no_starvation_under_sequential_load(n_replicas, rounds):
+        """Sequential unit batches with immediate release: every replica's
+        share is within one dispatch of every other's — nobody starves."""
+        pool = _pool(n_replicas)
+        for _ in range(rounds):
+            rep = pool.acquire(1)
+            pool.release(rep)
+        counts = [r.n_dispatches for r in pool.replicas]
+        assert sum(counts) == rounds
+        assert max(counts) - min(counts) <= 1
+
+
+def test_fleet_spreads_batches_over_replicas():
+    """Through the real scheduler: a burst of batches lands on every
+    replica of the pool, not just replica 0."""
+    prog = CircuitProgram.from_classifier(_toy_classifier())
+    spec = TenantSpec(name="hot", program=prog, backend="swar", max_batch=8,
+                      deadline_ms=60_000.0, replicas=3)
+    fleet = ClassifierFleet([spec], warmup=False)
+    x = np.random.default_rng(0).random((240, 9))
+    try:
+        reqs = [fleet.submit("hot", row) for row in x]
+        fleet.flush(timeout=60.0)
+        assert all(r.done() for r in reqs)
+        counts = [rep.n_dispatches
+                  for rep in fleet._tenant("hot").pool.replicas]
+        assert sum(counts) == 240 // 8
+        assert all(c > 0 for c in counts), counts
+        ref = prog.predict(x)
+        assert [r.label for r in reqs] == [int(v) for v in ref]
+    finally:
+        fleet.shutdown(drain=True)
+
+
+# ---------------------------------------------------------------------------
+# Hot reload: add / replace / retire on a live fleet
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def emit_dir(tmp_path):
+    write_artifacts(_toy_classifier(seed=7), tmp_path, base="alpha")
+    write_artifacts(_toy_classifier(F=6, H=4, Cc=3, seed=11), tmp_path,
+                    base="beta")
+    return tmp_path
+
+
+def test_sync_manifest_add_replace_retire_without_dropping_requests(
+        emit_dir):
+    # max_batch > the queued burst: nothing is due before the reload, so
+    # every queued request must be served by the *successor* program
+    fleet = ClassifierFleet.from_emit_dir(emit_dir, backends="swar",
+                                          max_batch=64, deadline_ms=60_000.0)
+    try:
+        assert fleet.tenants == ["alpha", "beta"]
+        gen0 = fleet._tenant("alpha").spec.generation
+
+        # a no-op sync moves nothing
+        actions = fleet.sync_manifest()
+        assert actions["added"] == actions["replaced"] == \
+            actions["retired"] == []
+
+        # queue work against alpha, then replace it (same features, new
+        # program) + add gamma + retire beta — all in one manifest move
+        x = np.random.default_rng(1).random((24, 9))
+        queued = [fleet.submit("alpha", row) for row in x]
+        new_cc = _toy_classifier(seed=99)
+        write_artifacts(new_cc, emit_dir, base="alpha")
+        write_artifacts(_toy_classifier(F=12, H=6, Cc=5, seed=13), emit_dir,
+                        base="gamma")
+        import json
+        mpath = emit_dir / "fleet.json"
+        doc = json.loads(mpath.read_text())
+        doc["tenants"] = [t for t in doc["tenants"] if t["name"] != "beta"]
+        mpath.write_text(json.dumps(doc))
+
+        actions = fleet.sync_manifest()
+        assert actions == {"added": ["gamma"], "replaced": ["alpha"],
+                           "retired": ["beta"],
+                           "generation": actions["generation"]}
+        assert fleet.tenants == ["alpha", "gamma"]
+        assert fleet._tenant("alpha").spec.generation > gen0
+
+        # queued alpha requests transferred to the successor and serve
+        # with the *new* program — nothing dropped, nothing errored
+        fleet.flush(timeout=60.0)
+        new_ref = CircuitProgram.from_classifier(new_cc).predict(x)
+        assert all(r.done() and r.error is None for r in queued)
+        assert [r.label for r in queued] == [int(v) for v in new_ref]
+
+        # the new tenant serves; the retired one refuses
+        req = fleet.submit("gamma", np.zeros(12), deadline_ms=200.0)
+        assert req.result(timeout=30.0) is not None
+        with pytest.raises(KeyError):
+            fleet.submit("beta", np.zeros(6))
+        assert fleet.errors == []
+    finally:
+        fleet.shutdown(drain=True)
+
+
+def test_retire_drains_backlog_before_vanishing(emit_dir):
+    fleet = ClassifierFleet.from_emit_dir(emit_dir, backends="swar",
+                                          max_batch=64,
+                                          deadline_ms=60_000.0)
+    try:
+        x = np.random.default_rng(2).random((20, 6))
+        reqs = [fleet.submit("beta", row) for row in x]
+        fleet.retire_tenant("beta", timeout=30.0)
+        assert all(r.done() and r.error is None for r in reqs)
+        prog = fleet and reqs[0].label is not None
+        assert prog
+        with pytest.raises(KeyError):
+            fleet.submit("beta", x[0])
+        assert fleet.tenants == ["alpha"]
+    finally:
+        fleet.shutdown(drain=True)
+
+
+def test_replace_with_incompatible_features_fails_queued_loudly(emit_dir):
+    fleet = ClassifierFleet.from_emit_dir(emit_dir, backends="swar",
+                                          max_batch=64, deadline_ms=60_000.0)
+    try:
+        x = np.random.default_rng(3).random((4, 9))
+        queued = [fleet.submit("alpha", row) for row in x]
+        # re-emit alpha with a different feature count
+        write_artifacts(_toy_classifier(F=5, H=3, Cc=2, seed=21), emit_dir,
+                        base="alpha")
+        fleet.sync_manifest()
+        for r in queued:
+            assert r.done()
+            with pytest.raises(RuntimeError, match="incompatible"):
+                r.result(timeout=5.0)
+        # the successor serves the new shape
+        req = fleet.submit("alpha", np.zeros(5), deadline_ms=200.0)
+        assert req.result(timeout=30.0) is not None
+    finally:
+        fleet.shutdown(drain=True)
+
+
+def test_add_tenant_on_new_backend_spawns_worker(emit_dir):
+    fleet = ClassifierFleet.from_emit_dir(emit_dir, backends="swar",
+                                          tenants=["alpha"],
+                                          max_batch=32, deadline_ms=500.0)
+    try:
+        assert set(fleet._workers) == {"swar"}
+        prog = CircuitProgram.from_classifier(_toy_classifier(seed=31),
+                                              backend="np")
+        fleet.add_tenant(TenantSpec(name="cpu", program=prog, backend="np",
+                                    max_batch=16, deadline_ms=500.0))
+        assert set(fleet._workers) == {"np", "swar"}
+        req = fleet.submit("cpu", np.zeros(9), deadline_ms=200.0)
+        assert req.result(timeout=30.0) is not None
+    finally:
+        fleet.shutdown(drain=True)
+
+
+# ---------------------------------------------------------------------------
+# Bundle integrity + manifest generation counter
+# ---------------------------------------------------------------------------
+def test_manifest_generation_increments_per_register(tmp_path):
+    write_artifacts(_toy_classifier(seed=7), tmp_path, base="a")
+    doc = load_manifest_doc(tmp_path)
+    assert doc["generation"] == 1
+    assert doc["tenants"][0]["generation"] == 1
+    write_artifacts(_toy_classifier(seed=8), tmp_path, base="b")
+    write_artifacts(_toy_classifier(seed=9), tmp_path, base="a")  # re-emit
+    doc = load_manifest_doc(tmp_path)
+    assert doc["generation"] == 3
+    gens = {t["name"]: t["generation"] for t in doc["tenants"]}
+    assert gens == {"a": 3, "b": 2}
+    assert all("sha256" in t and t["sha256"] for t in doc["tenants"])
+
+
+def test_program_bundle_round_trips_with_checksum(tmp_path):
+    cc = _toy_classifier(seed=7)
+    path = tmp_path / "p.npz"
+    save_program(cc, path)
+    assert (tmp_path / "p.npz.sha256").exists()
+    assert verify_program_bundle(path)
+    prog = load_program(path)
+    x = np.random.default_rng(0).random((32, 9))
+    np.testing.assert_array_equal(
+        prog.predict(x), CircuitProgram.from_classifier(cc).predict(x))
+
+
+def test_truncated_bundle_fails_with_clear_error(tmp_path):
+    cc = _toy_classifier(seed=7)
+    path = tmp_path / "p.npz"
+    save_program(cc, path)
+    blob = path.read_bytes()
+    path.write_bytes(blob[: len(blob) // 2])
+    with pytest.raises(ArtifactCorruptError, match="checksum"):
+        load_program(path)
+
+
+def test_bitflipped_bundle_fails_with_clear_error(tmp_path):
+    cc = _toy_classifier(seed=7)
+    path = tmp_path / "p.npz"
+    save_program(cc, path)
+    blob = bytearray(path.read_bytes())
+    blob[len(blob) // 3] ^= 0x40
+    path.write_bytes(bytes(blob))
+    with pytest.raises(ArtifactCorruptError, match="checksum"):
+        load_program(path)
+
+
+def test_missing_bundle_and_legacy_bundle_paths(tmp_path):
+    with pytest.raises(ArtifactCorruptError, match="does not exist"):
+        load_program(tmp_path / "nope.npz")
+    # a pre-checksum bundle (no sidecar) still loads...
+    cc = _toy_classifier(seed=7)
+    path = tmp_path / "legacy.npz"
+    save_program(cc, path)
+    (tmp_path / "legacy.npz.sha256").unlink()
+    assert verify_program_bundle(path) is None
+    assert load_program(path).predict(np.zeros((1, 9))).shape == (1,)
+    # ...but a *corrupt* legacy bundle still fails loudly, not deep in numpy
+    blob = path.read_bytes()
+    path.write_bytes(blob[: len(blob) // 2])
+    with pytest.raises(ArtifactCorruptError, match="cannot be decoded"):
+        load_program(path)

@@ -18,7 +18,7 @@ from repro.data.tokens import TokenPipeline, TokenPipelineConfig
 from repro.models.params import init_params
 from repro.optim import adamw
 from repro.optim.adamw import AdamWConfig
-from repro.serving.engine import Request, ServingEngine
+from repro.serve.lm_engine import Request, ServingEngine
 from repro.train.loop import Trainer, TrainLoopConfig
 
 
