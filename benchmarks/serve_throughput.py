@@ -14,10 +14,23 @@ fleet-wide rows (readings/s, request p50/p99, SLO misses) under
 `bench == "serve_fleet"`.
 
 Socket section: the same 2-tenant replay, but every reading crosses the
-length-prefixed TCP transport (`serve/server.py` + `serve/client.py`) —
-rows land under `bench == "serve_socket"`, so the in-process vs
-cross-process overhead (readings/s and request p99) is one diff away.
-Writes BENCH_serve.json.
+length-prefixed TCP transport (`serve/server.py` + `serve/client.py`).
+`bench == "serve_socket"` rows ride the protocol-v2 batched ingest path
+(`SUBMIT_BATCH` frames, 256 readings per frame); the classic one-frame-
+per-reading path is kept as `bench == "serve_socket_unary"` so the
+batching win stays one diff away.
+
+Swarm section (`bench == "serve_swarm"`): the many-clients story.  A TCP
+soak opens thousands of short-lived connections (10k full, scaled down
+under QUICK) against a sharded `SO_REUSEPORT` server, each handshaking
+and pushing one batch frame — connection churn + ingest concurrency, not
+single-pipe throughput.  A UDP firehose row blasts fire-and-forget
+`SUBMIT_BATCH` datagrams at the connectionless ingest endpoint and
+reports the received fraction (best-effort delivery, measured not
+assumed).  Writes BENCH_serve.json.
+
+Any row with `n_slo_miss > 0` triggers a loud stderr warning — a
+committed artifact should not quietly carry a latency regression.
 
 Run directly to (re)generate the committed artifact:
 
@@ -25,8 +38,11 @@ Run directly to (re)generate the committed artifact:
 """
 from __future__ import annotations
 
+import asyncio
 import json
+import struct
 import sys
+import time
 
 import numpy as np
 
@@ -39,6 +55,12 @@ from repro.serve.engine import CircuitServingEngine
 BATCH_SIZES = (1, 64, 1024)
 FLEET_DATASETS = ("cardio", "breast_cancer")
 FLEET_DEADLINE_MS = 250.0   # above the full-speed replay's queueing delay
+SOCKET_BATCH = 256          # readings per SUBMIT_BATCH frame (v2 path)
+SWARM_CONNS = 200 if QUICK else 10_000
+SWARM_CONCURRENCY = 128 if QUICK else 1000  # open sockets at once (fd cap)
+SWARM_READINGS_PER_CONN = 16
+SWARM_DEADLINE_MS = 2000.0  # generous: soak measures churn, not latency
+UDP_READINGS = 4096 if QUICK else 65_536
 
 
 def _stream(x_test: np.ndarray, n: int, seed: int = 0) -> np.ndarray:
@@ -78,28 +100,44 @@ def _fleet_specs_and_streams(n_readings: int):
     return specs, streams
 
 
-def _report_rows(bench: str, report: dict) -> list[dict]:
+def _report_rows(bench: str, report: dict, deadline_ms: float,
+                 **extra) -> list[dict]:
     rows = []
     for name, t in report["tenants"].items():
         rows.append({"bench": bench, "tenant": name,
                      "backend": t["backend"],
-                     "deadline_ms": FLEET_DEADLINE_MS,
+                     "deadline_ms": deadline_ms,
                      "readings": t["n_readings"],
                      "readings_per_s": t["readings_per_s"],
                      "req_p50_ms": t["req_p50_ms"],
                      "req_p99_ms": t["req_p99_ms"],
                      "n_slo_miss": t["n_slo_miss"],
-                     "labels_match_offline": t["labels_match_offline"]})
+                     "labels_match_offline": t["labels_match_offline"],
+                     **extra})
     f = report["fleet"]
     rows.append({"bench": bench, "tenant": "__fleet__",
-                 "backend": "swar", "deadline_ms": FLEET_DEADLINE_MS,
+                 "backend": "swar", "deadline_ms": deadline_ms,
                  "readings": f["n_readings"],
                  "readings_per_s": f["readings_per_s"],
                  "req_p50_ms": f["req_p50_ms"],
                  "req_p99_ms": f["req_p99_ms"],
                  "n_slo_miss": f["n_slo_miss"],
-                 "labels_match_offline": report["labels_match_offline"]})
+                 "labels_match_offline": report["labels_match_offline"],
+                 **extra})
     return rows
+
+
+def _warn_slo_misses(rows: list[dict]) -> None:
+    """Satellite guard: a committed artifact must not quietly carry SLO
+    misses — shout about every row that does."""
+    for r in rows:
+        if r.get("n_slo_miss", 0):
+            print(f"\n{'!' * 72}\n"
+                  f"!!! WARNING: {r['bench']} tenant={r['tenant']} recorded "
+                  f"{r['n_slo_miss']} SLO misses\n"
+                  f"!!! (deadline_ms={r.get('deadline_ms')}) — this "
+                  f"artifact carries a latency regression\n"
+                  f"{'!' * 72}\n", file=sys.stderr)
 
 
 def _measure_fleet(n_readings: int) -> list[dict]:
@@ -113,11 +151,12 @@ def _measure_fleet(n_readings: int) -> list[dict]:
         report = replay_fleet(fleet, streams, producers=4, timeout=600)
     finally:
         fleet.shutdown(drain=True)
-    return _report_rows("serve_fleet", report)
+    return _report_rows("serve_fleet", report, FLEET_DEADLINE_MS)
 
 
-def _measure_socket(n_readings: int) -> list[dict]:
-    """The same 2-tenant replay, every reading over the TCP transport."""
+def _measure_socket(bench: str, n_readings: int, batch: int) -> list[dict]:
+    """The same 2-tenant replay, every reading over the TCP transport —
+    `batch` readings per SUBMIT_BATCH frame (1 = classic unary frames)."""
     from repro.serve import ClassifierFleet
     from repro.serve.__main__ import replay_client
     from repro.serve.client import FleetClient
@@ -130,11 +169,135 @@ def _measure_socket(n_readings: int) -> list[dict]:
         host, port = server.start_background()
         with FleetClient(host, port) as client:
             report = replay_client(client, fleet, streams, producers=4,
-                                   timeout=600)
+                                   timeout=600, batch=batch)
     finally:
         server.stop()
         fleet.shutdown(drain=True)
-    return _report_rows("serve_socket", report)
+    return _report_rows(bench, report, FLEET_DEADLINE_MS, batch=batch)
+
+
+async def _swarm_read_frame(reader: asyncio.StreamReader) -> bytes:
+    (ln,) = struct.unpack("!I", await reader.readexactly(4))
+    return await reader.readexactly(ln)
+
+
+async def _swarm_soak(host: str, port: int, tenant: str, x: np.ndarray,
+                      ref: np.ndarray, n_conns: int,
+                      per_conn: int) -> dict:
+    """`n_conns` short-lived connections, each handshaking and pushing one
+    `per_conn`-reading batch frame, at most SWARM_CONCURRENCY sockets open
+    at once (one process holds both ends on loopback — stay under the fd
+    cap).  Labels are checked against the offline reference per
+    connection, so the soak doubles as a correctness sweep."""
+    from repro.serve import protocol as P
+
+    sem = asyncio.Semaphore(SWARM_CONCURRENCY)
+    n_bad = 0
+
+    async def one_conn(c: int) -> int:
+        nonlocal n_bad
+        s = (c * per_conn) % max(1, x.shape[0] - per_conn)
+        rows, want = x[s:s + per_conn], ref[s:s + per_conn]
+        async with sem:
+            reader, writer = await asyncio.open_connection(host, port)
+            try:
+                writer.write(P.encode_hello(P.PROTOCOL_VERSION))
+                msg = P.decode_message(await _swarm_read_frame(reader))
+                assert msg.type == P.MSG_WELCOME and msg.version >= 2
+                rids = np.arange(1, per_conn + 1, dtype=np.uint64)
+                writer.write(P.encode_submit_batch(rids, tenant, rows))
+                await writer.drain()
+                got = {}
+                while len(got) < per_conn:
+                    msg = P.decode_message(await _swarm_read_frame(reader))
+                    if msg.type == P.MSG_RESULT_BATCH:
+                        for rid, lab in zip(msg.req_ids, msg.labels):
+                            got[int(rid)] = int(lab)
+                    elif msg.type == P.MSG_RESULT:
+                        got[msg.req_id] = msg.label
+                    else:
+                        raise RuntimeError(f"soak conn {c}: unexpected "
+                                           f"message type {msg.type}")
+                labels = np.array([got[int(r)] for r in rids])
+                if not np.array_equal(labels, want):
+                    n_bad += 1
+                return per_conn
+            finally:
+                writer.close()
+                await writer.wait_closed()
+
+    t0 = time.perf_counter()
+    done = await asyncio.gather(*(one_conn(c) for c in range(n_conns)))
+    dt = time.perf_counter() - t0
+    return {"n_connections": n_conns, "readings": int(sum(done)),
+            "readings_per_s": round(sum(done) / dt, 1),
+            "conns_per_s": round(n_conns / dt, 1),
+            "labels_match_offline": n_bad == 0}
+
+
+def _measure_swarm() -> list[dict]:
+    """serve_swarm rows: the 10k-connection TCP soak against a sharded
+    server, then the UDP firehose with its measured received fraction."""
+    from repro.serve import ClassifierFleet
+    from repro.serve.client import FleetClient, UdpSwarmSender
+    from repro.serve.server import FleetServer
+
+    specs, streams = _fleet_specs_and_streams(
+        SWARM_READINGS_PER_CONN * 64)
+    for s in specs:
+        s.deadline_ms = SWARM_DEADLINE_MS
+    tenant = specs[0].name
+    x = streams[tenant]
+    ref = specs[0].program.predict(x).astype(np.int32)
+
+    fleet = ClassifierFleet(specs)
+    server = FleetServer(fleet, shards=2, udp_port=0)
+    rows = []
+    try:
+        host, port = server.start_background()
+        soak = asyncio.run(_swarm_soak(host, port, tenant, x, ref,
+                                       SWARM_CONNS,
+                                       SWARM_READINGS_PER_CONN))
+        with FleetClient(host, port) as admin:
+            slo = admin.stats()["fleet"].get("n_slo_miss", 0)
+        rows.append({"bench": "serve_swarm", "tenant": tenant,
+                     "transport": "tcp_soak", "backend": "swar",
+                     "deadline_ms": SWARM_DEADLINE_MS,
+                     "n_slo_miss": int(slo), "shards": 2, **soak})
+
+        with FleetClient(host, port) as admin:
+            before = admin.stats()["transport"]["udp"]
+            sender = UdpSwarmSender(host, server.udp_address[1])
+            t0 = time.perf_counter()
+            sent = 0
+            for s in range(0, UDP_READINGS, SOCKET_BATCH):
+                idx = np.arange(s, min(s + SOCKET_BATCH,
+                                       UDP_READINGS)) % x.shape[0]
+                sent += sender.send_many(tenant, x[idx])
+            send_s = time.perf_counter() - t0
+            sender.close()
+            deadline, last = time.monotonic() + 60, -1
+            while time.monotonic() < deadline:
+                udp = admin.stats()["transport"]["udp"]
+                got = udp["n_readings"] - before["n_readings"]
+                if got >= sent or (got == last and got > 0):
+                    break
+                last = got
+                time.sleep(0.25)
+            udp = admin.stats()["transport"]["udp"]
+        received = udp["n_readings"] - before["n_readings"]
+        rows.append({"bench": "serve_swarm", "tenant": tenant,
+                     "transport": "udp_firehose", "backend": "swar",
+                     "deadline_ms": SWARM_DEADLINE_MS,
+                     "readings_sent": int(sent),
+                     "readings_received": int(received),
+                     "received_frac": round(received / max(1, sent), 4),
+                     "send_rate_per_s": round(sent / max(send_s, 1e-9), 1),
+                     "n_errors": udp["n_errors"] - before["n_errors"]})
+    finally:
+        server.stop()
+        fleet.shutdown(drain=True)
+    return rows
 
 
 def run() -> list[dict]:
@@ -156,8 +319,13 @@ def run() -> list[dict]:
                  "gates": cc.ir.n_gates, "depth": cc.ir.depth,
                  **_measure(prog_np, ds.x_test, 1024, n)})
 
-    rows.extend(_measure_fleet(2048 if QUICK else 16384))
-    rows.extend(_measure_socket(2048 if QUICK else 16384))
+    n_fleet = 2048 if QUICK else 16384
+    rows.extend(_measure_fleet(n_fleet))
+    rows.extend(_measure_socket("serve_socket", n_fleet, SOCKET_BATCH))
+    rows.extend(_measure_socket("serve_socket_unary",
+                                512 if QUICK else 4096, 1))
+    rows.extend(_measure_swarm())
+    _warn_slo_misses(rows)
 
     out = sys.argv[1] if (__name__ == "__main__" and len(sys.argv) > 1) \
         else "BENCH_serve.json"

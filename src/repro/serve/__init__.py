@@ -6,8 +6,10 @@ One package now holds every serving layer: the batched execution engine
 (`replicas.py`), the fleet router with deadline-driven micro-batching,
 queue-depth **admission control** and manifest **hot-reload**
 (`fleet.py` + `batcher.py`), and a real network front: a length-prefixed
-binary wire protocol (`protocol.py`), an asyncio socket server
-(`server.py`) and a blocking client library (`client.py`).
+binary wire protocol with version-negotiated batch frames
+(`protocol.py`), a sharded asyncio socket server with optional
+connectionless UDP ingest (`server.py`) and a blocking client library
+with batched submits and client-side coalescing (`client.py`).
 
 In-process:
 
@@ -16,17 +18,20 @@ In-process:
                                           replicas=2, max_queue=2048)
     req = fleet.submit("tnn_cardio", reading)      # returns immediately
     label = req.result(timeout=1.0)                # blocks until served
+    reqs, shed, retry_ms = fleet.submit_many("tnn_cardio", plane)  # batched
     fleet.shutdown(drain=True)
 
 Over the wire:
 
-    python -m repro.serve serve --emit-dir artifacts --port 7341   # server
+    python -m repro.serve serve --emit-dir artifacts --port 7341 \
+        --shards 2 --udp-port 7342                                 # server
     python -m repro.serve replay --emit-dir artifacts \
-        --connect 127.0.0.1:7341                                   # client
+        --connect 127.0.0.1:7341 --batch 256                       # client
 
     from repro.serve.client import FleetClient
     with FleetClient("127.0.0.1", 7341) as c:
         label = c.submit("tnn_cardio", reading).result(timeout=1.0)
+        labels = c.classify("tnn_cardio", plane)   # SUBMIT_BATCH frames
 """
 from repro.serve.batcher import MicroBatcher, QueuedItem
 from repro.serve.engine import (

@@ -1,8 +1,11 @@
 """Fleet CLI — serve an emitted fleet over a socket, or replay against it.
 
-    # stand the emit dir up as a network service (hot-reloads fleet.json)
+    # stand the emit dir up as a network service (hot-reloads fleet.json);
+    # --shards N runs N SO_REUSEPORT accept loops, --udp-port adds the
+    # connectionless fire-and-forget ingest endpoint
     PYTHONPATH=src python -m repro.serve serve --emit-dir artifacts \
-        --port 7341 --replicas 2 --max-queue 4096 --watch
+        --port 7341 --shards 2 --udp-port 7342 --replicas 2 \
+        --max-queue 4096 --watch
 
     # replay held-out sensor streams in-process (the classic mode; the
     # bare-flag legacy form `python -m repro.serve --emit-dir ...` still
@@ -10,9 +13,15 @@
     PYTHONPATH=src python -m repro.serve replay --emit-dir artifacts \
         --replay all --producers 4 --readings 1024 --deadline-ms 100
 
-    # same replay, but through the wire against a running server
+    # same replay, but through the wire against a running server;
+    # --batch N ships N readings per SUBMIT_BATCH frame (protocol v2)
     PYTHONPATH=src python -m repro.serve replay --emit-dir artifacts \
-        --connect 127.0.0.1:7341 --replay all
+        --connect 127.0.0.1:7341 --replay all --batch 256
+
+    # blast readings at the UDP ingest port, then bound the loss via the
+    # server's TCP STATS counters
+    PYTHONPATH=src python -m repro.serve firehose --emit-dir artifacts \
+        --connect 127.0.0.1:7341 --udp 127.0.0.1:7342 --readings 4096
 
 Both replay modes load every tenant the emit dir's `fleet.json` manifest
 names (emitted by `repro.evolve --emit-dir` or `python -m
@@ -38,7 +47,7 @@ import numpy as np
 from repro.serve.fleet import (DEFAULT_DEADLINE_MS, DEFAULT_MAX_BATCH,
                                FLEET_BACKENDS, ClassifierFleet)
 
-SUBCOMMANDS = ("serve", "replay")
+SUBCOMMANDS = ("serve", "replay", "firehose")
 
 
 def _add_fleet_args(ap: argparse.ArgumentParser) -> None:
@@ -73,6 +82,12 @@ def _parse_args(argv=None) -> argparse.Namespace:
     _add_fleet_args(sp)
     sp.add_argument("--host", default="127.0.0.1")
     sp.add_argument("--port", type=int, default=7341)
+    sp.add_argument("--shards", type=int, default=1,
+                    help="SO_REUSEPORT accept loops (threads); connections "
+                         "are kernel-balanced across them")
+    sp.add_argument("--udp-port", type=int, default=None,
+                    help="also listen for fire-and-forget SUBMIT[_BATCH] "
+                         "datagrams on this UDP port")
     sp.add_argument("--watch", action="store_true",
                     help="watch fleet.json and hot-reload tenants")
 
@@ -88,6 +103,10 @@ def _parse_args(argv=None) -> argparse.Namespace:
                     help="concurrent submitter threads")
     rp.add_argument("--readings", type=int, default=1024,
                     help="readings replayed per tenant")
+    rp.add_argument("--batch", type=int, default=1,
+                    help="readings per SUBMIT_BATCH frame when replaying "
+                         "through --connect (1 = classic per-reading "
+                         "SUBMIT frames)")
     rp.add_argument("--seed", type=int, default=0)
     rp.add_argument("--timeout", type=float, default=120.0,
                     help="overall completion timeout (seconds)")
@@ -96,6 +115,29 @@ def _parse_args(argv=None) -> argparse.Namespace:
                          "(mismatches and errors always exit nonzero)")
     rp.add_argument("--out", default=None,
                     help="write the replay report as JSON here")
+
+    fp = sub.add_parser("firehose", help="blast the UDP ingest endpoint and "
+                                         "bound the loss via TCP stats")
+    _add_fleet_args(fp)
+    fp.add_argument("--connect", required=True, metavar="HOST:PORT",
+                    help="the server's TCP address (for STATS counters)")
+    fp.add_argument("--udp", required=True, metavar="HOST:PORT",
+                    help="the server's UDP ingest address")
+    fp.add_argument("--replay", default="all",
+                    help="comma list of tenant or dataset names")
+    fp.add_argument("--readings", type=int, default=4096,
+                    help="readings blasted per tenant")
+    fp.add_argument("--batch", type=int, default=64,
+                    help="readings per SUBMIT_BATCH datagram")
+    fp.add_argument("--seed", type=int, default=0)
+    fp.add_argument("--timeout", type=float, default=30.0,
+                    help="how long to wait for the received count to settle")
+    fp.add_argument("--min-frac", type=float, default=0.5,
+                    help="exit nonzero when fewer than this fraction of "
+                         "blasted readings reached the server (UDP is "
+                         "best-effort; loopback should deliver ~all)")
+    fp.add_argument("--out", default=None,
+                    help="write the firehose report as JSON here")
     return ap.parse_args(argv)
 
 
@@ -164,14 +206,15 @@ def _select_tenants(fleet: ClassifierFleet, replay: str) -> list[str]:
     return sorted(selected)
 
 
-def _interleave(streams: dict[str, np.ndarray]):
-    """(sorted tenant order, [(tenant, row)] interleaved across tenants)
+def _interleave(streams: dict[str, np.ndarray], batch: int = 1):
+    """(sorted tenant order, [(tenant, start)] interleaved across tenants)
     — so every producer hits every tenant rather than draining them one
-    at a time."""
+    at a time.  With `batch > 1` each task is a chunk start; the submit
+    callback owns rows [start, start+batch)."""
     order = sorted(streams)
     tasks = []
     max_len = max(x.shape[0] for x in streams.values())
-    for i in range(max_len):
+    for i in range(0, max_len, batch):
         for name in order:
             if i < streams[name].shape[0]:
                 tasks.append((name, i))
@@ -268,28 +311,35 @@ def replay_fleet(fleet: ClassifierFleet, streams: dict[str, np.ndarray],
 
 def replay_client(client, fleet: ClassifierFleet,
                   streams: dict[str, np.ndarray], producers: int = 4,
-                  timeout: float = 120.0) -> dict:
+                  timeout: float = 120.0, batch: int = 1) -> dict:
     """`replay_fleet`, but every reading crosses the socket transport.
 
     `fleet` here is the *local* reference (offline programs + tenant
     metadata — it may be built with `warmup=False, autostart=False`);
     nothing is submitted to it.  Producers are submit-only so batching,
-    not round-trips, sets the pace; sheds are retried in the collection
-    pass with the server's `retry_after_ms` hint and counted.
+    not round-trips, sets the pace; `batch > 1` ships chunks of that many
+    rows per `SUBMIT_BATCH` frame via `submit_many` (the v2 fast path).
+    Sheds are retried in the collection pass with the server's
+    `retry_after_ms` hint and counted.
     """
     import time as _time
 
     from repro.serve.client import FleetShedError
 
-    order, tasks = _interleave(streams)
+    order, tasks = _interleave(streams, batch)
     results: dict[str, list] = {n: [None] * streams[n].shape[0]
                                 for n in order}
     shed_counts = {n: 0 for n in order}
 
-    def submit_one(name: str, i: int) -> None:
-        results[name][i] = client.submit(
-            name, streams[name][i],
-            deadline_ms=fleet._tenant(name).spec.deadline_ms)
+    def submit_one(name: str, s: int) -> None:
+        deadline_ms = fleet._tenant(name).spec.deadline_ms
+        if batch == 1:
+            results[name][s] = client.submit(name, streams[name][s],
+                                             deadline_ms=deadline_ms)
+        else:
+            e = min(s + batch, streams[name].shape[0])
+            results[name][s:e] = client.submit_many(
+                name, streams[name][s:e], deadline_ms)
 
     _run_producers(tasks, producers, submit_one, timeout)
 
@@ -309,7 +359,8 @@ def replay_client(client, fleet: ClassifierFleet,
                 break
 
     server_stats = client.stats()
-    report = {"tenants": {}, "producers": producers, "transport": "socket"}
+    report = {"tenants": {}, "producers": producers, "transport": "socket",
+              "batch": batch, "protocol_version": client.protocol_version}
     ok = True
     total_miss = total = 0
     for name in order:
@@ -389,11 +440,73 @@ def _main_serve(args) -> int:
     from repro.serve.server import serve_forever
 
     fleet = _build_fleet(args)
-    serve_forever(fleet, args.host, args.port, watch_manifest=args.watch)
+    serve_forever(fleet, args.host, args.port, shards=args.shards,
+                  udp_port=args.udp_port, watch_manifest=args.watch)
+    return 0
+
+
+def _main_firehose(args) -> int:
+    import time as _time
+
+    from repro.serve.client import FleetClient, UdpSwarmSender
+
+    fleet = _build_fleet(args, live=False)
+    selected = _select_tenants(fleet, args.replay)
+    streams = _build_streams(fleet, selected, args.readings, args.seed)
+    host, _, port = args.connect.rpartition(":")
+    uhost, _, uport = args.udp.rpartition(":")
+    with FleetClient(host or "127.0.0.1", int(port)) as client:
+        before = client.stats()["transport"]["udp"]
+        sender = UdpSwarmSender(uhost or "127.0.0.1", int(uport))
+        t0 = _time.perf_counter()
+        sent = sum(
+            sender.send_many(name, streams[name][s:s + args.batch])
+            for name in selected
+            for s in range(0, streams[name].shape[0], args.batch))
+        send_s = _time.perf_counter() - t0
+        sender.close()
+        # wait for the received count to stop moving (drain), then read it
+        deadline = _time.monotonic() + args.timeout
+        last = -1
+        while _time.monotonic() < deadline:
+            udp = client.stats()["transport"]["udp"]
+            got = udp["n_readings"] - before["n_readings"]
+            if got >= sent or (got == last and got > 0):
+                break
+            last = got
+            _time.sleep(0.25)
+        udp = client.stats()["transport"]["udp"]
+    received = udp["n_readings"] - before["n_readings"]
+    frac = received / max(1, sent)
+    report = {
+        "transport": "udp", "tenants": sorted(selected),
+        "readings_sent": int(sent), "readings_received": int(received),
+        "received_frac": round(frac, 4),
+        "send_rate_per_s": round(sent / max(send_s, 1e-9), 1),
+        "n_admitted": udp["n_admitted"] - before["n_admitted"],
+        "n_shed": udp["n_shed"] - before["n_shed"],
+        "n_errors": udp["n_errors"] - before["n_errors"],
+    }
+    print(f"[firehose] sent {sent} readings "
+          f"({report['send_rate_per_s']:.0f}/s), server received "
+          f"{received} ({frac:.1%}), admitted {report['n_admitted']}, "
+          f"shed {report['n_shed']}, errors {report['n_errors']}")
+    if args.out:
+        Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.out).write_text(json.dumps(report, indent=2,
+                                             sort_keys=True) + "\n")
+        print(f"wrote {args.out}")
+    if frac < args.min_frac:
+        print(f"[firehose] FAIL: received fraction {frac:.1%} below "
+              f"--min-frac {args.min_frac:.1%}")
+        return 1
     return 0
 
 
 def _main_replay(args) -> int:
+    if args.batch > 1 and not args.connect:
+        raise SystemExit("--batch frames only exist on the wire; "
+                         "pair it with --connect")
     fleet = _build_fleet(args, live=not args.connect)
     client = None
     try:
@@ -411,7 +524,7 @@ def _main_replay(args) -> int:
             client = FleetClient(host or "127.0.0.1", int(port))
             report = replay_client(client, fleet, streams,
                                    producers=args.producers,
-                                   timeout=args.timeout)
+                                   timeout=args.timeout, batch=args.batch)
         else:
             report = replay_fleet(fleet, streams, producers=args.producers,
                                   timeout=args.timeout)
@@ -431,8 +544,11 @@ def _main_replay(args) -> int:
 
 def main(argv=None) -> int:
     args = _parse_args(argv)
-    return _main_serve(args) if args.command == "serve" \
-        else _main_replay(args)
+    if args.command == "serve":
+        return _main_serve(args)
+    if args.command == "firehose":
+        return _main_firehose(args)
+    return _main_replay(args)
 
 
 if __name__ == "__main__":

@@ -70,6 +70,36 @@ class MicroBatcher:
         self._queue.append(entry)
         return entry
 
+    def submit_many(self, items: list, now: float,
+                    deadlines_ms=None) -> list[QueuedItem]:
+        """Enqueue a whole batched frame as one contiguous arrival-order run.
+
+        The ingest fast path: the fleet holds its scheduler lock exactly
+        once per *frame* instead of once per reading.  `deadlines_ms` is
+        None (every row gets the default budget) or one value per item,
+        where NaN rows fall back to the default — the v2 wire encoding.
+        All rows share one `t_submit`, which is what "arrived as one
+        frame" means to the flush policy.
+        """
+        default_s = self.default_deadline_ms * 1e-3
+        if deadlines_ms is None:
+            entries = [QueuedItem(item, now, default_s) for item in items]
+        else:
+            if len(deadlines_ms) != len(items):
+                raise ValueError(f"{len(deadlines_ms)} deadlines for "
+                                 f"{len(items)} items")
+            entries = []
+            for item, d in zip(items, deadlines_ms):
+                d = float(d)
+                if d != d:                  # NaN -> tenant default
+                    entries.append(QueuedItem(item, now, default_s))
+                elif d <= 0:
+                    raise ValueError("deadline budget must be positive")
+                else:
+                    entries.append(QueuedItem(item, now, d * 1e-3))
+        self._queue.extend(entries)
+        return entries
+
     def adopt(self, entries: list[QueuedItem]) -> None:
         """Take over already-timed entries from another batcher, in order.
 

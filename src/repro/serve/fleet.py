@@ -87,6 +87,9 @@ class FleetRequest:
     label: int | None = None
     latency_ms: float | None = None
     error: str | None = None
+    batch_uid: int | None = None    # frame identity (submit_many arrivals)
+    _plane: np.ndarray | None = field(default=None, repr=False)
+    _row: int = 0                   # this request's row in `_plane`
     _t_submit: float = 0.0
     _event: threading.Event = field(default_factory=threading.Event,
                                     repr=False)
@@ -319,6 +322,7 @@ class ClassifierFleet:
                          for b, ts in sorted(by_backend.items())}
         self._uid_lock = threading.Lock()
         self._next_uid = 0
+        self._next_batch_uid = 0        # one per submit_many frame
         self.errors: list[str] = []     # dispatch-thread failures, in order
         self._shutdown = False
         self._started = False
@@ -490,6 +494,86 @@ class ClassifierFleet:
                 worker.cond.notify_all()
             return req
 
+    def submit_many(self, tenant: str, readings: np.ndarray,
+                    deadlines_ms=None
+                    ) -> tuple[list[FleetRequest], np.ndarray, float]:
+        """Queue a whole `(B, F)` frame under one scheduler-lock acquisition.
+
+        The batched-ingest fast path: uids are allocated in one block, the
+        frame enters the tenant's queue as one contiguous arrival-order
+        run (`MicroBatcher.submit_many`), and every request keeps a view
+        into the shared reading plane so dispatch can slice it instead of
+        re-stacking rows (`batch_uid` threads the frame identity through
+        to `ReplicaPool` accounting).
+
+        Admission is per-row: with `max_queue` armed, the head of the
+        frame is admitted up to the remaining queue room and the tail is
+        shed.  Returns ``(requests, shed_idx, retry_after_ms)`` — admitted
+        requests in row order, the row indices that were shed, and the
+        backoff hint for them (0.0 when nothing shed).  `deadlines_ms` is
+        None, a scalar, or one value per row; NaN rows use the tenant's
+        default budget.
+        """
+        x = np.ascontiguousarray(np.asarray(readings, dtype=np.float64))
+        if x.ndim == 1:
+            x = x.reshape(1, -1)
+        if x.ndim != 2:
+            raise ValueError(f"expected (B, F) readings, got {x.shape}")
+        B = x.shape[0]
+        if deadlines_ms is None:
+            dls = None
+        else:
+            dls = np.broadcast_to(
+                np.asarray(deadlines_ms, dtype=np.float64), (B,))
+        while True:
+            t = self._tenant(tenant)
+            if x.shape[1] != t.engine.n_features:
+                raise ValueError(f"{tenant}: expected {t.engine.n_features} "
+                                 f"features, got {x.shape[1]}")
+            worker = self._worker_of(t)
+            with worker.cond:
+                if self._shutdown:
+                    raise RuntimeError("fleet is shut down")
+                if self._tenants.get(tenant) is not t:
+                    continue        # replaced mid-flight; retry on successor
+                depth = len(t.batcher)
+                if t.spec.max_queue is None:
+                    n_admit = B
+                else:
+                    n_admit = max(0, min(B, t.spec.max_queue - depth))
+                n_shed = B - n_admit
+                if n_shed:
+                    t.stats.record_shed(n_shed)
+                    self.stats.record_shed(n_shed)
+                if n_admit == 0:
+                    return ([], np.arange(B),
+                            self._retry_after_ms(t, depth))
+                with self._uid_lock:
+                    uid0 = self._next_uid
+                    self._next_uid += n_admit
+                    batch_uid = self._next_batch_uid
+                    self._next_batch_uid += 1
+                default = t.spec.deadline_ms
+                reqs = []
+                for i in range(n_admit):
+                    d = default if dls is None else float(dls[i])
+                    if d != d:              # NaN -> tenant default
+                        d = default
+                    reqs.append(FleetRequest(
+                        uid=uid0 + i, tenant=tenant, readings=x[i],
+                        deadline_ms=d, batch_uid=batch_uid,
+                        _plane=x, _row=i))
+                entries = t.batcher.submit_many(
+                    reqs, now=self._clock(),
+                    deadlines_ms=[r.deadline_ms for r in reqs])
+                for r, e in zip(reqs, entries):
+                    r._t_submit = e.t_submit
+                worker.cond.notify_all()
+            shed_idx = np.arange(n_admit, B)
+            retry_ms = (self._retry_after_ms(t, depth + n_admit)
+                        if n_shed else 0.0)
+            return reqs, shed_idx, retry_ms
+
     def _worker_of(self, t: _Tenant) -> _BackendWorker:
         return self._workers[t.spec.backend]
 
@@ -498,11 +582,27 @@ class ClassifierFleet:
         return self._tenant(tenant).engine.classify_stream(x)
 
     # -- dispatch (executor threads) -----------------------------------------
+    @staticmethod
+    def _gather_batch(reqs: list[FleetRequest]) -> np.ndarray:
+        """Readings of a popped batch as one `(B, F)` array.
+
+        When every request is a consecutive row of the same submit_many
+        plane (the batched-ingest case), the batch is a zero-copy slice of
+        that plane; anything else falls back to stacking per-request rows.
+        """
+        first = reqs[0]
+        plane = first._plane
+        if plane is not None and all(
+                r._plane is plane and r._row == first._row + i
+                for i, r in enumerate(reqs)):
+            return plane[first._row: first._row + len(reqs)]
+        return np.stack([r.readings for r in reqs])
+
     def _dispatch(self, tenant: _Tenant, replica: EngineReplica,
                   entries: list[QueuedItem]) -> None:
         reqs: list[FleetRequest] = [e.item for e in entries]
         try:
-            x = np.stack([r.readings for r in reqs])
+            x = self._gather_batch(reqs)
             t0 = self._clock()
             labels = replica.engine.classify_batch(x)
             dt = self._clock() - t0

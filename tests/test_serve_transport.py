@@ -419,3 +419,236 @@ def test_replay_cli_exits_nonzero_on_mismatch_without_strict(
     rc = M.main(["--emit-dir", str(emit_dir),
                  "--replay", "all", "--readings", "4", "--producers", "1"])
     assert rc == 1
+
+
+# ---------------------------------------------------------------------------
+# Protocol v2: batch frames, version negotiation, the 64 MiB cap
+# ---------------------------------------------------------------------------
+def test_protocol_v2_batch_frames_round_trip():
+    rng = np.random.default_rng(1)
+    x = rng.random((13, 7))
+    rids = np.arange(100, 113, dtype=np.uint64)
+    dls = np.full(13, np.nan)
+    dls[3] = 12.5
+    (payload,) = P.FrameReader().feed(
+        P.encode_submit_batch(rids, "tnn_cardio", x, dls))
+    msg = P.decode_message(payload)
+    assert msg.type == P.MSG_SUBMIT_BATCH and msg.tenant == "tnn_cardio"
+    np.testing.assert_array_equal(msg.req_ids, rids)
+    np.testing.assert_array_equal(msg.readings, x)   # bit-exact plane
+    assert np.isnan(msg.deadlines_ms[0]) and msg.deadlines_ms[3] == 12.5
+
+    labels = (np.arange(13) % 4).astype(np.int32)
+    lats = np.linspace(0.5, 2.0, 13)
+    (payload,) = P.FrameReader().feed(
+        P.encode_result_batch(rids, labels, lats))
+    msg = P.decode_message(payload)
+    assert msg.type == P.MSG_RESULT_BATCH
+    np.testing.assert_array_equal(msg.req_ids, rids)
+    np.testing.assert_array_equal(msg.labels, labels)
+    np.testing.assert_allclose(msg.latencies_ms, lats)
+
+
+def test_protocol_version_negotiation():
+    assert P.negotiate_version(1) == 1      # a v1 client is served at v1
+    assert P.negotiate_version(P.PROTOCOL_VERSION) == P.PROTOCOL_VERSION
+    assert P.negotiate_version(99) == P.PROTOCOL_VERSION    # future client
+    with pytest.raises(P.ProtocolError):
+        P.negotiate_version(0)              # below the supported floor
+    # HELLO / WELCOME carry the version on the wire
+    assert P.decode_message(P.encode_hello(1)[4:]).version == 1
+    assert P.decode_message(P.encode_welcome(2)[4:]).version == 2
+
+
+if _HAVE_HYPOTHESIS:
+
+    @settings(max_examples=N_EXAMPLES, deadline=None)
+    @given(st.lists(st.tuples(st.integers(1, 9), st.integers(1, 6),
+                              st.integers(0, 2**32)),
+                    min_size=1, max_size=6),
+           st.randoms(use_true_random=False))
+    def test_batch_frames_survive_arbitrary_chunking(shapes, rnd):
+        """SUBMIT_BATCH frames split at random byte boundaries reassemble
+        to the exact req_id tables and reading planes, in order."""
+        frames, want = [], []
+        for k, (b, f, seed) in enumerate(shapes):
+            x = np.random.default_rng(seed).random((b, f))
+            rids = np.arange(k * 1000, k * 1000 + b, dtype=np.uint64)
+            frames.append(P.encode_submit_batch(rids, f"t{k}", x))
+            want.append((f"t{k}", rids, x))
+        stream = b"".join(frames)
+        reader = P.FrameReader()
+        out, i = [], 0
+        while i < len(stream):
+            j = min(len(stream), i + rnd.randint(1, 7))
+            out.extend(reader.feed(stream[i:j]))
+            i = j
+        assert reader.buffered == 0 and len(out) == len(frames)
+        for payload, (tenant, rids, x) in zip(out, want):
+            msg = P.decode_message(payload)
+            assert msg.tenant == tenant
+            np.testing.assert_array_equal(msg.req_ids, rids)
+            np.testing.assert_array_equal(msg.readings, x)
+
+
+def test_batch_frame_near_the_64mib_cap_decodes():
+    """`batch_rows_per_frame` is the exact fit: its row count lands within
+    a whisker of MAX_FRAME and still decodes; one hostile byte past the
+    cap is rejected at the framer."""
+    F = 4096
+    rows = P.batch_rows_per_frame(F)
+    frame = P.encode_submit_batch(np.arange(rows, dtype=np.uint64), "t",
+                                  np.zeros((rows, F)))
+    assert len(frame) - 4 <= P.MAX_FRAME
+    assert len(frame) - 4 > 0.95 * P.MAX_FRAME      # actually near the cap
+    (payload,) = P.FrameReader().feed(frame)
+    msg = P.decode_message(payload)
+    assert msg.readings.shape == (rows, F)
+    import struct as _struct
+
+    with pytest.raises(P.ProtocolError):
+        P.FrameReader().feed(_struct.pack("!I", P.MAX_FRAME + 1))
+
+
+def test_oversized_batch_gets_clean_error_not_a_hung_connection(
+        golden_server):
+    """A frame bigger than the cap draws a connection-level ERROR and a
+    close — never a silent hang."""
+    import socket as _socket
+    import struct as _struct
+
+    (host, port), _, _ = golden_server
+
+    def read_frame(s):
+        head = b""
+        while len(head) < 4:
+            head += s.recv(4 - len(head))
+        (ln,) = _struct.unpack("!I", head)
+        buf = b""
+        while len(buf) < ln:
+            buf += s.recv(ln - len(buf))
+        return buf
+
+    with _socket.create_connection((host, port), timeout=30) as s:
+        s.sendall(P.encode_hello())
+        assert P.decode_message(read_frame(s)).type == P.MSG_WELCOME
+        s.sendall(_struct.pack("!I", P.MAX_FRAME + 1))  # hostile batch size
+        msg = P.decode_message(read_frame(s))
+        assert msg.type == P.MSG_ERROR and msg.req_id == P.CONN_ERR
+        assert s.recv(1) == b""             # and the server hung up
+
+
+def test_v1_client_against_v2_server_stays_bit_identical(golden_server):
+    """Version negotiation: a client pinned to protocol v1 is served at
+    v1 (per-reading SUBMIT frames) and still gets offline-exact labels."""
+    (host, port), emit_dir, vectors = golden_server
+    from repro.compile.artifact import load_manifest
+
+    tenant = sorted(vectors)[0]
+    x = vectors[tenant]
+    rows = {r["name"]: r for r in load_manifest(emit_dir)}
+    want = load_program(
+        emit_dir / rows[tenant]["program"]).predict(x).astype(np.int32)
+    with FleetClient(host, port, protocol_version=1) as client:
+        assert client.protocol_version == 1
+        np.testing.assert_array_equal(
+            client.classify(tenant, x, timeout=120.0), want)
+
+
+def test_submit_many_chunks_batch_frames_bit_identical(golden_server):
+    """The v2 batch path, forced through many small SUBMIT_BATCH frames
+    (tiny max_frame), resolves every row to the offline label."""
+    (host, port), emit_dir, vectors = golden_server
+    from repro.compile.artifact import load_manifest
+
+    tenant = sorted(vectors)[0]
+    x = vectors[tenant]
+    rows = {r["name"]: r for r in load_manifest(emit_dir)}
+    want = load_program(
+        emit_dir / rows[tenant]["program"]).predict(x).astype(np.int32)
+    with FleetClient(host, port) as client:
+        assert client.protocol_version == P.PROTOCOL_VERSION
+        handles = client.submit_many(tenant, x, max_frame=1 << 12)
+        got = np.array([h.result(120.0) for h in handles], dtype=np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Batched ingest: fleet fast path, sharded accept loops, UDP, coalescer
+# ---------------------------------------------------------------------------
+def test_fleet_submit_many_partial_admission_and_identity():
+    """One lock acquisition admits the head of the frame up to queue room
+    and sheds the tail with a retry hint; admitted rows serve to
+    offline-exact labels in arrival order."""
+    cc = _toy_classifier()
+    prog = CircuitProgram.from_classifier(cc, backend="np")
+    ref = CircuitProgram.from_classifier(cc).predict
+    spec = TenantSpec(name="t", program=prog, backend="np", max_batch=8,
+                      deadline_ms=20_000.0, max_queue=16)
+    fleet = ClassifierFleet([spec], warmup=False, autostart=False)
+    for rep in fleet._tenant("t").pool.replicas:
+        rep.engine.program = _SlowProgram(rep.engine.program, 0.01)
+    fleet.start()
+    x = np.random.default_rng(5).random((64, 9))
+    want = ref(x)
+    try:
+        reqs, shed_idx, retry_ms = fleet.submit_many("t", x)
+        assert len(reqs) + len(shed_idx) == 64
+        assert len(shed_idx) >= 64 - 16 > 0 and retry_ms > 0
+        # admission is in arrival order: the shed rows are the tail
+        np.testing.assert_array_equal(
+            shed_idx, np.arange(64 - len(shed_idx), 64))
+        for r in reqs:
+            r.result(60.0)
+        labels = np.array([r.label for r in reqs], dtype=np.int32)
+        np.testing.assert_array_equal(labels, want[:len(reqs)])
+    finally:
+        fleet.shutdown(drain=True)
+
+
+def test_sharded_server_udp_ingest_and_coalescer():
+    """The swarm transports in one sweep: SO_REUSEPORT shards serve
+    concurrent connections correctly, the client-side coalescer flushes
+    on both size and age, and fire-and-forget UDP datagrams land in the
+    server's ingest counters."""
+    from repro.serve.client import CoalescingSubmitter, UdpSwarmSender
+    from repro.serve.server import FleetServer as _FS
+
+    cc = _toy_classifier()
+    prog = CircuitProgram.from_classifier(cc, backend="np")
+    ref = CircuitProgram.from_classifier(cc).predict
+    spec = TenantSpec(name="t", program=prog, backend="np", max_batch=32,
+                      deadline_ms=10_000.0)
+    fleet = ClassifierFleet([spec], warmup=False, autostart=False)
+    fleet.start()
+    server = _FS(fleet, shards=2, udp_port=0)
+    host, port = server.start_background()
+    x = np.random.default_rng(11).random((96, 9))
+    want = ref(x).astype(np.int32)
+    try:
+        with FleetClient(host, port) as c, FleetClient(host, port) as c2:
+            np.testing.assert_array_equal(
+                c2.classify("t", x[:32], timeout=60.0), want[:32])
+            with CoalescingSubmitter(c, max_rows=16,
+                                     max_delay_ms=25.0) as cs:
+                pends = [cs.submit("t", x[i]) for i in range(40)]
+                got = np.array([p.result(60.0) for p in pends],
+                               dtype=np.int32)
+            np.testing.assert_array_equal(got, want[:40])
+
+            before = c.stats()["transport"]["udp"]["n_readings"]
+            with UdpSwarmSender(host, server.udp_address[1]) as u:
+                n = u.send_many("t", x)
+                u.send("t", x[0])
+            deadline = time.monotonic() + 30
+            got_n = 0
+            while time.monotonic() < deadline:
+                got_n = c.stats()["transport"]["udp"]["n_readings"] - before
+                if got_n >= n + 1:
+                    break
+                time.sleep(0.05)
+            assert got_n == n + 1, f"UDP ingest saw {got_n}/{n + 1}"
+            assert c.stats()["transport"]["shards"] == 2
+    finally:
+        server.stop()
+        fleet.shutdown(drain=True)
