@@ -1,0 +1,166 @@
+"""Autopilot loop economics: mirror tax + time-to-first-promotion.
+
+Overhead section (`bench == "autopilot_overhead"`): one breast_cancer
+exact-TNN tenant on the swar backend replays a held-out stream through
+`submit_many` twice — once bare, once with a byte-identical shadow
+deployed so every admitted request is mirrored — and reports incumbent
+readings/s and request p50/p99 for both, plus a `mirror_tax` row with the
+throughput/latency ratios.  This is the number an operator needs before
+leaving a shadow attached to a production tenant: what mirroring costs
+the *primary* path (the shadow's own work is off the incumbent's books
+by construction; the tax is queue/lock contention and the mirror copy).
+
+Promotion section (`bench == "autopilot_promotion"`): one full controller
+round against a live fleet — stage the candidate bundle, shadow-deploy,
+mirror labeled pairs until the policy floor, decide, atomic manifest
+swap — timed from `Autopilot.run()` entry to the journaled `promoted`
+event, with the per-stage breakdown recovered from the decision
+journal's own timestamps.  Writes BENCH_autopilot.json.
+
+Run directly to (re)generate the committed artifact:
+
+    PYTHONPATH=src python -m benchmarks.autopilot_loop [BENCH_autopilot.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import QUICK, get_trained_tnn
+from repro.autopilot import (Autopilot, AutopilotConfig, Candidate,
+                             DecisionJournal, PromotionPolicy,
+                             ScriptedSource, dataset_traffic)
+from repro.compile import write_artifacts
+from repro.compile.ir import lower_classifier
+from repro.core.tnn import exact_netlists
+from repro.serve import ClassifierFleet
+
+DATASET = "breast_cancer"
+N_READINGS = 4096 if QUICK else 65_536
+REPLAY_BATCH = 64
+DEADLINE_MS = 1000.0        # generous: the bench measures tax, not misses
+MIRROR_PAIRS = 96 if QUICK else 512
+
+
+def _emit_incumbent(out: Path):
+    ds, tnn = get_trained_tnn(DATASET)
+    cc = lower_classifier(tnn, *exact_netlists(tnn))
+    write_artifacts(cc, out, base=f"tnn_{DATASET}", dataset=DATASET)
+    return ds, cc
+
+
+def _replay(fleet: ClassifierFleet, name: str, x_test: np.ndarray,
+            n: int) -> dict:
+    idx = np.random.default_rng(0).integers(0, x_test.shape[0], size=n)
+    stream = x_test[idx]
+    t0 = time.perf_counter()
+    reqs = []
+    for lo in range(0, n, REPLAY_BATCH):
+        batch, _, _ = fleet.submit_many(name, stream[lo:lo + REPLAY_BATCH])
+        reqs.extend(batch)
+    fleet.flush()
+    for r in reqs:
+        r.result(30.0)
+    elapsed = time.perf_counter() - t0
+    t = fleet.stats_summary()["tenants"][name]
+    return {"readings": n, "readings_per_s": n / elapsed,
+            "req_p50_ms": t["req_p50_ms"], "req_p99_ms": t["req_p99_ms"],
+            "n_slo_miss": t["n_slo_miss"]}
+
+
+def _overhead_rows() -> list[dict]:
+    from repro.compile.program import CircuitProgram
+    from repro.serve import TenantSpec
+
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        ds, cc = _emit_incumbent(Path(td))
+        name = f"tnn_{DATASET}"
+        kw = dict(backends="swar", deadline_ms=DEADLINE_MS)
+        with ClassifierFleet.from_emit_dir(td, **kw) as fleet:
+            bare = _replay(fleet, name, ds.x_test, N_READINGS)
+        with ClassifierFleet.from_emit_dir(td, **kw) as fleet:
+            comp = fleet.deploy_shadow(TenantSpec(
+                name=f"{name}!shadow", backend="swar",
+                program=CircuitProgram.from_classifier(cc, backend="swar"),
+                deadline_ms=DEADLINE_MS), name)
+            mirrored = _replay(fleet, name, ds.x_test, N_READINGS)
+            s = fleet.retire_shadow(name)
+        assert s["n_primary_errors"] == 0 and s["n_shadow_errors"] == 0
+        rows.append({"bench": "autopilot_overhead", "mode": "bare",
+                     "backend": "swar", **bare})
+        rows.append({"bench": "autopilot_overhead", "mode": "mirrored",
+                     "backend": "swar", **mirrored,
+                     "n_mirrored": s["n_mirrored"],
+                     "n_dropped": s["n_dropped"],
+                     "agreement": s["agreement"]})
+        rows.append({"bench": "autopilot_overhead", "mode": "mirror_tax",
+                     "throughput_ratio":
+                         mirrored["readings_per_s"] / bare["readings_per_s"],
+                     "p50_ratio":
+                         mirrored["req_p50_ms"] / max(bare["req_p50_ms"],
+                                                      1e-9)})
+    return rows
+
+
+def _promotion_rows() -> list[dict]:
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        out = Path(td)
+        _, cc = _emit_incumbent(out)
+        name = f"tnn_{DATASET}"
+        # A byte-identical candidate: equal accuracy on mirrored truth, so
+        # the policy promotes — the bench times the machinery (staging,
+        # shadow warmup, mirrored verdict, manifest swap), not the search.
+        source = ScriptedSource([Candidate(
+            cc=cc, objectives=[0.0, 0.0], provenance={"bench": True},
+            dataset=DATASET)])
+        journal = DecisionJournal(out / "autopilot_journal.jsonl")
+        cfg = AutopilotConfig(
+            tenant=name, rounds=1, mirror_pairs=MIRROR_PAIRS,
+            policy=PromotionPolicy(min_pairs=min(64, MIRROR_PAIRS),
+                                   min_truth=32))
+        with ClassifierFleet.from_emit_dir(
+                out, backends="swar", deadline_ms=DEADLINE_MS) as fleet:
+            t0 = time.perf_counter()
+            outcomes = Autopilot(fleet, source,
+                                 dataset_traffic(DATASET, batch=32),
+                                 journal, cfg).run()
+            elapsed = time.perf_counter() - t0
+            gen = fleet.stats_summary()["manifest_generation"]
+        assert outcomes[0]["event"] == "promoted", outcomes
+        ev = {e["event"]: e["t"] for e in journal.replay()}
+        rows.append({
+            "bench": "autopilot_promotion",
+            "mirror_pairs": MIRROR_PAIRS,
+            "time_to_first_promotion_s": elapsed,
+            "shadow_deploy_s": ev["shadow_deployed"] - ev["candidate"],
+            "shadow_verdict_s": ev["verdict"] - ev["shadow_deployed"],
+            "execute_s": ev["promoted"] - ev["decision"],
+            "manifest_generation": gen,
+        })
+    return rows
+
+
+def run() -> list[dict]:
+    return _overhead_rows() + _promotion_rows()
+
+
+def main(out_path: str = "BENCH_autopilot.json") -> None:
+    rows = run()
+    for r in rows:
+        print(json.dumps(r))
+    with open(out_path, "w") as f:
+        json.dump({"dataset": DATASET, "quick": QUICK, "rows": rows}, f,
+                  indent=2)
+        f.write("\n")
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_autopilot.json")

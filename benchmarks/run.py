@@ -27,6 +27,7 @@ BENCH_MODULES = {
     "cgp": "benchmarks.cgp_throughput",
     "serve": "benchmarks.serve_throughput",
     "evolve": "benchmarks.evolve_campaign",
+    "autopilot": "benchmarks.autopilot_loop",
 }
 BENCHES = list(BENCH_MODULES)
 

@@ -1,0 +1,22 @@
+"""repro.autopilot — continuous evolve→compile→shadow-deploy→promote loop.
+
+The controller (`Autopilot`) keeps a per-tenant evolution `Campaign`
+searching, stages every improved winner as a provenance-stamped candidate
+bundle, shadow-deploys it against the live `ClassifierFleet` on mirrored
+traffic, and promotes or rolls back from the `ShadowComparator` evidence
+— journaling every step so a killed controller resumes mid-rollout to
+the same decision.  CLI: ``python -m repro.autopilot {run,status,promote,
+rollback}``.
+"""
+from repro.autopilot.controller import (Autopilot, AutopilotConfig,
+                                        CampaignSource, Candidate,
+                                        PromotionPolicy, ScriptedSource,
+                                        dataset_traffic, decide,
+                                        sabotage_classifier)
+from repro.autopilot.journal import DecisionJournal, JournalCorruptError
+
+__all__ = [
+    "Autopilot", "AutopilotConfig", "CampaignSource", "Candidate",
+    "DecisionJournal", "JournalCorruptError", "PromotionPolicy",
+    "ScriptedSource", "dataset_traffic", "decide", "sabotage_classifier",
+]

@@ -95,40 +95,57 @@ def save_program(cc: CompiledClassifier, path: str | Path) -> str:
     return str(path)
 
 
-def verify_program_bundle(path: str | Path) -> str | None:
+def verify_program_bundle(path: str | Path,
+                          expect_sha256: str | None = None) -> str | None:
     """Check `path` against its sha256 sidecar; returns the digest.
 
-    Returns None when no sidecar exists (pre-checksum bundle — accepted
-    for compatibility); raises `ArtifactCorruptError` on any mismatch or
-    an unreadable payload.
+    Returns None when neither a sidecar nor `expect_sha256` exists
+    (pre-checksum bundle — accepted for compatibility); raises
+    `ArtifactCorruptError` on any mismatch or an unreadable payload.
+
+    `expect_sha256` is the digest an *external record* claims for this
+    bundle — a manifest row, a decision journal — and is cross-checked
+    against the actual file: a sidecar that agrees with its bundle can
+    still disagree with the manifest row that promised it (stale emit,
+    swapped file, tampered row), and serving under the wrong identity is
+    exactly as bad as serving corrupt bits.
     """
     path = Path(path)
     sidecar = path.with_name(path.name + SHA_SUFFIX)
     if not path.exists():
         raise ArtifactCorruptError(f"program bundle {path} does not exist")
-    if not sidecar.exists():
+    if not sidecar.exists() and expect_sha256 is None:
         return None
-    want = sidecar.read_text().strip()
     got = _sha256_file(path)
-    if got != want:
+    if sidecar.exists():
+        want = sidecar.read_text().strip()
+        if got != want:
+            raise ArtifactCorruptError(
+                f"program bundle {path} fails its checksum "
+                f"(sha256 {got[:12]}… != recorded {want[:12]}…) — the bundle "
+                "was truncated or corrupted on disk; re-emit the artifact")
+    if expect_sha256 is not None and got != expect_sha256.strip():
         raise ArtifactCorruptError(
-            f"program bundle {path} fails its checksum "
-            f"(sha256 {got[:12]}… != recorded {want[:12]}…) — the bundle "
-            "was truncated or corrupted on disk; re-emit the artifact")
+            f"program bundle {path} does not match the manifest row that "
+            f"references it (sha256 {got[:12]}… != manifest "
+            f"{expect_sha256.strip()[:12]}…) — the row is stale or "
+            "tampered; re-emit the artifact")
     return got
 
 
 def load_program(path: str | Path, backend: str = "jax",
-                 devices: tuple | None = None) -> CircuitProgram:
+                 devices: tuple | None = None,
+                 expect_sha256: str | None = None) -> CircuitProgram:
     """Rebuild a classifier `CircuitProgram` from a `save_program` bundle.
 
     Validates the bundle against its sha256 sidecar first: a truncated or
     bit-flipped npz raises `ArtifactCorruptError` with a clear message
     instead of a deep numpy decode error (or, worse, silently wrong
-    labels).
+    labels).  `expect_sha256` additionally cross-checks the digest a
+    manifest row recorded for this bundle (see `verify_program_bundle`).
     """
     path = Path(path)
-    verify_program_bundle(path)
+    verify_program_bundle(path, expect_sha256=expect_sha256)
     try:
         with np.load(path) as fix:
             header = json.loads(bytes(fix["header_json"]).decode())

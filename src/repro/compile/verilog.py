@@ -202,12 +202,16 @@ def write_artifacts(cc: CompiledClassifier, out_dir: str | Path,
                     base: str | None = None,
                     interface: str | None = "abc",
                     dataset: str | None = None,
-                    replicas: int = 1) -> dict[str, str]:
+                    replicas: int = 1,
+                    provenance: dict | None = None) -> dict[str, str]:
     """Write `<base>.v` + `<base>_egfet.json` + a servable program bundle
     under `out_dir`, and register the design as tenant `base` in the
     directory's `fleet.json` manifest (`repro.serve` consumes it).
     `replicas` is a serving hint: how many engine replicas the fleet
-    should stand up for this tenant by default."""
+    should stand up for this tenant by default.  `provenance` (seed,
+    generations, objective values, config fingerprint — whatever produced
+    this design) is stamped into the manifest row so a later promotion
+    decision can tell *which search* a live tenant came from."""
     from repro.compile import artifact as A
 
     out = Path(out_dir)
@@ -219,7 +223,7 @@ def write_artifacts(cc: CompiledClassifier, out_dir: str | Path,
     vpath.write_text(emit_classifier_verilog(cc))
     rpath.write_text(json.dumps(egfet_report(cc, interface), indent=2) + "\n")
     A.save_program(cc, ppath)
-    mpath = A.register_tenant(out, {
+    entry = {
         "name": base,
         "program": str(ppath),
         "verilog": str(vpath),
@@ -234,6 +238,9 @@ def write_artifacts(cc: CompiledClassifier, out_dir: str | Path,
         # the digest save_program just wrote — no need to re-hash the npz
         "sha256": ppath.with_name(ppath.name
                                   + A.SHA_SUFFIX).read_text().strip(),
-    })
+    }
+    if provenance is not None:
+        entry["provenance"] = dict(provenance)
+    mpath = A.register_tenant(out, entry)
     return {"verilog": str(vpath), "report": str(rpath),
             "program": str(ppath), "manifest": str(mpath)}

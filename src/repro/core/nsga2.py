@@ -151,6 +151,7 @@ def _memoized(objective: Callable[[np.ndarray], np.ndarray]
                 cache[k] = np.asarray(f, dtype=np.float64)
         return np.stack([cache[k] for k in keys])
 
+    evaluate.cache_clear = cache.clear    # data drifted -> memo is stale
     return evaluate
 
 

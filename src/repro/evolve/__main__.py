@@ -117,10 +117,21 @@ def _run_one(args: argparse.Namespace, dataset: str | None) -> dict:
     }
     if args.emit_dir and problem.approx is not None and len(res.archive_x):
         from repro.compile import egfet_report, write_artifacts
-        best_x = res.archive_x[int(np.argmin(res.archive_f[:, 0]))]
+        best_i = int(np.argmin(res.archive_f[:, 0]))
+        best_x = res.archive_x[best_i]
         cc = compile_archive_winner(problem, best_x)
+        provenance = {
+            "seed": cfg.seed,
+            "islands": cfg.n_islands,
+            "pop_size": cfg.pop_size,
+            "generations": campaign.next_epoch * cfg.gens_per_epoch,
+            "objectives": [float(v) for v in res.archive_f[best_i]],
+            "config_fingerprint": campaign.fingerprint(),
+            "backend": cfg.eval_backend,
+            "resumed_from": res.resumed_from,
+        }
         paths = write_artifacts(cc, args.emit_dir, base=problem.name,
-                                dataset=dataset)
+                                dataset=dataset, provenance=provenance)
         payload["artifacts"] = paths
         rep = egfet_report(cc)
         print(f"[{problem.name}] emitted winner: {cc.ir.n_gates} gates, "

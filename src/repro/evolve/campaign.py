@@ -25,6 +25,8 @@ process with a cold cache follows the identical trajectory.
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import os
 import signal
 from dataclasses import dataclass, field
@@ -66,6 +68,7 @@ class Campaign:
         self.n_genes = int(self.domains.shape[0])
         self.seed_population = seed_population
         evaluate = (_memoized(objective) if cfg.base.dedup_eval else objective)
+        self._evaluate = evaluate       # shared memo (see clear_eval_cache)
         self.drivers = [
             NSGA2Driver(self.domains, objective, cfg.island_nsga2(i),
                         evaluate=evaluate)
@@ -120,6 +123,13 @@ class Campaign:
                 "mutation_prob": b.mutation_prob,
                 "dedup_eval": b.dedup_eval}
 
+    def fingerprint(self) -> str:
+        """sha256 of the trajectory-determining config — the provenance
+        stamp emitted into manifest rows so a promotion decision can tell
+        which search produced a candidate."""
+        blob = json.dumps(self._config_fingerprint(), sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()
+
     def _save(self, epoch: int) -> None:
         if self.ckpt is None:
             return
@@ -167,6 +177,45 @@ class Campaign:
                            for d in self.drivers]
             self.next_epoch = 0
 
+    def clear_eval_cache(self) -> None:
+        """Drop the shared fitness memo between data refreshes.
+
+        The dedup cache assumes a *fixed* objective; a drift hook that
+        mutates the underlying data would otherwise keep serving stale
+        fitness values for revisited chromosomes.  The autopilot calls
+        this after every `CampaignProblem.drift` application.
+        """
+        clear = getattr(self._evaluate, "cache_clear", None)
+        if clear is not None:
+            clear()
+
+    def step_epoch(self) -> int:
+        """Advance exactly one epoch (+checkpoint); returns its index.
+
+        The continuous-evolution API: unlike `run()`, stepping is not
+        bounded by `cfg.n_epochs` — a long-running controller keeps
+        calling this for as long as it wants candidates, and every epoch
+        lands a resumable checkpoint exactly like the batch path.
+        """
+        self.init_or_resume()
+        epoch = self.next_epoch
+        for _ in range(self.cfg.gens_per_epoch):
+            for i, driver in enumerate(self.drivers):
+                self.states[i] = driver.step(self.states[i])
+        for state in self.states:
+            self.archive.update(*extract_front(state.pop, state.F))
+        migrate_ring(self.states, self.cfg.migrate_k)
+        self._save(epoch)
+        self.next_epoch = epoch + 1
+        return epoch
+
+    def best_by_objective(self, obj: int = 0) -> tuple[np.ndarray, np.ndarray]:
+        """(chromosome, objectives) of the archive entry minimizing `obj`."""
+        if not len(self.archive):
+            raise ValueError("empty archive — step the campaign first")
+        i = int(np.argmin(self.archive.F[:, obj]))
+        return self.archive.X[i].copy(), self.archive.F[i].copy()
+
     def run(self, on_epoch: Callable[[int, "Campaign"], None] | None = None,
             kill_after_epoch: int | None = None) -> CampaignResult:
         """Advance to `cfg.n_epochs`, checkpointing every epoch boundary.
@@ -178,16 +227,9 @@ class Campaign:
         """
         self.init_or_resume()
         ran = 0
-        for epoch in range(self.next_epoch, self.cfg.n_epochs):
-            for _ in range(self.cfg.gens_per_epoch):
-                for i, driver in enumerate(self.drivers):
-                    self.states[i] = driver.step(self.states[i])
-            for state in self.states:
-                self.archive.update(*extract_front(state.pop, state.F))
-            migrate_ring(self.states, self.cfg.migrate_k)
-            self._save(epoch)
+        while self.next_epoch < self.cfg.n_epochs:
+            epoch = self.step_epoch()
             ran += 1
-            self.next_epoch = epoch + 1
             if on_epoch is not None:
                 on_epoch(epoch, self)
             if kill_after_epoch is not None and epoch >= kill_after_epoch:

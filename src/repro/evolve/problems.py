@@ -26,6 +26,11 @@ class CampaignProblem:
     tnn: object | None = None
     approx: object | None = None        # core.tnn.TNNApproxProblem
     dataset: object | None = None       # data.tabular.TabularDataset
+    # continuous-evolution hook: `drift(round)` refreshes the data the
+    # objective scores against (deterministic in `round`).  Callers that
+    # memoize fitness must clear their cache after applying it
+    # (`Campaign.clear_eval_cache`).
+    drift: Callable[[int], None] | None = None
 
 
 def build_synth_problem(n_genes: int = 10, domain: int = 6) -> CampaignProblem:
@@ -94,6 +99,44 @@ def build_tnn_problem(dataset: str, seed: int = 0, epochs: int = 12,
                            objective=prob.objective,
                            seed_population=seed_pop,
                            tnn=tnn, approx=prob, dataset=ds)
+
+
+def attach_tnn_drift(problem: CampaignProblem, rate: float,
+                     seed: int = 0) -> CampaignProblem:
+    """Arm a TNN problem with a bootstrap-resampling drift hook.
+
+    Each `drift(round)` call replaces `rate` of the objective's sample
+    rows with fresh bootstrap draws from the original training pool — a
+    cheap, deterministic stand-in for "the sensor stream moved" that
+    reuses the cached per-candidate bit planes (the caches are per-sample
+    rows, so reindexing them *is* redrawing the data; nothing is
+    re-simulated).  Deterministic in `(seed, round)`: two controllers
+    replaying the same round sequence score identical objectives.
+    """
+    if problem.approx is None:
+        raise ValueError("only TNN problems carry a sample plane to drift")
+    if not 0.0 < rate <= 1.0:
+        raise ValueError("drift rate must be in (0, 1]")
+    ap = problem.approx
+    orig_hbits = ap.fixed_hbits.copy()
+    orig_caches = [c.copy() for c in ap.hidden_bit_cache]
+    orig_y = ap.y.copy()
+    orig_xbin = ap.xbin.copy()
+    S = orig_y.shape[0]
+    index_map = np.arange(S)
+
+    def drift(round_idx: int) -> None:
+        rng = np.random.default_rng((seed, int(round_idx)))
+        k = max(1, int(np.ceil(rate * S)))
+        pos = rng.choice(S, size=k, replace=False)
+        index_map[pos] = rng.integers(0, S, size=k)
+        ap.fixed_hbits = orig_hbits[index_map]
+        ap.hidden_bit_cache = [c[:, index_map] for c in orig_caches]
+        ap.y = orig_y[index_map]
+        ap.xbin = orig_xbin[index_map]
+
+    problem.drift = drift
+    return problem
 
 
 def compile_archive_winner(problem: CampaignProblem, x: np.ndarray):

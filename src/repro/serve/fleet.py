@@ -56,6 +56,7 @@ from repro.serve.batcher import MicroBatcher, QueuedItem
 from repro.serve.engine import (STATS_WINDOW, CircuitServingEngine,
                                 ServeStats)
 from repro.serve.replicas import EngineReplica, ReplicaPool
+from repro.serve.shadow import ShadowComparator
 
 FLEET_BACKENDS = ("np", "swar", "pallas")
 DEFAULT_DEADLINE_MS = 50.0
@@ -145,6 +146,7 @@ class TenantSpec:
     max_queue: int | None = None       # admission limit; None = never shed
     dataset: str | None = None
     generation: int = 0                # manifest generation that emitted it
+    sha256: str | None = None          # bundle digest the manifest recorded
     meta: dict = field(default_factory=dict)
 
 
@@ -169,6 +171,8 @@ class _Tenant:
         self.last_dispatch_s = 1e-3     # most recent (spike-sensitive)
         self.retiring = False           # drain, then drop from the worker
         self.from_manifest = False      # sync_manifest may retire it
+        self.shadow_of: str | None = None      # incumbent it mirrors, if any
+        self.comparator: ShadowComparator | None = None
 
     @property
     def name(self) -> str:
@@ -323,6 +327,8 @@ class ClassifierFleet:
         self._uid_lock = threading.Lock()
         self._next_uid = 0
         self._next_batch_uid = 0        # one per submit_many frame
+        self._shadows: dict[str, _Tenant] = {}   # incumbent name -> shadow
+        self._manifest_generation = 0
         self.errors: list[str] = []     # dispatch-thread failures, in order
         self._shutdown = False
         self._started = False
@@ -397,14 +403,19 @@ class ClassifierFleet:
         n_replicas = (replicas if isinstance(replicas, int)
                       else (replicas or {}).get(row["name"],
                                                 int(row.get("replicas", 1))))
+        # cross-check the bundle against the digest the row recorded: a
+        # sidecar that agrees with its bundle can still disagree with the
+        # manifest that promised it (stale emit, swapped file, tampered row)
         program = load_program(ctx["emit_dir"] / row["program"],
-                               backend=backend)
+                               backend=backend,
+                               expect_sha256=row.get("sha256"))
         return TenantSpec(
             name=row["name"], program=program, backend=backend,
             max_batch=ctx["max_batch"], deadline_ms=ctx["deadline_ms"],
             replicas=max(1, n_replicas), max_queue=ctx["max_queue"],
             dataset=row.get("dataset"),
-            generation=int(row.get("generation", 0)), meta=dict(row))
+            generation=int(row.get("generation", 0)),
+            sha256=row.get("sha256"), meta=dict(row))
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> None:
@@ -492,6 +503,10 @@ class ClassifierFleet:
                                          deadline_ms=req.deadline_ms)
                 req._t_submit = entry.t_submit
                 worker.cond.notify_all()
+            # mirror *after* the incumbent's scheduler lock is released:
+            # shadow traffic must never serialize against — or error into —
+            # the serving path that admitted the request
+            self._mirror(tenant, [req])
             return req
 
     def submit_many(self, tenant: str, readings: np.ndarray,
@@ -569,13 +584,66 @@ class ClassifierFleet:
                 for r, e in zip(reqs, entries):
                     r._t_submit = e.t_submit
                 worker.cond.notify_all()
-            shed_idx = np.arange(n_admit, B)
+            self._mirror(tenant, reqs)   # admitted rows only; sheds are not
+            shed_idx = np.arange(n_admit, B)     # real traffic to compare on
             retry_ms = (self._retry_after_ms(t, depth + n_admit)
                         if n_shed else 0.0)
             return reqs, shed_idx, retry_ms
 
     def _worker_of(self, t: _Tenant) -> _BackendWorker:
         return self._workers[t.spec.backend]
+
+    def _mirror(self, tenant: str, primaries: list[FleetRequest]) -> None:
+        """Copy freshly admitted requests to `tenant`'s shadow, if any.
+
+        Best-effort by design: a full shadow queue *drops* mirrors
+        (counted in the comparator) rather than backpressuring the
+        incumbent — mirrored traffic must cost the serving path nothing.
+        Each mirror is paired with its primary by the primary's uid via
+        completion callbacks into the `ShadowComparator`.
+        """
+        if not primaries:
+            return
+        sh = self._shadows.get(tenant)
+        if sh is None:
+            return
+        comp = sh.comparator
+        worker = self._worker_of(sh)
+        with worker.cond:
+            if (self._shutdown or sh.retiring
+                    or self._shadows.get(tenant) is not sh):
+                comp.record_dropped(len(primaries))
+                return
+            room = (len(primaries) if sh.spec.max_queue is None
+                    else max(0, sh.spec.max_queue - len(sh.batcher)))
+            admit, dropped = primaries[:room], primaries[room:]
+            if dropped:
+                comp.record_dropped(len(dropped))
+            if not admit:
+                return
+            with self._uid_lock:
+                uid0 = self._next_uid
+                self._next_uid += len(admit)
+            mirrors = []
+            for i, p in enumerate(admit):
+                m = FleetRequest(
+                    uid=uid0 + i, tenant=sh.name, readings=p.readings,
+                    deadline_ms=p.deadline_ms, batch_uid=p.batch_uid,
+                    _plane=p._plane, _row=p._row)
+                comp.expect(p.uid)
+                m.add_done_callback(
+                    lambda r, _uid=p.uid: comp.observe_shadow(_uid, r))
+                mirrors.append(m)
+            entries = sh.batcher.submit_many(
+                mirrors, now=self._clock(),
+                deadlines_ms=[m.deadline_ms for m in mirrors])
+            for m, e in zip(mirrors, entries):
+                m._t_submit = e.t_submit
+            worker.cond.notify_all()
+        # outside the shadow worker lock — a primary that already completed
+        # runs the callback synchronously right here
+        for p in admit:
+            p.add_done_callback(comp.observe_primary)
 
     def classify_stream(self, tenant: str, x: np.ndarray) -> np.ndarray:
         """Bulk path: route a whole `(S, F)` stream straight to replica 0."""
@@ -601,6 +669,11 @@ class ClassifierFleet:
     def _dispatch(self, tenant: _Tenant, replica: EngineReplica,
                   entries: list[QueuedItem]) -> None:
         reqs: list[FleetRequest] = [e.item for e in entries]
+        # a shadow's dispatches never touch fleet-level stats or the fleet
+        # error log: mirrored traffic is an experiment riding alongside the
+        # SLO-accounted serving path, and a broken candidate must show up
+        # in its comparator, not in the fleet's health signals
+        is_shadow = tenant.shadow_of is not None
         try:
             x = self._gather_batch(reqs)
             t0 = self._clock()
@@ -608,23 +681,106 @@ class ClassifierFleet:
             dt = self._clock() - t0
         except Exception as exc:        # complete exceptionally, never hang
             msg = f"{type(exc).__name__}: {exc}"
-            self.errors.append(f"{tenant.name}: {msg}")
+            if not is_shadow:
+                self.errors.append(f"{tenant.name}: {msg}")
             for r in reqs:
                 r.error = msg
                 r._complete()
             return
         tenant.est_dispatch_s = 0.7 * tenant.est_dispatch_s + 0.3 * dt
         tenant.last_dispatch_s = dt
-        self.stats.record(len(reqs), dt)
+        if not is_shadow:
+            self.stats.record(len(reqs), dt)
         tenant.stats.record(len(reqs), dt)
         # FleetRequest carries the same completion fields as SensorRequest,
         # so the engine's label/latency attach is reused verbatim (request
         # stats land on the replica's engine; tenant + fleet get them here)
         replica.engine.complete(reqs, labels)
         for r in reqs:
-            self.stats.record_request(r.latency_ms, r.deadline_ms)
+            if not is_shadow:
+                self.stats.record_request(r.latency_ms, r.deadline_ms)
             tenant.stats.record_request(r.latency_ms, r.deadline_ms)
             r._complete()
+
+    # -- shadow deployment ---------------------------------------------------
+    def deploy_shadow(self, spec: TenantSpec, of: str) -> ShadowComparator:
+        """Stand up `spec` as a **shadow replica** of live tenant `of`.
+
+        The shadow gets its own replica pool and queue on its backend's
+        scheduler but is not routable: it only ever sees copies of traffic
+        admitted for `of` (`_mirror`), and its dispatches stay out of the
+        fleet's stats and error log.  Returns the `ShadowComparator`
+        accumulating agreement/accuracy/latency deltas — the evidence a
+        promotion decision is made from.  One shadow per incumbent; give
+        the shadow's `max_queue` a value to bound mirror backlog (excess
+        mirrors are dropped, never backpressured).
+        """
+        with self._admin_lock:
+            if self._shutdown:
+                raise RuntimeError("fleet is shut down")
+            incumbent = self._tenant(of)
+            if of in self._shadows:
+                raise ValueError(
+                    f"tenant {of!r} already has a shadow "
+                    f"({self._shadows[of].name!r}); retire it first")
+            if spec.name in self._tenants or any(
+                    s.name == spec.name for s in self._shadows.values()):
+                raise ValueError(f"name {spec.name!r} is already in use")
+            t = self._build_tenant(spec)    # warmup outside any worker lock
+            if t.engine.n_features != incumbent.engine.n_features:
+                raise ValueError(
+                    f"shadow {spec.name!r} expects {t.engine.n_features} "
+                    f"features but incumbent {of!r} serves "
+                    f"{incumbent.engine.n_features}")
+            t.shadow_of = of
+            t.comparator = ShadowComparator(of, spec.name,
+                                            window=self.stats_window)
+            worker = self._workers.get(spec.backend)
+            if worker is None:
+                worker = _BackendWorker(self, spec.backend, [])
+                self._workers[spec.backend] = worker
+                if self._started:
+                    worker.start()
+            with worker.cond:
+                self._shadows[of] = t
+                worker.tenants.append(t)
+                worker.cond.notify_all()
+            return t.comparator
+
+    def shadow_comparator(self, of: str) -> ShadowComparator:
+        t = self._shadows.get(of)
+        if t is None:
+            raise KeyError(f"tenant {of!r} has no shadow; shadowed: "
+                           f"{', '.join(sorted(self._shadows)) or '(none)'}")
+        return t.comparator
+
+    def retire_shadow(self, of: str, timeout: float = 30.0) -> dict:
+        """Tear down `of`'s shadow; returns the comparator's final summary.
+
+        Mirroring stops immediately; the queued mirror backlog is served
+        (so every expected pair closes) before the pool is dropped.  Both
+        the rollback path and the promotion path end here — promotion
+        additionally re-registers the winner under the incumbent's name
+        and `sync_manifest()`s it into the serving slot.
+        """
+        with self._admin_lock:
+            t = self._shadows.pop(of, None)
+            if t is None:
+                raise KeyError(f"tenant {of!r} has no shadow")
+            worker = self._worker_of(t)
+            with worker.cond:
+                t.retiring = True
+                worker.cond.notify_all()
+        deadline = self._clock() + timeout
+        with worker.cond:
+            while t in worker.tenants:
+                left = deadline - self._clock()
+                if left <= 0:
+                    raise TimeoutError(
+                        f"shadow of {of!r} still draining after {timeout}s "
+                        f"({len(t.batcher)} queued)")
+                worker.cond.wait(min(left, 0.05))
+        return t.comparator.summary()
 
     # -- hot reload ----------------------------------------------------------
     def add_tenant(self, spec: TenantSpec) -> None:
@@ -808,21 +964,41 @@ class ClassifierFleet:
 
     # -- observability -------------------------------------------------------
     def stats_summary(self) -> dict:
-        """Fleet-wide + per-tenant (+ per-replica) `ServeStats` summaries."""
+        """Fleet-wide + per-tenant (+ per-replica) `ServeStats` summaries.
+
+        Each tenant row carries its *deploy identity* — the artifact
+        sha256 its manifest row recorded and the manifest generation the
+        fleet last synced to — so an operator (or the autopilot) can tell
+        exactly which emitted design is live without touching the emit
+        dir.  Tenants with a live shadow get a `"shadow"` sub-dict with
+        the comparator's running verdict evidence.
+        """
+        tenants = {}
+        for name, t in sorted(self._tenants.items()):
+            row = {
+                "backend": t.spec.backend,
+                "max_batch": t.spec.max_batch,
+                "deadline_ms": t.spec.deadline_ms,
+                "max_queue": t.spec.max_queue,
+                "dataset": t.spec.dataset,
+                "generation": t.spec.generation,
+                "sha256": t.spec.sha256,
+                "pending": len(t.batcher),
+                "replicas": t.pool.summary(),
+                **t.stats.summary(),
+            }
+            sh = self._shadows.get(name)
+            if sh is not None:
+                row["shadow"] = {
+                    "name": sh.name,
+                    "backend": sh.spec.backend,
+                    "sha256": sh.spec.sha256,
+                    "pending": len(sh.batcher),
+                    **sh.comparator.summary(),
+                }
+            tenants[name] = row
         return {
             "fleet": self.stats.summary(),
-            "tenants": {
-                name: {
-                    "backend": t.spec.backend,
-                    "max_batch": t.spec.max_batch,
-                    "deadline_ms": t.spec.deadline_ms,
-                    "max_queue": t.spec.max_queue,
-                    "dataset": t.spec.dataset,
-                    "generation": t.spec.generation,
-                    "pending": len(t.batcher),
-                    "replicas": t.pool.summary(),
-                    **t.stats.summary(),
-                }
-                for name, t in sorted(self._tenants.items())
-            },
+            "manifest_generation": self._manifest_generation,
+            "tenants": tenants,
         }

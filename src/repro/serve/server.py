@@ -158,6 +158,9 @@ class FleetServer:
                 "replicas": t.pool.size,
                 "dataset": t.spec.dataset,
                 "generation": t.spec.generation,
+                "sha256": t.spec.sha256,
+                "shadow": (self.fleet._shadows[name].name
+                           if name in self.fleet._shadows else None),
             })
         return rows
 

@@ -1,0 +1,487 @@
+"""The autopilot loop: shadow deployment, journaled decisions, resume.
+
+  * **comparator** — mirrored completions pair with their primaries by
+    uid regardless of completion order; ground truth may arrive before
+    or after a pair closes; errors and drops are counted, not scored.
+  * **fleet shadows** — mirrored traffic reaches the shadow replica and
+    *only* the shadow: incumbent labels, fleet-level stats, and the
+    fleet error log are bit-for-bit what they'd be without the shadow
+    (the SLO-isolation acceptance criterion).
+  * **decisions** — `decide` is a pure function of the journaled
+    evidence: accuracy-primary when ground truth exists, agreement
+    fallback otherwise, and a broken candidate (label bits flipped)
+    rolls back with the incumbent untouched.
+  * **end-to-end + resume** — a scripted bad→good candidate sequence
+    rolls back then promotes (generation flips atomically, in-flight
+    requests keep their labels), and a controller SIGKILLed after
+    journaling its verdict resumes to the same decision it would have
+    made uninterrupted.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.autopilot import (Autopilot, AutopilotConfig, Candidate,
+                             DecisionJournal, JournalCorruptError,
+                             PromotionPolicy, ScriptedSource, decide,
+                             sabotage_classifier)
+from repro.compile import CircuitProgram, load_manifest_doc, load_program
+from repro.compile.verilog import write_artifacts
+from repro.core import tnn as T
+from repro.serve import ClassifierFleet, TenantSpec
+from repro.serve.shadow import ShadowComparator
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _toy_classifier(F=9, H=5, Cc=4, seed=7):
+    from repro.compile import lower_classifier
+    rng = np.random.default_rng(seed)
+    w1t = rng.integers(-1, 2, size=(F, H)).astype(np.int8)
+    w2t = T.balance_zero_counts(rng.normal(size=(H, Cc)), 1 / 3)
+    tnn = T.TrainedTNN(w1t=w1t, w2t=w2t, thresholds=np.full(F, 0.5),
+                       train_acc=0.0, test_acc=0.0, name=f"toy{seed}")
+    return lower_classifier(tnn, *T.exact_netlists(tnn))
+
+
+@pytest.fixture
+def emit_dir(tmp_path):
+    write_artifacts(_toy_classifier(seed=7), tmp_path, base="alpha",
+                    provenance={"seed": 7, "objectives": [0.25, 1.0]})
+    return tmp_path
+
+
+def _fleet(emit_dir, **kw):
+    kw.setdefault("backends", "np")
+    return ClassifierFleet.from_emit_dir(emit_dir, **kw)
+
+
+class _Req:
+    def __init__(self, uid, label=None, latency_ms=None, error=None):
+        self.uid = uid
+        self.label = label
+        self.latency_ms = latency_ms
+        self.error = error
+
+
+# ---------------------------------------------------------------------------
+# Journal
+# ---------------------------------------------------------------------------
+def test_journal_roundtrip_and_seq_survives_reopen(tmp_path):
+    j = DecisionJournal(tmp_path / "j.jsonl")
+    j.append("candidate", round=0, name="a")
+    j.append("verdict", round=0, summary={"n_pairs": 3})
+    j2 = DecisionJournal(tmp_path / "j.jsonl")      # reopen: replay + resume
+    events = j2.replay()
+    assert [e["event"] for e in events] == ["candidate", "verdict"]
+    assert [e["seq"] for e in events] == [1, 2]
+    assert j2.append("decision", round=0, action="hold")["seq"] == 3
+    assert set(j2.rounds()) == {0}
+
+
+def test_journal_tolerates_torn_tail_but_not_mid_corruption(tmp_path):
+    path = tmp_path / "j.jsonl"
+    j = DecisionJournal(path)
+    j.append("candidate", round=0, name="a")
+    j.append("verdict", round=0, summary={})
+    with open(path, "a") as f:
+        f.write('{"seq": 3, "event": "decis')        # crash mid-append
+    assert [e["event"] for e in DecisionJournal(path).replay()] == \
+        ["candidate", "verdict"]
+    lines = path.read_text().splitlines()
+    lines[0] = "garbage{{{"
+    path.write_text("\n".join(lines) + "\n")
+    with pytest.raises(JournalCorruptError):
+        DecisionJournal(path)
+
+
+# ---------------------------------------------------------------------------
+# Comparator
+# ---------------------------------------------------------------------------
+def test_comparator_pairs_out_of_order_and_scores_truth():
+    comp = ShadowComparator("inc", "sh")
+    comp.expect(10)
+    comp.expect(11)
+    # shadow completes before its primary (mirror can win the race)
+    comp.observe_shadow(10, _Req(100, label=2, latency_ms=1.5))
+    comp.observe_primary(_Req(10, label=2, latency_ms=1.0))
+    # truth attached before the pair closes
+    comp.attach_truth(11, 3)
+    comp.observe_primary(_Req(11, label=3, latency_ms=1.0))
+    comp.observe_shadow(11, _Req(101, label=1, latency_ms=2.0))
+    s = comp.summary()
+    assert s["n_pairs"] == 2 and s["n_agree"] == 1
+    assert s["agreement"] == 0.5
+    assert s["n_truth"] == 1
+    assert s["incumbent_accuracy"] == 1.0 and s["shadow_accuracy"] == 0.0
+
+
+def test_comparator_truth_after_close_and_drop_error_accounting():
+    comp = ShadowComparator("inc", "sh")
+    comp.expect(5)
+    comp.observe_primary(_Req(5, label=1, latency_ms=1.0))
+    comp.observe_shadow(5, _Req(50, label=1, latency_ms=1.0))
+    comp.attach_truth(5, 1)                  # truth loses the race: late
+    assert comp.summary()["n_truth"] == 1
+    assert comp.summary()["shadow_accuracy"] == 1.0
+    comp.record_dropped(3)
+    comp.expect(6)
+    comp.observe_primary(_Req(6, label=1, latency_ms=1.0))
+    comp.observe_shadow(6, _Req(60, error="boom"))
+    s = comp.summary()
+    assert s["n_dropped"] == 3
+    assert s["n_shadow_errors"] == 1
+    assert s["n_pairs"] == 1                 # errored pair is not scored
+
+
+# ---------------------------------------------------------------------------
+# decide(): the promotion policy as a pure function
+# ---------------------------------------------------------------------------
+def _summary(**kw):
+    base = {"n_pairs": 100, "n_agree": 100, "agreement": 1.0,
+            "n_shadow_errors": 0, "n_truth": 0,
+            "incumbent_accuracy": None, "shadow_accuracy": None,
+            "incumbent_p50_ms": 1.0, "shadow_p50_ms": 1.0}
+    return {**base, **kw}
+
+
+def test_decide_policy_matrix():
+    pol = PromotionPolicy(min_pairs=64, min_agreement=0.98, min_truth=32)
+    assert decide(_summary(), pol)[0] == "promote"
+    assert decide(_summary(n_pairs=10), pol)[0] == "hold"
+    assert decide(_summary(n_shadow_errors=2), pol)[0] == "rollback"
+    assert decide(_summary(agreement=0.5), pol)[0] == "rollback"
+    # accuracy is primary over agreement: an improved candidate disagrees
+    better = _summary(agreement=0.7, n_truth=50,
+                      incumbent_accuracy=0.80, shadow_accuracy=0.90)
+    assert decide(better, pol)[0] == "promote"
+    worse = _summary(agreement=0.99, n_truth=50,
+                     incumbent_accuracy=0.90, shadow_accuracy=0.80)
+    assert decide(worse, pol)[0] == "rollback"
+    slow = _summary(shadow_p50_ms=9.0)
+    assert decide(slow, PromotionPolicy(min_pairs=64,
+                                        max_latency_factor=4.0))[0] == \
+        "rollback"
+    assert decide(slow, pol)[0] == "promote"     # latency guard off by default
+
+
+# ---------------------------------------------------------------------------
+# Fleet shadows: mirroring, isolation, lifecycle
+# ---------------------------------------------------------------------------
+def _shadow_spec(cc, name="alpha!shadow", **kw):
+    kw.setdefault("backend", "np")
+    return TenantSpec(name=name, program=CircuitProgram.from_classifier(
+        cc, backend=kw["backend"]), **kw)
+
+
+def test_shadow_mirrors_without_touching_incumbent_accounting(emit_dir):
+    cc = _toy_classifier(seed=7)
+    ref = CircuitProgram.from_classifier(cc).predict
+    rng = np.random.default_rng(0)
+    X = rng.random((48, 9))
+    with _fleet(emit_dir) as fleet:
+        # baseline labels with no shadow present
+        want = ref(X)
+        comp = fleet.deploy_shadow(_shadow_spec(cc), "alpha")
+        reqs, shed, _ = fleet.submit_many("alpha", X)
+        assert not len(shed)
+        for r, y in zip(reqs, want):
+            comp.attach_truth(r.uid, int(y))
+        fleet.flush()
+        got = np.array([r.result(5.0) for r in reqs])
+        # in-flight + mirrored traffic: labels are exactly the no-shadow ones
+        np.testing.assert_array_equal(got, want)
+        s = comp.summary()
+        assert s["n_pairs"] == 48 and s["agreement"] == 1.0
+        assert s["n_truth"] == 48
+        assert s["incumbent_accuracy"] == 1.0 == s["shadow_accuracy"]
+        # fleet-level accounting never saw the mirrors
+        stats = fleet.stats_summary()
+        assert stats["fleet"]["n_requests"] == 48
+        assert stats["fleet"]["n_readings"] == 48
+        assert stats["tenants"]["alpha"]["n_requests"] == 48
+        assert fleet.errors == []
+        # identity satellites: sha256 + manifest generation + shadow block
+        doc = load_manifest_doc(emit_dir)
+        row = {t["name"]: t for t in doc["tenants"]}["alpha"]
+        assert stats["tenants"]["alpha"]["sha256"] == row["sha256"]
+        assert stats["manifest_generation"] == doc["generation"]
+        assert stats["tenants"]["alpha"]["shadow"]["n_pairs"] == 48
+        assert stats["tenants"]["alpha"]["shadow"]["name"] == "alpha!shadow"
+
+
+def test_sabotaged_shadow_disagrees_totally_and_errors_stay_out(emit_dir):
+    cc = _toy_classifier(seed=7)
+    bad = sabotage_classifier(cc)
+    rng = np.random.default_rng(1)
+    X = rng.random((40, 9))
+    with _fleet(emit_dir) as fleet:
+        comp = fleet.deploy_shadow(_shadow_spec(bad), "alpha")
+        reqs, _, _ = fleet.submit_many("alpha", X)
+        fleet.flush()
+        ref = CircuitProgram.from_classifier(cc).predict(X)
+        np.testing.assert_array_equal([r.result(5.0) for r in reqs], ref)
+        s = comp.summary()
+        assert s["n_pairs"] == 40 and s["agreement"] == 0.0
+        assert fleet.errors == []
+        action, reason = decide(s, PromotionPolicy(min_pairs=16))
+        assert action == "rollback"
+
+
+def test_shadow_queue_cap_drops_mirrors_never_backpressures(emit_dir):
+    cc = _toy_classifier(seed=7)
+    with _fleet(emit_dir) as fleet:
+        comp = fleet.deploy_shadow(
+            _shadow_spec(cc, max_queue=4), "alpha")
+        X = np.random.default_rng(2).random((32, 9))
+        reqs, shed, _ = fleet.submit_many("alpha", X)
+        assert len(reqs) == 32 and not len(shed)    # incumbent admits all
+        fleet.flush()
+        s = comp.summary()
+        assert s["n_mirrored"] + s["n_dropped"] == 32
+        assert s["n_dropped"] >= 28                 # queue held at most 4
+        assert s["n_pairs"] == s["n_mirrored"]
+
+
+def test_shadow_lifecycle_guards_and_retire(emit_dir):
+    cc = _toy_classifier(seed=7)
+    with _fleet(emit_dir) as fleet:
+        fleet.deploy_shadow(_shadow_spec(cc), "alpha")
+        with pytest.raises(ValueError, match="already has a shadow"):
+            fleet.deploy_shadow(_shadow_spec(cc, name="other"), "alpha")
+        with pytest.raises(KeyError):
+            fleet.deploy_shadow(_shadow_spec(cc, name="x"), "missing")
+        final = fleet.retire_shadow("alpha")
+        assert final["n_pairs"] == 0
+        with pytest.raises(KeyError):
+            fleet.shadow_comparator("alpha")
+        # after retirement, submits stop mirroring entirely
+        reqs, _, _ = fleet.submit_many(
+            "alpha", np.random.default_rng(3).random((8, 9)))
+        fleet.flush()
+        assert all(r.result(5.0) is not None for r in reqs)
+        # feature-count mismatch is refused up front
+        wrong = _toy_classifier(F=6, seed=11)
+        with pytest.raises(ValueError, match="features"):
+            fleet.deploy_shadow(_shadow_spec(wrong, name="w"), "alpha")
+
+
+# ---------------------------------------------------------------------------
+# End-to-end controller: bad candidate rolls back, good one promotes
+# ---------------------------------------------------------------------------
+def _pilot(fleet, emit_dir, candidates, journal=None, **cfg_kw):
+    cc = _toy_classifier(seed=7)
+    ref = CircuitProgram.from_classifier(cc).predict
+    rng = np.random.default_rng(42)
+
+    def traffic():
+        while True:
+            X = rng.random((16, 9))
+            yield X, ref(X)          # incumbent's own labels as ground truth
+
+    cfg_kw.setdefault("policy", PromotionPolicy(min_pairs=32, min_truth=16))
+    cfg = AutopilotConfig(tenant="alpha", rounds=len(candidates),
+                          mirror_pairs=48, verdict_timeout_s=60.0, **cfg_kw)
+    journal = journal or DecisionJournal(emit_dir / "journal.jsonl")
+    return Autopilot(fleet, ScriptedSource(candidates), traffic(),
+                     journal, cfg), journal
+
+
+def test_autopilot_rolls_back_bad_then_promotes_good(emit_dir):
+    cc = _toy_classifier(seed=7)
+    gen0 = load_manifest_doc(emit_dir)["generation"]
+    candidates = [
+        Candidate(cc=sabotage_classifier(cc), objectives=[0.2, 1.0],
+                  provenance={"round": 0, "sabotaged": True}),
+        Candidate(cc=cc, objectives=[0.2, 1.0], provenance={"round": 1}),
+    ]
+    with _fleet(emit_dir) as fleet:
+        pilot, journal = _pilot(fleet, emit_dir, candidates)
+        outcomes = pilot.run()
+        assert [o["event"] for o in outcomes] == ["rolled_back", "promoted"]
+        doc = load_manifest_doc(emit_dir)
+        # promotion flipped the generation atomically and the fleet followed
+        assert doc["generation"] > gen0
+        assert outcomes[1]["generation"] == doc["generation"]
+        row = {t["name"]: t for t in doc["tenants"]}["alpha"]
+        assert row["sha256"] == outcomes[1]["sha256"]
+        assert row["provenance"]["round"] == 1
+        t = fleet._tenant("alpha")
+        assert t.spec.generation == doc["generation"]
+        assert t.spec.sha256 == row["sha256"]
+        assert "alpha" not in fleet._shadows         # both rounds cleaned up
+        assert fleet.errors == []
+        # the staged candidates live in their own provenance-stamped manifest
+        cand_doc = load_manifest_doc(emit_dir / "candidates")
+        names = {t["name"] for t in cand_doc["tenants"]}
+        assert names == {"alpha__cand_r0", "alpha__cand_r1"}
+        # the rolled-back candidate's provenance records the sabotage
+        r0 = {t["name"]: t for t in cand_doc["tenants"]}["alpha__cand_r0"]
+        assert r0["provenance"]["sabotaged"] is True
+        # decisions replay deterministically from the journaled evidence
+        by_round = journal.rounds()
+        for r, want in ((0, "rollback"), (1, "promote")):
+            evs = {e["event"]: e for e in by_round[r]}
+            action, _ = decide(evs["verdict"]["summary"],
+                               pilot.cfg.policy)
+            assert action == want == evs["decision"]["action"]
+        # promoted program serves on: labels still bit-identical
+        X = np.random.default_rng(9).random((8, 9))
+        reqs, _, _ = fleet.submit_many("alpha", X)
+        fleet.flush()
+        np.testing.assert_array_equal(
+            [r.result(5.0) for r in reqs],
+            CircuitProgram.from_classifier(cc).predict(X))
+
+
+def test_autopilot_sabotage_rounds_hook_and_no_candidate(emit_dir):
+    cc = _toy_classifier(seed=7)
+    candidates = [Candidate(cc=cc, objectives=[0.2, 1.0], provenance={}),
+                  None]
+    with _fleet(emit_dir) as fleet:
+        pilot, _ = _pilot(fleet, emit_dir, candidates,
+                          sabotage_rounds=frozenset({0}))
+        outcomes = pilot.run()
+    # the controller's own sabotage hook broke round 0's (good) candidate
+    assert [o["event"] for o in outcomes] == ["rolled_back", "no_candidate"]
+
+
+def test_autopilot_rerun_is_idempotent(emit_dir):
+    cc = _toy_classifier(seed=7)
+    candidates = [Candidate(cc=cc, objectives=[0.2, 1.0], provenance={})]
+    with _fleet(emit_dir) as fleet:
+        pilot, journal = _pilot(fleet, emit_dir, candidates)
+        first = pilot.run()
+        gen = load_manifest_doc(emit_dir)["generation"]
+        again = pilot.run()                  # every round already terminal
+        assert again == first
+        assert load_manifest_doc(emit_dir)["generation"] == gen
+
+
+# ---------------------------------------------------------------------------
+# SIGKILL resume: the journaled verdict governs the post-crash decision
+# ---------------------------------------------------------------------------
+_DRIVER = textwrap.dedent("""\
+    import json, sys
+    import numpy as np
+    from pathlib import Path
+
+    from repro.autopilot import (Autopilot, AutopilotConfig, Candidate,
+                                 DecisionJournal, PromotionPolicy,
+                                 ScriptedSource, sabotage_classifier)
+    from repro.compile import CircuitProgram
+    from repro.compile.verilog import write_artifacts
+    from repro.core import tnn as T
+    from repro.serve import ClassifierFleet
+
+    def toy(seed=7):
+        from repro.compile import lower_classifier
+        rng = np.random.default_rng(seed)
+        w1t = rng.integers(-1, 2, size=(9, 5)).astype(np.int8)
+        w2t = T.balance_zero_counts(rng.normal(size=(5, 4)), 1 / 3)
+        tnn = T.TrainedTNN(w1t=w1t, w2t=w2t, thresholds=np.full(9, 0.5),
+                           train_acc=0.0, test_acc=0.0, name="toy7")
+        return lower_classifier(tnn, *T.exact_netlists(tnn))
+
+    emit_dir = Path(sys.argv[1])
+    kill_after = None
+    if len(sys.argv) > 2 and sys.argv[2] != "-":
+        stage, rnd = sys.argv[2].split(":")
+        kill_after = (stage, int(rnd))
+
+    cc = toy()
+    if not (emit_dir / "fleet.json").exists():
+        write_artifacts(cc, emit_dir, base="alpha")
+    ref = CircuitProgram.from_classifier(cc).predict
+    rng = np.random.default_rng(42)
+
+    def traffic():
+        while True:
+            X = rng.random((16, 9))
+            yield X, ref(X)
+
+    candidates = [
+        Candidate(cc=sabotage_classifier(cc), objectives=[0.2, 1.0],
+                  provenance={"round": 0}),
+        Candidate(cc=cc, objectives=[0.2, 1.0], provenance={"round": 1}),
+    ]
+    cfg = AutopilotConfig(
+        tenant="alpha", rounds=2, mirror_pairs=48,
+        policy=PromotionPolicy(min_pairs=32, min_truth=16),
+        kill_after=kill_after)
+    fleet = ClassifierFleet.from_emit_dir(emit_dir, backends="np")
+    try:
+        pilot = Autopilot(fleet, ScriptedSource(candidates), traffic(),
+                          DecisionJournal(emit_dir / "journal.jsonl"), cfg)
+        outcomes = pilot.run()
+        print(json.dumps([(o["round"], o["event"]) for o in outcomes]))
+    finally:
+        fleet.shutdown(drain=False)
+""")
+
+
+def _run_driver(tmp_path, emit_dir, kill_after="-", timeout=180):
+    driver = tmp_path / "driver.py"
+    driver.write_text(_DRIVER)
+    env = dict(os.environ, PYTHONPATH=SRC + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    return subprocess.run(
+        [sys.executable, str(driver), str(emit_dir), kill_after],
+        cwd=str(tmp_path), env=env, capture_output=True, text=True,
+        timeout=timeout)
+
+
+def test_sigkilled_controller_resumes_to_same_decision(tmp_path):
+    killed = tmp_path / "killed"
+    control = tmp_path / "control"
+    # control run: never interrupted
+    r = _run_driver(tmp_path, control)
+    assert r.returncode == 0, r.stderr
+    want = json.loads(r.stdout.strip().splitlines()[-1])
+    # interrupted run: SIGKILL right after round 0's verdict is journaled
+    r1 = _run_driver(tmp_path, killed, kill_after="verdict:0")
+    assert r1.returncode == -signal.SIGKILL
+    journal = DecisionJournal(killed / "journal.jsonl")
+    evs = {e["event"] for e in journal.rounds()[0]}
+    assert "verdict" in evs and "decision" not in evs   # died mid-rollout
+    # resume: the journaled evidence must yield the identical decisions
+    r2 = _run_driver(tmp_path, killed)
+    assert r2.returncode == 0, r2.stderr
+    got = json.loads(r2.stdout.strip().splitlines()[-1])
+    assert got == want == [[0, "rolled_back"], [1, "promoted"]]
+    # and the decision was *recomputed from the journal*, not re-measured:
+    # exactly one verdict row exists for round 0
+    verdicts = [e for e in DecisionJournal(killed / "journal.jsonl")
+                .rounds()[0] if e["event"] == "verdict"]
+    assert len(verdicts) == 1
+
+
+def test_sigkill_between_decision_and_execution_still_promotes(tmp_path):
+    emit = tmp_path / "emit"
+    r1 = _run_driver(tmp_path, emit, kill_after="decision:1")
+    assert r1.returncode == -signal.SIGKILL
+    journal = DecisionJournal(emit / "journal.jsonl")
+    evs = {e["event"]: e for e in journal.rounds()[1]}
+    assert evs["decision"]["action"] == "promote"
+    assert "promoted" not in evs
+    gen_before = load_manifest_doc(emit)["generation"]
+    r2 = _run_driver(tmp_path, emit)
+    assert r2.returncode == 0, r2.stderr
+    assert json.loads(r2.stdout.strip().splitlines()[-1]) == \
+        [[0, "rolled_back"], [1, "promoted"]]
+    doc = load_manifest_doc(emit)
+    assert doc["generation"] > gen_before       # the journaled promotion ran
+    row = {t["name"]: t for t in doc["tenants"]}["alpha"]
+    cand = {e["event"]: e for e in
+            DecisionJournal(emit / "journal.jsonl").rounds()[1]}["candidate"]
+    assert row["sha256"] == cand["sha256"]
+    bundle = load_program(emit / cand["program"],
+                          expect_sha256=cand["sha256"])
+    assert bundle.n_classes == 4

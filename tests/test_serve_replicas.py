@@ -348,3 +348,85 @@ def test_missing_bundle_and_legacy_bundle_paths(tmp_path):
     path.write_bytes(blob[: len(blob) // 2])
     with pytest.raises(ArtifactCorruptError, match="cannot be decoded"):
         load_program(path)
+
+
+def test_tampered_manifest_row_sha_fails_tenant_load(emit_dir):
+    """A manifest row whose sha256 disagrees with the bundle it references
+    must refuse to serve — the sidecar alone can't catch a stale or
+    swapped row (regression pin for the manifest/sidecar integrity gap)."""
+    import json
+
+    mpath = emit_dir / "fleet.json"
+    doc = json.loads(mpath.read_text())
+    for t in doc["tenants"]:
+        if t["name"] == "alpha":
+            t["sha256"] = "0" * 64          # plausible but wrong digest
+    mpath.write_text(json.dumps(doc))
+    with pytest.raises(ArtifactCorruptError, match="manifest"):
+        ClassifierFleet.from_emit_dir(emit_dir, backends="np",
+                                      warmup=False, autostart=False)
+    # load_program cross-checks the external record even when the sidecar
+    # itself is happy
+    row = {t["name"]: t for t in doc["tenants"]}["alpha"]
+    with pytest.raises(ArtifactCorruptError, match="stale or tampered"):
+        load_program(emit_dir / row["program"], expect_sha256="0" * 64)
+
+
+def test_sync_manifest_generation_rollback_restores_old_program(emit_dir):
+    """A manifest whose generation *decreased* (emit dir restored from a
+    backup) is honored: any generation difference — not just an increase —
+    replaces the tenant, and the fleet adopts the older counter, so the
+    serving state always converges to what the directory says."""
+    backed_up = ("fleet.json", "alpha_program.npz",
+                 "alpha_program.npz.sha256")
+    backup = {f: (emit_dir / f).read_bytes() for f in backed_up}
+    old_sha = {t["name"]: t for t in load_manifest_doc(emit_dir)
+               ["tenants"]}["alpha"]["sha256"]
+    fleet = ClassifierFleet.from_emit_dir(emit_dir, backends="np",
+                                          warmup=False)
+    try:
+        write_artifacts(_toy_classifier(seed=19), emit_dir, base="alpha")
+        new_doc = load_manifest_doc(emit_dir)
+        assert fleet.sync_manifest()["replaced"] == ["alpha"]
+        assert fleet.stats_summary()["manifest_generation"] == \
+            new_doc["generation"]
+        # ...now the directory is restored from backup: generation drops
+        # (manifest *and* bundles — a restore brings back the whole dir)
+        for f, blob in backup.items():
+            (emit_dir / f).write_bytes(blob)
+        old_doc = load_manifest_doc(emit_dir)
+        assert old_doc["generation"] < new_doc["generation"]
+        actions = fleet.sync_manifest()
+        assert actions["replaced"] == ["alpha"]
+        assert actions["generation"] == old_doc["generation"]
+        t = fleet._tenant("alpha")
+        old_row = {r["name"]: r for r in old_doc["tenants"]}["alpha"]
+        assert t.spec.generation == old_row["generation"]
+        assert t.spec.sha256 == old_sha
+        assert fleet.stats_summary()["manifest_generation"] == \
+            old_doc["generation"]
+        # the restored program serves (and is the *old* bits)
+        x = np.random.default_rng(5).random((4, 9))
+        reqs, _, _ = fleet.submit_many("alpha", x)
+        fleet.flush()
+        ref = CircuitProgram.from_classifier(_toy_classifier(seed=7))
+        np.testing.assert_array_equal([r.result(5.0) for r in reqs],
+                                      ref.predict(x))
+    finally:
+        fleet.shutdown(drain=False)
+
+
+def test_stats_surface_deploy_identity(emit_dir):
+    """Per-tenant artifact sha256 + fleet manifest generation in stats."""
+    doc = load_manifest_doc(emit_dir)
+    rows = {t["name"]: t for t in doc["tenants"]}
+    fleet = ClassifierFleet.from_emit_dir(emit_dir, backends="np",
+                                          warmup=False, autostart=False)
+    try:
+        s = fleet.stats_summary()
+        assert s["manifest_generation"] == doc["generation"]
+        for name in ("alpha", "beta"):
+            assert s["tenants"][name]["sha256"] == rows[name]["sha256"]
+            assert len(s["tenants"][name]["sha256"]) == 64
+    finally:
+        fleet.shutdown(drain=False)
