@@ -20,6 +20,23 @@ length-prefixed TCP transport (`serve/server.py` + `serve/client.py`).
 per-reading path is kept as `bench == "serve_socket_unary"` so the
 batching win stays one diff away.
 
+Workers section (`bench == "serve_workers"`): a 4-tenant fleet (cardio +
+breast_cancer on the jitted SWAR backend, redwine + whitewine on numpy)
+with `workers=2`, so every dispatch crosses a process boundary into a
+spawned backend worker via the shared-memory slab ring.  The feed is
+whole 2048-reading `submit_many` frames — the batched ingest path — so
+the per-dispatch IPC cost (slab copy + pickle + wakeup) is amortized over
+a whole frame, and every label is checked bit-identical against the
+offline reference.
+
+QoS section (`bench == "serve_qos"`): a synthetic overload scenario — a
+guaranteed and a best-effort tenant share one deliberately slowed numpy
+backend while both are blasted with interleaved singles.  The committed
+row must show the best-effort tenant shedding (reason `"qos"`) while the
+guaranteed tenant records zero sheds and zero SLO misses: overload lands
+on the tenant that opted into degradation, never the one paying for
+isolation.
+
 Swarm section (`bench == "serve_swarm"`): the many-clients story.  A TCP
 soak opens thousands of short-lived connections (10k full, scaled down
 under QUICK) against a sharded `SO_REUSEPORT` server, each handshaking
@@ -54,6 +71,12 @@ from repro.serve.engine import CircuitServingEngine
 
 BATCH_SIZES = (1, 64, 1024)
 FLEET_DATASETS = ("cardio", "breast_cancer")
+WORKER_TENANTS = (("cardio", "swar"), ("breast_cancer", "swar"),
+                  ("redwine", "np"), ("whitewine", "np"))
+WORKER_PROCS = 2            # spawned worker processes per backend
+WORKER_FRAME = 2048         # readings per submit_many frame (IPC amortization)
+QOS_DELAY_S = 0.005         # synthetic per-dispatch slowdown (overload)
+QOS_BACKLOG = 8             # best_effort_backlog for the overload row
 FLEET_DEADLINE_MS = 250.0   # above the full-speed replay's queueing delay
 SOCKET_BATCH = 256          # readings per SUBMIT_BATCH frame (v2 path)
 SWARM_CONNS = 200 if QUICK else 10_000
@@ -152,6 +175,155 @@ def _measure_fleet(n_readings: int) -> list[dict]:
     finally:
         fleet.shutdown(drain=True)
     return _report_rows("serve_fleet", report, FLEET_DEADLINE_MS)
+
+
+def _measure_workers(n_readings: int) -> list[dict]:
+    """4-tenant frame replay with dispatch in spawned worker processes.
+
+    Feeds each tenant whole `(WORKER_FRAME, F)` frames through `submit_many`,
+    interleaved round-robin across tenants, then waits for every handle.
+    Labels are checked bit-identical against the in-process offline
+    reference — the shared-memory hop must not change a single bit."""
+    from repro.serve import ClassifierFleet, TenantSpec
+
+    specs, streams = [], {}
+    for i, (dataset, backend) in enumerate(WORKER_TENANTS):
+        ds, tnn = get_trained_tnn(dataset)
+        cc = lower_classifier(tnn, *exact_netlists(tnn))
+        name = f"tnn_{dataset}"
+        specs.append(TenantSpec(
+            name=name,
+            program=CircuitProgram.from_classifier(cc, backend=backend),
+            backend=backend, max_batch=WORKER_FRAME,
+            deadline_ms=FLEET_DEADLINE_MS, dataset=dataset))
+        streams[name] = _stream(ds.x_test, n_readings, seed=i)
+
+    fleet = ClassifierFleet(specs, workers=WORKER_PROCS)
+    try:
+        frames = []
+        for name, x in streams.items():
+            for f, s in enumerate(range(0, x.shape[0], WORKER_FRAME)):
+                frames.append((f, name, x[s:s + WORKER_FRAME]))
+        frames.sort(key=lambda t: t[0])  # round-robin across tenants
+
+        pending = {name: [] for name in streams}
+        t0 = time.perf_counter()
+        for _, name, rows_ in frames:
+            reqs, shed, _ = fleet.submit_many(name, rows_)
+            assert shed.size == 0  # no admission limits armed here
+            pending[name].extend(reqs)
+        for reqs in pending.values():
+            for r in reqs:
+                r.result(timeout=600)
+        wall = time.perf_counter() - t0
+
+        report = {"tenants": {}}
+        ok_all = True
+        for name, reqs in pending.items():
+            labels = np.array([r.label for r in reqs], dtype=np.int32)
+            t = fleet._tenant(name)
+            ref = t.engine.program.predict(streams[name]).astype(np.int32)
+            match = bool(np.array_equal(labels, ref))
+            ok_all = ok_all and match
+            report["tenants"][name] = {
+                "backend": t.spec.backend,
+                "labels_match_offline": match,
+                **t.stats.summary()}
+        report["fleet"] = fleet.stats.summary()
+        report["labels_match_offline"] = ok_all
+        total = sum(x.shape[0] for x in streams.values())
+    finally:
+        fleet.shutdown(drain=True)
+    return _report_rows("serve_workers", report, FLEET_DEADLINE_MS,
+                        workers=WORKER_PROCS,
+                        wall_readings_per_s=round(total / wall, 1))
+
+
+class _SlowProgram:
+    """Delegating wrapper that makes every predict cost `delay_s` — a
+    deterministic stand-in for an overloaded backend."""
+
+    def __init__(self, inner, delay_s: float):
+        self._inner, self._delay_s = inner, delay_s
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        time.sleep(self._delay_s)
+        return self._inner.predict(x)
+
+    def __getattr__(self, name: str):
+        return getattr(self._inner, name)
+
+
+def _measure_qos() -> list[dict]:
+    """serve_qos rows: guaranteed + best-effort tenants sharing one slowed
+    backend under interleaved overload.  The committed artifact must show
+    the best-effort tenant shedding while the guaranteed tenant keeps
+    zero sheds and zero SLO misses."""
+    from repro.serve import ClassifierFleet, TenantSpec
+    from repro.serve.fleet import FleetOverloadError
+
+    ds, tnn = get_trained_tnn("cardio")
+    cc = lower_classifier(tnn, *exact_netlists(tnn))
+    deadline_ms = 20_000.0  # generous: the row measures shedding, not SLO
+    specs = [
+        TenantSpec(name="gold",
+                   program=CircuitProgram.from_classifier(cc, backend="np"),
+                   backend="np", max_batch=8, deadline_ms=deadline_ms,
+                   qos="guaranteed", dataset="cardio"),
+        TenantSpec(name="cheap",
+                   program=CircuitProgram.from_classifier(cc, backend="np"),
+                   backend="np", max_batch=8, deadline_ms=deadline_ms,
+                   max_queue=64, qos="best_effort", dataset="cardio"),
+    ]
+    fleet = ClassifierFleet(specs, warmup=False, autostart=False,
+                            best_effort_backlog=QOS_BACKLOG)
+    for name in ("gold", "cheap"):
+        for rep in fleet._tenant(name).pool.replicas:
+            rep.engine.program = _SlowProgram(rep.engine.program,
+                                              QOS_DELAY_S)
+    fleet.start()
+
+    n = 256 if QUICK else 1024
+    x = _stream(ds.x_test, n, seed=5)
+    want = CircuitProgram.from_classifier(
+        cc, backend="np").predict(x).astype(np.int32)
+    gold_reqs, cheap_admitted, cheap_shed = [], 0, 0
+    try:
+        for i in range(n):
+            gold_reqs.append(fleet.submit("gold", x[i]))
+            try:
+                fleet.submit("cheap", x[i])
+                cheap_admitted += 1
+            except FleetOverloadError:
+                cheap_shed += 1
+        labels = np.array([r.result(timeout=600) for r in gold_reqs],
+                          dtype=np.int32)
+        summary = fleet.stats_summary()["tenants"]
+    finally:
+        fleet.shutdown(drain=True)
+
+    rows = []
+    for tenant, extra in (
+            ("gold", {"labels_match_offline":
+                      bool(np.array_equal(labels, want))}),
+            ("cheap", {"admitted": cheap_admitted,
+                       "shed_at_submit": cheap_shed,
+                       "best_effort_backlog": QOS_BACKLOG})):
+        t = summary[tenant]
+        rows.append({"bench": "serve_qos", "tenant": tenant,
+                     "qos": t["qos"], "backend": "np",
+                     "deadline_ms": deadline_ms,
+                     "readings": t["n_readings"],
+                     "n_shed": t["n_shed"],
+                     "n_slo_miss": t["n_slo_miss"],
+                     "slow_dispatch_s": QOS_DELAY_S, **extra})
+    if not (rows[0]["n_shed"] == 0 and rows[0]["n_slo_miss"] == 0
+            and rows[1]["n_shed"] > 0):
+        print("\n!!! WARNING: serve_qos overload row did not isolate the "
+              "guaranteed tenant "
+              f"(gold shed={rows[0]['n_shed']} slo={rows[0]['n_slo_miss']},"
+              f" cheap shed={rows[1]['n_shed']})", file=sys.stderr)
+    return rows
 
 
 def _measure_socket(bench: str, n_readings: int, batch: int) -> list[dict]:
@@ -321,6 +493,8 @@ def run() -> list[dict]:
 
     n_fleet = 2048 if QUICK else 16384
     rows.extend(_measure_fleet(n_fleet))
+    rows.extend(_measure_workers(n_fleet))
+    rows.extend(_measure_qos())
     rows.extend(_measure_socket("serve_socket", n_fleet, SOCKET_BATCH))
     rows.extend(_measure_socket("serve_socket_unary",
                                 512 if QUICK else 4096, 1))

@@ -392,10 +392,15 @@ class Autopilot:
             program = load_program(self.emit_dir / cand["program"],
                                    backend=backend,
                                    expect_sha256=cand["sha256"])
+            # best_effort: mirrored traffic yields scheduling priority to
+            # every serving tenant; shadows are additionally invisible to
+            # the fleet autoscaler (it never resizes a shadow pool — that
+            # would skew the very comparison this deploy exists to make)
             spec = TenantSpec(
                 name=shadow_name, program=program, backend=backend,
                 replicas=self.cfg.shadow_replicas,
                 max_queue=self.cfg.shadow_max_queue,
+                qos="best_effort",
                 dataset=cand.get("dataset"), sha256=cand["sha256"],
                 meta={"candidate": cand["name"]})
             comp = self.fleet.deploy_shadow(spec, of)

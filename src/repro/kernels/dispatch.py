@@ -31,6 +31,31 @@ from repro.core.circuits import NetlistPopulation
 BACKENDS = ("np", "swar", "pallas")
 
 
+def configure_worker_process(n_procs: int = 1) -> None:
+    """Cap math-library threading for a serve worker subprocess.
+
+    Must run *before* the first jax / BLAS import in the child: a fleet
+    spawning N worker processes on an M-core host wants each child's
+    intra-op thread pools sized ~M/N, not M — otherwise N children times
+    M threads oversubscribe the host and the per-dispatch latency the
+    deadline policy feeds on turns to noise.  `setdefault` keeps any
+    operator-provided caps; jax is left on its normal platform selection
+    (CPU on this container) and device counts are untouched, so worker
+    replicas still pin through `replica_devices` identically to in-process
+    ones.
+    """
+    import os
+
+    if n_procs < 1:
+        raise ValueError("n_procs must be >= 1")
+    cores = len(os.sched_getaffinity(0)) if hasattr(os, "sched_getaffinity") \
+        else (os.cpu_count() or 1)
+    per = str(max(1, cores // n_procs))
+    for var in ("OMP_NUM_THREADS", "OPENBLAS_NUM_THREADS",
+                "MKL_NUM_THREADS", "XLA_CPU_MULTI_THREAD_EIGEN_THREADS"):
+        os.environ.setdefault(var, per)
+
+
 def replica_devices(index: int, devices=None) -> tuple:
     """Round-robin device pin for serving-engine replica `index`.
 

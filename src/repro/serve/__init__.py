@@ -5,11 +5,15 @@ One package now holds every serving layer: the batched execution engine
 **replica pools** with least-loaded routing and per-replica device pins
 (`replicas.py`), the fleet router with deadline-driven micro-batching,
 queue-depth **admission control** and manifest **hot-reload**
-(`fleet.py` + `batcher.py`), and a real network front: a length-prefixed
-binary wire protocol with version-negotiated batch frames
-(`protocol.py`), a sharded asyncio socket server with optional
-connectionless UDP ingest (`server.py`) and a blocking client library
-with batched submits and client-side coalescing (`client.py`).
+(`fleet.py` + `batcher.py`), the fleet controller — QoS classes,
+per-tenant token-bucket rate limits, and a hysteresis replica
+autoscaler (`autoscale.py`) — **process-per-backend dispatch workers**
+fed over shared-memory reading planes (`workers.py`), and a real
+network front: a length-prefixed binary wire protocol with
+version-negotiated batch frames (`protocol.py`), a sharded asyncio
+socket server with optional connectionless UDP ingest (`server.py`)
+and a blocking client library with batched submits and client-side
+coalescing (`client.py`).
 
 In-process:
 
@@ -33,6 +37,13 @@ Over the wire:
         label = c.submit("tnn_cardio", reading).result(timeout=1.0)
         labels = c.classify("tnn_cardio", plane)   # SUBMIT_BATCH frames
 """
+from repro.serve.autoscale import (
+    QOS_CLASSES,
+    Autoscaler,
+    AutoscaleConfig,
+    TenantSignals,
+    TokenBucket,
+)
 from repro.serve.batcher import MicroBatcher, QueuedItem
 from repro.serve.engine import (
     STATS_WINDOW,
@@ -50,12 +61,16 @@ from repro.serve.fleet import (
     TenantSpec,
 )
 from repro.serve.replicas import EngineReplica, ReplicaPool
+from repro.serve.workers import WorkerError, WorkerHost
 
 __all__ = [
     "DEFAULT_DEADLINE_MS",
     "DEFAULT_MAX_BATCH",
     "FLEET_BACKENDS",
+    "QOS_CLASSES",
     "STATS_WINDOW",
+    "Autoscaler",
+    "AutoscaleConfig",
     "CircuitServingEngine",
     "ClassifierFleet",
     "EngineReplica",
@@ -66,5 +81,9 @@ __all__ = [
     "ReplicaPool",
     "SensorRequest",
     "ServeStats",
+    "TenantSignals",
     "TenantSpec",
+    "TokenBucket",
+    "WorkerError",
+    "WorkerHost",
 ]

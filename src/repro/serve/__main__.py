@@ -67,6 +67,31 @@ def _add_fleet_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--max-queue", type=int, default=None,
                     help="admission limit: shed submits beyond this queue "
                          "depth (default: never shed)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="process-per-backend dispatch workers: run N "
+                         "subprocesses per backend fed over shared-memory "
+                         "reading planes (default: dispatch in-process)")
+    ap.add_argument("--qos", default=None,
+                    help="QoS classes: one of guaranteed|best_effort for "
+                         "every tenant, or per-tenant pairs "
+                         "'tnn_cardio=guaranteed,tnn_redwine=best_effort'")
+    ap.add_argument("--rate-limit", default=None,
+                    help="token-bucket admission rate (readings/s): one "
+                         "float for every tenant, or per-tenant pairs "
+                         "'tnn_cardio=5000'")
+    ap.add_argument("--best-effort-backlog", type=int, default=None,
+                    help="shed best_effort submissions once their backend's "
+                         "total backlog (queued + in flight) reaches this")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="grow/shrink replica pools from shed/queue/cost "
+                         "pressure (bounds: --min-replicas/--max-replicas)")
+    ap.add_argument("--autoscale-interval", type=float, default=1.0,
+                    help="seconds between autoscaler rounds")
+    ap.add_argument("--min-replicas", type=int, default=None,
+                    help="autoscale floor per tenant (default 1)")
+    ap.add_argument("--max-replicas", type=int, default=None,
+                    help="autoscale ceiling per tenant (default: the "
+                         "tenant's initial replica count)")
 
 
 def _parse_args(argv=None) -> argparse.Namespace:
@@ -154,14 +179,43 @@ def _parse_backends(args) -> str | dict:
     return backends
 
 
+def _scalar_or_map(raw: str | None, cast):
+    """Parse 'value' or 'name=value,name=value' CLI spellings."""
+    if raw is None:
+        return None
+    if "=" not in raw:
+        return cast(raw)
+    out = {}
+    for pair in raw.split(","):
+        name, _, val = pair.strip().partition("=")
+        if not name or not val:
+            raise SystemExit(f"bad per-tenant entry {pair!r}; want "
+                             f"'tenant=value'")
+        out[name] = cast(val)
+    return out
+
+
 def _build_fleet(args, live: bool = True) -> ClassifierFleet:
     """`live=False` builds a reference-only fleet (the --connect client
     path: offline programs + tenant metadata, no warmup jit, no replica
     pools spun hot, no scheduler threads)."""
+    from repro.serve.autoscale import AutoscaleConfig
+
+    autoscale = (AutoscaleConfig() if live and getattr(args, "autoscale",
+                                                       False) else None)
     return ClassifierFleet.from_emit_dir(
         args.emit_dir, backends=_parse_backends(args),
         max_batch=args.max_batch, deadline_ms=args.deadline_ms,
         replicas=(args.replicas if live else 1), max_queue=args.max_queue,
+        qos=_scalar_or_map(getattr(args, "qos", None), str),
+        rate_limit_rps=_scalar_or_map(getattr(args, "rate_limit", None),
+                                      float),
+        min_replicas=getattr(args, "min_replicas", None),
+        max_replicas=getattr(args, "max_replicas", None),
+        workers=(getattr(args, "workers", None) if live else None),
+        best_effort_backlog=getattr(args, "best_effort_backlog", None),
+        autoscale=autoscale,
+        autoscale_interval_s=getattr(args, "autoscale_interval", 1.0),
         warmup=live, autostart=live)
 
 

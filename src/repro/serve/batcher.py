@@ -80,6 +80,11 @@ class MicroBatcher:
         where NaN rows fall back to the default — the v2 wire encoding.
         All rows share one `t_submit`, which is what "arrived as one
         frame" means to the flush policy.
+
+        Admission is all-or-nothing per frame: the entire deadline table
+        is validated before any entry is constructed, so a bad row late
+        in the frame cannot leave earlier rows materialized (let alone
+        enqueued) while the caller sees a ValueError.
         """
         default_s = self.default_deadline_ms * 1e-3
         if deadlines_ms is None:
@@ -88,15 +93,17 @@ class MicroBatcher:
             if len(deadlines_ms) != len(items):
                 raise ValueError(f"{len(deadlines_ms)} deadlines for "
                                  f"{len(items)} items")
-            entries = []
-            for item, d in zip(items, deadlines_ms):
+            budgets_s = []
+            for d in deadlines_ms:
                 d = float(d)
                 if d != d:                  # NaN -> tenant default
-                    entries.append(QueuedItem(item, now, default_s))
+                    budgets_s.append(default_s)
                 elif d <= 0:
                     raise ValueError("deadline budget must be positive")
                 else:
-                    entries.append(QueuedItem(item, now, d * 1e-3))
+                    budgets_s.append(d * 1e-3)
+            entries = [QueuedItem(item, now, b)
+                       for item, b in zip(items, budgets_s)]
         self._queue.extend(entries)
         return entries
 

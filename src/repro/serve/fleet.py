@@ -26,6 +26,29 @@ backlog and the tenant's dispatch-cost estimate — so overload shows up as
 explicit sheds (counted in `ServeStats.n_shed`) instead of silent SLO
 misses on accepted traffic.
 
+**QoS + rate limits**: tenants carry a QoS class — `guaranteed` sheds
+only on hard queue limits and is scheduled first among due tenants;
+`best_effort` additionally sheds whenever its backend's total backlog
+crosses the fleet's `best_effort_backlog` threshold, so under overload
+the best-effort tenants give way *before* guaranteed tenants start
+missing SLOs.  A per-tenant token bucket (`rate_limit_rps` +
+`rate_burst`) gates admission the same way, with `retry_after_ms` hints
+sized from the bucket's actual refill deficit.
+
+**Autoscaling**: pass an `AutoscaleConfig` and each tenant's replica
+pool is resized from its live signals — sustained sheds, queue-depth
+pressure, dispatch-cost EMA — under round-based hysteresis with
+`min_replicas`/`max_replicas` bounds from the spec (`serve/autoscale.py`
+is the pure decision law; `autoscale_tick()` applies it and is safe to
+drive from a test with a fake clock).  Shadow tenants are never scaled.
+
+**Worker processes**: with `workers=N`, dispatch leaves this process —
+each backend gets N spawned subprocesses holding their own engines, fed
+through a ring of shared-memory reading planes (`serve/workers.py`).
+Scheduling, admission, stats and completion all stay here; only
+`classify_batch` crosses the process boundary, so np/swar/pallas
+dispatch runs on real cores instead of sharing this process's GIL.
+
 **Hot reload**: a fleet built by `from_emit_dir` can `sync_manifest()` at
 any time — new manifest rows become tenants, rows whose generation
 counter moved are replaced (queued requests transfer to the successor
@@ -41,6 +64,7 @@ and over the wire by tests/test_serve_transport.py).
 """
 from __future__ import annotations
 
+import contextlib
 import math
 import threading
 import time
@@ -52,11 +76,14 @@ import numpy as np
 
 from repro.compile.artifact import load_manifest_doc, load_program
 from repro.compile.program import CircuitProgram
+from repro.serve.autoscale import (QOS_CLASSES, Autoscaler, AutoscaleConfig,
+                                   TenantSignals, TokenBucket)
 from repro.serve.batcher import MicroBatcher, QueuedItem
 from repro.serve.engine import (STATS_WINDOW, CircuitServingEngine,
                                 ServeStats)
-from repro.serve.replicas import EngineReplica, ReplicaPool
+from repro.serve.replicas import EngineReplica, ReplicaPool, make_replica
 from repro.serve.shadow import ShadowComparator
+from repro.serve.workers import WorkerHost
 
 FLEET_BACKENDS = ("np", "swar", "pallas")
 DEFAULT_DEADLINE_MS = 50.0
@@ -64,17 +91,24 @@ DEFAULT_MAX_BATCH = 256
 
 
 class FleetOverloadError(RuntimeError):
-    """Submission shed by admission control; retry after `retry_after_ms`."""
+    """Submission shed by admission control; retry after `retry_after_ms`.
 
-    def __init__(self, tenant: str, queue_depth: int, max_queue: int,
-                 retry_after_ms: float):
+    `reason` names which gate shed it: ``"queue"`` (the tenant's
+    `max_queue` depth limit), ``"rate"`` (its token bucket ran dry), or
+    ``"qos"`` (a best-effort tenant gave way to backend-wide backlog).
+    """
+
+    def __init__(self, tenant: str, queue_depth: int, max_queue: int | None,
+                 retry_after_ms: float, reason: str = "queue"):
         super().__init__(
-            f"tenant {tenant!r} is over capacity ({queue_depth} queued, "
-            f"limit {max_queue}); retry after {retry_after_ms:.1f} ms")
+            f"tenant {tenant!r} shed ({reason}: {queue_depth} queued"
+            + (f", limit {max_queue}" if max_queue is not None else "")
+            + f"); retry after {retry_after_ms:.1f} ms")
         self.tenant = tenant
         self.queue_depth = queue_depth
         self.max_queue = max_queue
         self.retry_after_ms = retry_after_ms
+        self.reason = reason
 
 
 @dataclass
@@ -147,6 +181,11 @@ class TenantSpec:
     dataset: str | None = None
     generation: int = 0                # manifest generation that emitted it
     sha256: str | None = None          # bundle digest the manifest recorded
+    qos: str = "guaranteed"            # guaranteed | best_effort
+    rate_limit_rps: float | None = None  # token-bucket admission rate
+    rate_burst: float | None = None    # bucket depth; default max(rate, batch)
+    min_replicas: int | None = None    # autoscale floor; default 1
+    max_replicas: int | None = None    # autoscale ceiling; default `replicas`
     meta: dict = field(default_factory=dict)
 
 
@@ -161,18 +200,35 @@ class _Tenant:
             raise ValueError("a tenant needs at least one replica")
         if spec.max_queue is not None and spec.max_queue < 1:
             raise ValueError("max_queue must be >= 1 (or None)")
+        if spec.qos not in QOS_CLASSES:
+            raise ValueError(f"unknown qos class {spec.qos!r}; "
+                             f"valid: {', '.join(QOS_CLASSES)}")
+        if spec.min_replicas is not None and spec.min_replicas < 1:
+            raise ValueError("min_replicas must be >= 1 (or None)")
+        if (spec.max_replicas is not None
+                and spec.max_replicas < max(1, spec.min_replicas or 1)):
+            raise ValueError("max_replicas must be >= min_replicas")
         self.spec = spec
         self.pool = ReplicaPool.from_program(spec.program, spec.replicas,
                                              spec.max_batch,
                                              stats_window=stats_window)
         self.batcher = MicroBatcher(spec.max_batch, spec.deadline_ms)
         self.stats = ServeStats(window=stats_window)
+        self.bucket: TokenBucket | None = None
+        if spec.rate_limit_rps is not None:
+            burst = (spec.rate_burst if spec.rate_burst is not None
+                     else max(spec.rate_limit_rps, spec.max_batch))
+            self.bucket = TokenBucket(spec.rate_limit_rps, burst)
         self.est_dispatch_s = 1e-3      # EMA of recent dispatch cost
         self.last_dispatch_s = 1e-3     # most recent (spike-sensitive)
         self.retiring = False           # drain, then drop from the worker
         self.from_manifest = False      # sync_manifest may retire it
         self.shadow_of: str | None = None      # incumbent it mirrors, if any
         self.comparator: ShadowComparator | None = None
+        self.worker_key: str | None = None     # set when dispatch is
+                                               # delegated to a WorkerHost
+        self._as_last_shed = 0          # autoscale_tick round deltas
+        self._as_last_requests = 0
 
     @property
     def name(self) -> str:
@@ -237,12 +293,21 @@ class _BackendWorker(threading.Thread):
             self.stop or self.kick or t.retiring
             or t.batcher.due(now, self._eta_s(t)))
 
+    @staticmethod
+    def _qos_rank(t: _Tenant) -> int:
+        """Scheduling priority among due tenants: guaranteed first, then
+        best-effort, then shadows (mirrored traffic never delays either)."""
+        if t.shadow_of is not None:
+            return 2
+        return 0 if t.spec.qos == "guaranteed" else 1
+
     def _pick(self, now: float) -> _Tenant | None:
         due = [t for t in self.tenants
                if self._due(t, now) and t.pool.has_idle()]
         if not due:
             return None
-        return min(due, key=lambda t: t.batcher.oldest_due_at)
+        return min(due, key=lambda t: (self._qos_rank(t),
+                                       t.batcher.oldest_due_at))
 
     def _wait_s(self, now: float) -> float | None:
         # tenants whose pool is saturated wake via the release notify, not
@@ -263,6 +328,8 @@ class _BackendWorker(threading.Thread):
                    if t.retiring and not len(t.batcher) and t.pool.idle()]
         if drained:
             self.tenants = [t for t in self.tenants if t not in drained]
+            for t in drained:       # free the worker procs' engines too
+                self.fleet._unload_worker_tenant(t)
             self.cond.notify_all()
 
     def run(self) -> None:
@@ -288,11 +355,15 @@ class _BackendWorker(threading.Thread):
 
     def _run_dispatch(self, tenant: _Tenant, replica: EngineReplica,
                       batch: list[QueuedItem]) -> None:
+        ok = False
         try:
-            self.fleet._dispatch(tenant, replica, batch)
+            ok = self.fleet._dispatch(tenant, replica, batch)
         finally:
             with self.cond:
-                tenant.pool.release(replica)
+                # a failed dispatch served nothing: credit the acquire-time
+                # readings charge back so routing doesn't treat the error
+                # as load this replica carried
+                tenant.pool.release(replica, n_readings=len(batch), ok=ok)
                 self.in_flight -= len(batch)
                 self._reap_retired()
                 self.cond.notify_all()
@@ -305,18 +376,33 @@ class ClassifierFleet:
                  stats_window: int = STATS_WINDOW,
                  safety_factor: float = 1.5, sched_slack_s: float = 5e-3,
                  warmup: bool = True, autostart: bool = True,
+                 workers: int | None = None,
+                 best_effort_backlog: int | None = None,
+                 autoscale: AutoscaleConfig | None = None,
+                 autoscale_interval_s: float = 1.0,
                  clock=time.perf_counter):
         if not specs:
             raise ValueError("a fleet needs at least one tenant")
         names = [s.name for s in specs]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tenant names: {sorted(names)}")
+        if workers is not None and workers < 1:
+            raise ValueError("workers must be >= 1 (or None for in-process)")
         self.stats = ServeStats(window=stats_window)
         self.stats_window = stats_window
         self.safety_factor = safety_factor
         self.sched_slack_s = sched_slack_s
         self.warmup_on_load = warmup
+        self.best_effort_backlog = best_effort_backlog
         self._clock = clock
+        self.workers = workers
+        self._worker_hosts: dict[str, WorkerHost] = {}  # backend -> host
+        self._worker_key_seq = 0
+        self._autoscaler = Autoscaler(autoscale) if autoscale else None
+        self._autoscale_interval_s = autoscale_interval_s
+        self._autoscale_stop = threading.Event()
+        self._autoscale_thread: threading.Thread | None = None
+        self._scale_events: list[dict] = []
         self._tenants: dict[str, _Tenant] = {
             s.name: self._build_tenant(s) for s in specs}
         by_backend: dict[str, list[_Tenant]] = {}
@@ -339,9 +425,38 @@ class ClassifierFleet:
         if autostart:
             self.start()
 
+    def _ensure_host(self, backend: str) -> WorkerHost:
+        host = self._worker_hosts.get(backend)
+        if host is None:
+            host = WorkerHost(backend, self.workers)
+            host.start()
+            self._worker_hosts[backend] = host
+        return host
+
+    def _unload_worker_tenant(self, t: _Tenant) -> None:
+        """Drop a reaped tenant's engines from its worker procs, if any."""
+        if t.worker_key is None:
+            return
+        host = self._worker_hosts.get(t.spec.backend)
+        if host is not None:
+            host.unload(t.worker_key)
+
     def _build_tenant(self, spec: TenantSpec) -> _Tenant:
         t = _Tenant(spec, self.stats_window)
-        if self.warmup_on_load:
+        if self.workers is not None:
+            # dispatch runs out-of-process: broadcast the program to the
+            # backend's worker procs (each holds its own engine + jit
+            # cache) under a generation-unique key, so a replaced tenant's
+            # in-flight batches still hit the *old* program until reaped
+            host = self._ensure_host(spec.backend)
+            self._worker_key_seq += 1
+            t.worker_key = f"{spec.name}#{self._worker_key_seq}"
+            host.load(t.worker_key, spec.program, spec.max_batch)
+            if self.warmup_on_load:
+                est = max(1e-4, host.warmup(t.worker_key))
+                t.est_dispatch_s = est
+                t.last_dispatch_s = est
+        elif self.warmup_on_load:
             # every replica: each is pinned to its own device, so each has
             # its own executable to compile — a cold replica would pay jit
             # inside its first deadline-bound batch
@@ -361,6 +476,10 @@ class ClassifierFleet:
                       tenants: list[str] | None = None,
                       replicas: int | dict[str, int] | None = None,
                       max_queue: int | None = None,
+                      qos: str | dict[str, str] | None = None,
+                      rate_limit_rps: float | dict[str, float] | None = None,
+                      min_replicas: int | None = None,
+                      max_replicas: int | None = None,
                       **kw) -> "ClassifierFleet":
         """Serve every artifact the emit dir's `fleet.json` manifest names.
 
@@ -368,14 +487,20 @@ class ClassifierFleet:
         `{tenant: backend}` map (missing names fall back to `swar`).
         `replicas` overrides the manifest's per-tenant replica hints the
         same way; `max_queue` arms admission control for every tenant.
-        The resulting fleet remembers the directory, so `sync_manifest()`
-        hot-reloads added/replaced/retired manifest rows later.
+        `qos` / `rate_limit_rps` follow the same scalar-or-map shape
+        (missing names fall back to `guaranteed` / unlimited), and
+        `min_replicas`/`max_replicas` bound the autoscaler for every
+        tenant.  The resulting fleet remembers the directory, so
+        `sync_manifest()` hot-reloads added/replaced/retired manifest
+        rows later.
         """
         emit_dir = Path(emit_dir)
         ctx = {"emit_dir": emit_dir, "backends": backends,
                "max_batch": max_batch, "deadline_ms": deadline_ms,
                "tenants": tenants, "replicas": replicas,
-               "max_queue": max_queue}
+               "max_queue": max_queue, "qos": qos,
+               "rate_limit_rps": rate_limit_rps,
+               "min_replicas": min_replicas, "max_replicas": max_replicas}
         doc = load_manifest_doc(emit_dir)
         rows = doc["tenants"]
         if tenants is not None:
@@ -409,13 +534,22 @@ class ClassifierFleet:
         program = load_program(ctx["emit_dir"] / row["program"],
                                backend=backend,
                                expect_sha256=row.get("sha256"))
+        qos_ctx = ctx.get("qos")
+        qos = (qos_ctx if isinstance(qos_ctx, str)
+               else (qos_ctx or {}).get(row["name"],
+                                        row.get("qos", "guaranteed")))
+        rate_ctx = ctx.get("rate_limit_rps")
+        rate = (rate_ctx if isinstance(rate_ctx, (int, float))
+                else (rate_ctx or {}).get(row["name"]))
         return TenantSpec(
             name=row["name"], program=program, backend=backend,
             max_batch=ctx["max_batch"], deadline_ms=ctx["deadline_ms"],
             replicas=max(1, n_replicas), max_queue=ctx["max_queue"],
             dataset=row.get("dataset"),
             generation=int(row.get("generation", 0)),
-            sha256=row.get("sha256"), meta=dict(row))
+            sha256=row.get("sha256"), qos=qos, rate_limit_rps=rate,
+            min_replicas=ctx.get("min_replicas"),
+            max_replicas=ctx.get("max_replicas"), meta=dict(row))
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> None:
@@ -423,6 +557,18 @@ class ClassifierFleet:
             self._started = True
             for w in self._workers.values():
                 w.start()
+            if self._autoscaler is not None and self._autoscale_interval_s > 0:
+                self._autoscale_thread = threading.Thread(
+                    target=self._autoscale_loop, name="fleet-autoscale",
+                    daemon=True)
+                self._autoscale_thread.start()
+
+    def _autoscale_loop(self) -> None:
+        while not self._autoscale_stop.wait(self._autoscale_interval_s):
+            try:
+                self.autoscale_tick()
+            except Exception as exc:    # noqa: BLE001 — keep the loop alive
+                self.errors.append(f"autoscale: {type(exc).__name__}: {exc}")
 
     def __enter__(self) -> "ClassifierFleet":
         self.start()
@@ -464,14 +610,29 @@ class ClassifierFleet:
         est = max(t.est_dispatch_s, t.last_dispatch_s, 1e-4)
         return max(1.0, batches_ahead * est * 1e3 / t.pool.size)
 
+    def _qos_shed(self, t: _Tenant, worker: _BackendWorker) -> bool:
+        """Should a best-effort submission give way right now?
+
+        True when the tenant is `best_effort`, the fleet has a
+        `best_effort_backlog` threshold, and the tenant's *backend* —
+        queued plus in-flight across every tenant pinned to it — is
+        already past that threshold.  Caller holds `worker.cond`.
+        """
+        return (t.spec.qos == "best_effort"
+                and self.best_effort_backlog is not None
+                and worker.queued() + worker.in_flight
+                >= self.best_effort_backlog)
+
     def submit(self, tenant: str, readings: np.ndarray,
                deadline_ms: float | None = None) -> FleetRequest:
         """Queue one reading for `tenant`; returns a completion handle.
 
         Raises `FleetOverloadError` (with a `retry_after_ms` hint) instead
-        of queueing when the tenant's `max_queue` admission limit is hit —
-        accepted requests keep meeting their deadlines, overload becomes
-        visible as sheds rather than SLO misses.
+        of queueing when an admission gate trips — the tenant's
+        `max_queue` depth limit, a best-effort tenant's backend backlog
+        threshold, or the tenant's token bucket — so accepted requests
+        keep meeting their deadlines and overload becomes visible as
+        sheds rather than SLO misses.
         """
         readings = np.asarray(readings, dtype=np.float64).reshape(-1)
         while True:
@@ -492,6 +653,22 @@ class ClassifierFleet:
                     self.stats.record_shed()
                     raise FleetOverloadError(tenant, depth, t.spec.max_queue,
                                              retry_ms)
+                if self._qos_shed(t, worker):
+                    retry_ms = self._retry_after_ms(t, depth)
+                    t.stats.record_shed()
+                    self.stats.record_shed()
+                    raise FleetOverloadError(tenant, depth, t.spec.max_queue,
+                                             retry_ms, reason="qos")
+                if t.bucket is not None:
+                    now = self._clock()
+                    if t.bucket.take_upto(1, now) < 1:
+                        retry_ms = max(1.0,
+                                       t.bucket.retry_after_s(1, now) * 1e3)
+                        t.stats.record_shed()
+                        self.stats.record_shed()
+                        raise FleetOverloadError(tenant, depth,
+                                                 t.spec.max_queue, retry_ms,
+                                                 reason="rate")
                 with self._uid_lock:
                     uid = self._next_uid
                     self._next_uid += 1
@@ -522,12 +699,20 @@ class ClassifierFleet:
         to `ReplicaPool` accounting).
 
         Admission is per-row: with `max_queue` armed, the head of the
-        frame is admitted up to the remaining queue room and the tail is
-        shed.  Returns ``(requests, shed_idx, retry_after_ms)`` — admitted
+        frame is admitted up to the remaining queue room — further capped
+        by the tenant's token-bucket grant when rate limits are armed,
+        and zeroed entirely for a best-effort tenant whose backend is
+        past the fleet's backlog threshold — and the tail is shed.
+        Returns ``(requests, shed_idx, retry_after_ms)`` — admitted
         requests in row order, the row indices that were shed, and the
         backoff hint for them (0.0 when nothing shed).  `deadlines_ms` is
         None, a scalar, or one value per row; NaN rows use the tenant's
         default budget.
+
+        A malformed deadline table (any non-positive finite row) rejects
+        the *whole* frame with ValueError before any row is admitted,
+        shed-counted, or assigned a uid — admission is all-or-nothing per
+        row, never torn mid-frame.
         """
         x = np.ascontiguousarray(np.asarray(readings, dtype=np.float64))
         if x.ndim == 1:
@@ -540,6 +725,13 @@ class ClassifierFleet:
         else:
             dls = np.broadcast_to(
                 np.asarray(deadlines_ms, dtype=np.float64), (B,))
+            bad = ~np.isnan(dls) & ~(dls > 0)    # catches <=0 and -inf
+            if bad.any():
+                rows = np.flatnonzero(bad)[:8].tolist()
+                raise ValueError(
+                    f"{tenant}: non-positive deadline_ms at rows {rows} — "
+                    f"frame rejected whole (deadline budget must be "
+                    f"positive)")
         while True:
             t = self._tenant(tenant)
             if x.shape[1] != t.engine.n_features:
@@ -556,13 +748,23 @@ class ClassifierFleet:
                     n_admit = B
                 else:
                     n_admit = max(0, min(B, t.spec.max_queue - depth))
+                retry_hint = 0.0
+                if n_admit and self._qos_shed(t, worker):
+                    n_admit = 0     # best-effort gives way wholesale
+                if n_admit and t.bucket is not None:
+                    now = self._clock()
+                    granted = t.bucket.take_upto(n_admit, now)
+                    if granted < n_admit:
+                        retry_hint = max(
+                            1.0, t.bucket.retry_after_s(1, now) * 1e3)
+                    n_admit = granted
                 n_shed = B - n_admit
                 if n_shed:
                     t.stats.record_shed(n_shed)
                     self.stats.record_shed(n_shed)
                 if n_admit == 0:
                     return ([], np.arange(B),
-                            self._retry_after_ms(t, depth))
+                            max(retry_hint, self._retry_after_ms(t, depth)))
                 with self._uid_lock:
                     uid0 = self._next_uid
                     self._next_uid += n_admit
@@ -586,7 +788,7 @@ class ClassifierFleet:
                 worker.cond.notify_all()
             self._mirror(tenant, reqs)   # admitted rows only; sheds are not
             shed_idx = np.arange(n_admit, B)     # real traffic to compare on
-            retry_ms = (self._retry_after_ms(t, depth + n_admit)
+            retry_ms = (max(retry_hint, self._retry_after_ms(t, depth + n_admit))
                         if n_shed else 0.0)
             return reqs, shed_idx, retry_ms
 
@@ -667,17 +869,26 @@ class ClassifierFleet:
         return np.stack([r.readings for r in reqs])
 
     def _dispatch(self, tenant: _Tenant, replica: EngineReplica,
-                  entries: list[QueuedItem]) -> None:
+                  entries: list[QueuedItem]) -> bool:
+        """Serve one popped batch; returns True iff it completed cleanly."""
         reqs: list[FleetRequest] = [e.item for e in entries]
         # a shadow's dispatches never touch fleet-level stats or the fleet
         # error log: mirrored traffic is an experiment riding alongside the
         # SLO-accounted serving path, and a broken candidate must show up
         # in its comparator, not in the fleet's health signals
         is_shadow = tenant.shadow_of is not None
+        host = (self._worker_hosts.get(tenant.spec.backend)
+                if tenant.worker_key is not None else None)
         try:
             x = self._gather_batch(reqs)
+            # the dispatch timing deliberately includes the worker-path IPC
+            # (slab copy + queue round-trip): it is the cost the deadline
+            # policy must budget for, not just device time
             t0 = self._clock()
-            labels = replica.engine.classify_batch(x)
+            if host is not None:
+                labels = host.eval(tenant.worker_key, x)
+            else:
+                labels = replica.engine.classify_batch(x)
             dt = self._clock() - t0
         except Exception as exc:        # complete exceptionally, never hang
             msg = f"{type(exc).__name__}: {exc}"
@@ -686,12 +897,17 @@ class ClassifierFleet:
             for r in reqs:
                 r.error = msg
                 r._complete()
-            return
+            return False
         tenant.est_dispatch_s = 0.7 * tenant.est_dispatch_s + 0.3 * dt
         tenant.last_dispatch_s = dt
         if not is_shadow:
             self.stats.record(len(reqs), dt)
         tenant.stats.record(len(reqs), dt)
+        if host is not None:
+            # keep the replica-level ledger honest in worker mode too:
+            # timing/labels came from the worker proc, but the attach path
+            # (label, latency, request stats) is identical
+            replica.engine.stats.record(len(reqs), dt)
         # FleetRequest carries the same completion fields as SensorRequest,
         # so the engine's label/latency attach is reused verbatim (request
         # stats land on the replica's engine; tenant + fleet get them here)
@@ -701,6 +917,7 @@ class ClassifierFleet:
                 self.stats.record_request(r.latency_ms, r.deadline_ms)
             tenant.stats.record_request(r.latency_ms, r.deadline_ms)
             r._complete()
+        return True
 
     # -- shadow deployment ---------------------------------------------------
     def deploy_shadow(self, spec: TenantSpec, of: str) -> ShadowComparator:
@@ -908,6 +1125,105 @@ class ClassifierFleet:
         self._manifest_generation = actions["generation"]
         return actions
 
+    # -- autoscaling ---------------------------------------------------------
+    def _tenant_signals(self) -> list[TenantSignals]:
+        """Snapshot every tenant's control signals (one round's input).
+
+        Each tenant is read under its backend's scheduler condition so
+        queue depth / inflight / shed counters are mutually consistent;
+        the per-round deltas are kept on the tenant so a tick sees only
+        what happened since the previous tick.
+        """
+        signals = []
+        live = list(self._tenants.values()) + list(self._shadows.values())
+        for t in live:
+            worker = self._worker_of(t)
+            with worker.cond:
+                s = t.stats.summary()
+                shed, nreq = s["n_shed"], s["n_requests"]
+                spec = t.spec
+                signals.append(TenantSignals(
+                    name=t.name,
+                    pool_size=t.pool.size,
+                    queue_depth=len(t.batcher),
+                    inflight=t.pool.total_inflight,
+                    shed_delta=shed - t._as_last_shed,
+                    request_delta=nreq - t._as_last_requests,
+                    est_dispatch_ms=max(t.est_dispatch_s,
+                                        t.last_dispatch_s) * 1e3,
+                    max_batch=spec.max_batch,
+                    max_queue=spec.max_queue,
+                    min_replicas=spec.min_replicas or 1,
+                    max_replicas=(spec.max_replicas
+                                  if spec.max_replicas is not None
+                                  else spec.replicas),
+                    is_shadow=t.shadow_of is not None))
+                t._as_last_shed = shed
+                t._as_last_requests = nreq
+        return signals
+
+    def autoscale_tick(self) -> list[dict]:
+        """One autoscaler round: observe signals, resize pools, log events.
+
+        Deterministic given the fleet's state — the background loop calls
+        it on a timer, and tests call it directly to step the controller a
+        bounded number of rounds with zero wall-clock dependence.  Returns
+        the applied actions (also appended to the bounded event log
+        surfaced by `stats_summary`).
+        """
+        if self._autoscaler is None:
+            return []
+        actions = self._autoscaler.observe(self._tenant_signals())
+        applied = []
+        for act in actions:
+            t = self._tenants.get(act.name)
+            if t is None or t.retiring:
+                continue        # retired/replaced between snapshot and apply
+            n = (self._grow_tenant(t, act.delta) if act.delta > 0
+                 else self._shrink_tenant(t))
+            if n:
+                applied.append({**act.as_dict(), "applied": n,
+                                "pool_size": t.pool.size})
+        if applied:
+            self._scale_events.extend(applied)
+            del self._scale_events[:-256]
+        return applied
+
+    def _grow_tenant(self, t: _Tenant, k: int) -> int:
+        """Add `k` replicas to `t`'s pool; engines are built (and warmed)
+        outside the scheduler lock so growth never stalls dispatch."""
+        worker = self._worker_of(t)
+        with worker.cond:
+            base = t.pool.next_index()
+        fresh = []
+        for i in range(k):
+            rep = make_replica(t.spec.program, base + i, t.spec.max_batch,
+                               stats_window=self.stats_window)
+            # in worker mode the subprocess engines are already warm; the
+            # fleet-side replica is only a concurrency token + ledger
+            if self.warmup_on_load and t.worker_key is None:
+                rep.engine.warmup()
+            fresh.append(rep)
+        with worker.cond:
+            if self._tenants.get(t.name) is not t or t.retiring:
+                return 0
+            for rep in fresh:
+                t.pool.grow(rep)
+            worker.cond.notify_all()    # saturated pickers may proceed now
+        return len(fresh)
+
+    def _shrink_tenant(self, t: _Tenant) -> int:
+        worker = self._worker_of(t)
+        with worker.cond:
+            if self._tenants.get(t.name) is not t or t.retiring:
+                return 0
+            dropped = t.pool.shrink_idle()
+        return 1 if dropped is not None else 0
+
+    @property
+    def autoscale_events(self) -> list[dict]:
+        return list(self._scale_events)
+
     # -- drain / shutdown ----------------------------------------------------
     def flush(self, timeout: float | None = 30.0) -> None:
         """Force-dispatch the whole backlog and wait until it is served.
@@ -945,6 +1261,9 @@ class ClassifierFleet:
             if self._shutdown:      # worker can be created+started after
                 return              # the flag flips
             self._shutdown = True
+        self._autoscale_stop.set()
+        if self._autoscale_thread is not None:
+            self._autoscale_thread.join(timeout=5.0)
         for w in self._workers.values():
             with w.cond:
                 if not drain:       # cancel the backlog deterministically
@@ -961,6 +1280,10 @@ class ClassifierFleet:
                 if w.is_alive():
                     raise TimeoutError(f"worker {w.name} did not stop "
                                        f"within {timeout}s")
+        # dispatch threads are parked; the worker procs have nothing in
+        # flight and can be torn down (slabs unlink here too)
+        for host in self._worker_hosts.values():
+            host.close()
 
     # -- observability -------------------------------------------------------
     def stats_summary(self) -> dict:
@@ -972,33 +1295,57 @@ class ClassifierFleet:
         exactly which emitted design is live without touching the emit
         dir.  Tenants with a live shadow get a `"shadow"` sub-dict with
         the comparator's running verdict evidence.
+
+        The snapshot is *consistent*: every backend's scheduler condition
+        is held (in one canonical order, so this cannot deadlock against
+        `replace_tenant`'s two-lock ordering) while the rows are read,
+        so a STATS frame served from a sharded accept loop can never
+        report a queue depth from mid-admission or a fleet shed total
+        that disagrees with the per-tenant sheds it sums over.
         """
-        tenants = {}
-        for name, t in sorted(self._tenants.items()):
-            row = {
-                "backend": t.spec.backend,
-                "max_batch": t.spec.max_batch,
-                "deadline_ms": t.spec.deadline_ms,
-                "max_queue": t.spec.max_queue,
-                "dataset": t.spec.dataset,
-                "generation": t.spec.generation,
-                "sha256": t.spec.sha256,
-                "pending": len(t.batcher),
-                "replicas": t.pool.summary(),
-                **t.stats.summary(),
-            }
-            sh = self._shadows.get(name)
-            if sh is not None:
-                row["shadow"] = {
-                    "name": sh.name,
-                    "backend": sh.spec.backend,
-                    "sha256": sh.spec.sha256,
-                    "pending": len(sh.batcher),
-                    **sh.comparator.summary(),
+        # snapshot the worker set first — admin ops may add workers, and
+        # new workers start with no tenants, so missing a *brand-new*
+        # backend only means its (empty) tenants appear next call
+        workers = sorted(self._workers.values(), key=id)
+        with contextlib.ExitStack() as stack:
+            for w in workers:
+                stack.enter_context(w.cond)
+            tenants = {}
+            for name, t in sorted(self._tenants.items()):
+                row = {
+                    "backend": t.spec.backend,
+                    "max_batch": t.spec.max_batch,
+                    "deadline_ms": t.spec.deadline_ms,
+                    "max_queue": t.spec.max_queue,
+                    "dataset": t.spec.dataset,
+                    "generation": t.spec.generation,
+                    "sha256": t.spec.sha256,
+                    "qos": t.spec.qos,
+                    "rate_limit_rps": t.spec.rate_limit_rps,
+                    "pool_size": t.pool.size,
+                    "pending": len(t.batcher),
+                    "replicas": t.pool.summary(),
+                    **t.stats.summary(),
                 }
-            tenants[name] = row
-        return {
-            "fleet": self.stats.summary(),
-            "manifest_generation": self._manifest_generation,
-            "tenants": tenants,
-        }
+                sh = self._shadows.get(name)
+                if sh is not None:
+                    row["shadow"] = {
+                        "name": sh.name,
+                        "backend": sh.spec.backend,
+                        "sha256": sh.spec.sha256,
+                        "pending": len(sh.batcher),
+                        **sh.comparator.summary(),
+                    }
+                tenants[name] = row
+            out = {
+                "fleet": self.stats.summary(),
+                "manifest_generation": self._manifest_generation,
+                "tenants": tenants,
+            }
+        if self._worker_hosts:
+            out["workers"] = {b: h.summary()
+                              for b, h in sorted(self._worker_hosts.items())}
+        if self._autoscaler is not None:
+            out["autoscale"] = {**self._autoscaler.summary(),
+                                "events": self.autoscale_events[-16:]}
+        return out

@@ -21,14 +21,47 @@ through the exact production code and pin the invariants:
   * **least-loaded** — among idle replicas the one with the fewest total
     dispatched readings wins (index breaks ties), so sustained load
     spreads over the whole pool and no replica starves;
-  * **conservation** — readings handed out equal readings accounted, and
-    `inflight` returns to zero once every dispatch is released.
+  * **conservation** — readings handed out equal readings accounted *for
+    dispatches that succeeded*: `release` takes the outcome and credits a
+    failed dispatch's readings back, so a replica whose dispatches error
+    does not look permanently loaded and least-loaded routing keeps it in
+    healthy rotation; `inflight` returns to zero once every dispatch is
+    released.
+
+The pool is also elastic: the autoscaler appends replicas with `grow`
+and retires idle ones with `shrink_idle` under the same caller-held
+lock, so pool size changes are just more bookkeeping on the identical
+pick policy.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
 from repro.serve.engine import STATS_WINDOW, CircuitServingEngine
+
+
+def make_replica(program, index: int, max_batch: int,
+                 stats_window: int = STATS_WINDOW) -> "EngineReplica":
+    """One fresh replica of `program` pinned to device slot `index`.
+
+    Shared by `ReplicaPool.from_program` (initial sizing) and the fleet's
+    autoscaler (incremental growth), so grown replicas get the identical
+    clone + device round-robin treatment as boot-time ones.
+    """
+    from repro.compile.program import CircuitProgram
+
+    devices = None
+    if program.backend != "np":
+        from repro.kernels.dispatch import replica_devices
+        devices = replica_devices(index)
+    prog = CircuitProgram(ir=program.ir, thresholds=program.thresholds,
+                          n_classes=program.n_classes,
+                          backend=program.backend, devices=devices)
+    return EngineReplica(
+        index=index,
+        engine=CircuitServingEngine(prog, max_batch,
+                                    stats_window=stats_window),
+        devices=devices)
 
 
 @dataclass
@@ -41,6 +74,7 @@ class EngineReplica:
     inflight: int = 0            # dispatches currently executing
     n_dispatches: int = 0        # total batches handed to this replica
     n_readings: int = 0          # total readings handed to this replica
+    n_errors: int = 0            # dispatches that ended in an error
     meta: dict = field(default_factory=dict)
 
     @property
@@ -54,6 +88,7 @@ class EngineReplica:
             "inflight": self.inflight,
             "n_dispatches": self.n_dispatches,
             "n_readings": self.n_readings,
+            "n_errors": self.n_errors,
             **{k: self.engine.stats.summary()[k]
                for k in ("busy_s", "readings_per_s", "p50_ms", "p99_ms")},
         }
@@ -78,25 +113,11 @@ class ReplicaPool:
         host and only the overlap (one GIL-releasing jit-free dispatch per
         replica thread) remains.
         """
-        from repro.compile.program import CircuitProgram
-
         if n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
-        replicas = []
-        for i in range(n_replicas):
-            devices = None
-            if program.backend != "np":
-                from repro.kernels.dispatch import replica_devices
-                devices = replica_devices(i)
-            prog = CircuitProgram(ir=program.ir, thresholds=program.thresholds,
-                                  n_classes=program.n_classes,
-                                  backend=program.backend, devices=devices)
-            replicas.append(EngineReplica(
-                index=i,
-                engine=CircuitServingEngine(prog, max_batch,
-                                            stats_window=stats_window),
-                devices=devices))
-        return cls(replicas)
+        return cls([make_replica(program, i, max_batch,
+                                 stats_window=stats_window)
+                    for i in range(n_replicas)])
 
     @property
     def size(self) -> int:
@@ -129,10 +150,50 @@ class ReplicaPool:
         pick.n_readings += n_readings
         return pick
 
-    def release(self, replica: EngineReplica) -> None:
+    def release(self, replica: EngineReplica, n_readings: int = 0,
+                ok: bool = True) -> None:
+        """Return a replica after its dispatch, reconciling the outcome.
+
+        A failed dispatch did no useful work: its `n_readings` charge
+        (made optimistically at `acquire` time) is credited back so the
+        least-loaded pick keeps routing *to* — not away from — a replica
+        that errored, instead of treating the failure as served load.
+        """
         if replica.inflight <= 0:
             raise ValueError(f"replica {replica.index} released while idle")
         replica.inflight -= 1
+        if not ok:
+            replica.n_errors += 1
+            replica.n_readings -= min(int(n_readings), replica.n_readings)
+
+    def grow(self, replica: EngineReplica) -> EngineReplica:
+        """Append an autoscaler-built replica (caller holds the lock)."""
+        self.replicas.append(replica)
+        return replica
+
+    def next_index(self) -> int:
+        """Device-slot index for the next grown replica.
+
+        Indices stay monotonic across shrink/grow cycles so device
+        pinning never doubles up with a still-live replica's slot.
+        """
+        return max(r.index for r in self.replicas) + 1
+
+    def shrink_idle(self) -> EngineReplica | None:
+        """Retire one idle replica (highest index first), if any.
+
+        Returns None — and the pool is untouched — when every replica is
+        mid-dispatch or the pool is already at one replica; the caller
+        (autoscaler tick) just retries on a later round.
+        """
+        if len(self.replicas) <= 1:
+            return None
+        idle = [r for r in self.replicas if r.inflight == 0]
+        if not idle:
+            return None
+        drop = max(idle, key=lambda r: r.index)
+        self.replicas.remove(drop)
+        return drop
 
     def summary(self) -> list[dict]:
         return [r.summary() for r in self.replicas]

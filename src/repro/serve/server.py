@@ -159,16 +159,22 @@ class FleetServer:
                 "dataset": t.spec.dataset,
                 "generation": t.spec.generation,
                 "sha256": t.spec.sha256,
+                "qos": t.spec.qos,
+                "rate_limit_rps": t.spec.rate_limit_rps,
                 "shadow": (self.fleet._shadows[name].name
                            if name in self.fleet._shadows else None),
             })
         return rows
 
     def _stats_doc(self) -> dict:
+        # stats_summary already carries the controller sections when armed:
+        # "workers" (per-backend subprocess hosts + slab ring) and
+        # "autoscale" (round counter + recent scale events)
         doc = self.fleet.stats_summary()
         doc["transport"] = {
             "shards": self.shards,
             "n_connections": self.n_connections,
+            "worker_procs": self.fleet.workers,
             "udp": (dict(self.udp_stats)
                     if self.udp_address is not None else None),
         }

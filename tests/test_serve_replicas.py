@@ -128,6 +128,41 @@ if _HAVE_HYPOTHESIS:
         assert sum(r.n_dispatches for r in pool.replicas) == n_acquired
 
     @settings(max_examples=N_EXAMPLES, deadline=None)
+    @given(st.integers(1, 4),
+           st.lists(st.tuples(st.booleans(),            # acquire vs release
+                              st.integers(1, 64),       # readings to charge
+                              st.booleans()),           # release outcome
+                    max_size=64))
+    def test_release_outcome_credits_failed_dispatch(n_replicas, ops):
+        """A failed dispatch did no useful work: releasing with ok=False
+        credits its exact `n_readings` charge back (so the least-loaded
+        pick keeps routing on *served* readings, not attempted ones) and
+        bumps `n_errors`; counters never go negative and inflight always
+        returns to zero."""
+        pool = _pool(n_replicas)
+        held = []                            # (replica, charge) FIFO
+        served = failures = 0
+        for is_acquire, n, ok in ops:
+            if is_acquire or not held:
+                rep = pool.acquire(n)
+                if rep is not None:
+                    held.append((rep, n))
+            else:
+                rep, charge = held.pop(0)
+                pool.release(rep, n_readings=charge, ok=ok)
+                if ok:
+                    served += charge
+                else:
+                    failures += 1
+            assert all(r.n_readings >= 0 for r in pool.replicas)
+        for rep, charge in held:
+            pool.release(rep, n_readings=charge, ok=True)
+            served += charge
+        assert pool.idle()
+        assert sum(r.n_readings for r in pool.replicas) == served
+        assert sum(r.n_errors for r in pool.replicas) == failures
+
+    @settings(max_examples=N_EXAMPLES, deadline=None)
     @given(st.integers(1, 5), st.integers(1, 60))
     def test_pool_no_starvation_under_sequential_load(n_replicas, rounds):
         """Sequential unit batches with immediate release: every replica's
