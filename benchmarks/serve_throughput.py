@@ -29,6 +29,14 @@ the per-dispatch IPC cost (slab copy + pickle + wakeup) is amortized over
 a whole frame, and every label is checked bit-identical against the
 offline reference.
 
+Megakernel section (`bench == "serve_megakernel"`): the same 4 tenants,
+all pinned to the pallas backend, replayed twice — per-tenant dispatch
+(one kernel launch per tenant batch) vs the fused multi-program
+megakernel (`megakernel=True`: every due tenant's circuit rides ONE
+`fleet_eval_words` launch per scheduler pass).  Labels are bit-checked
+against the offline reference both ways, and the megakernel rows record
+the fused launch count + the most tenants any single launch carried.
+
 QoS section (`bench == "serve_qos"`): a synthetic overload scenario — a
 guaranteed and a best-effort tenant share one deliberately slowed numpy
 backend while both are blasted with interleaved singles.  The committed
@@ -75,6 +83,11 @@ WORKER_TENANTS = (("cardio", "swar"), ("breast_cancer", "swar"),
                   ("redwine", "np"), ("whitewine", "np"))
 WORKER_PROCS = 2            # spawned worker processes per backend
 WORKER_FRAME = 2048         # readings per submit_many frame (IPC amortization)
+MEGAKERNEL_TENANTS = ("cardio", "breast_cancer", "redwine", "whitewine")
+MEGAKERNEL_FRAME = 1024     # readings per frame for the megakernel rows
+MEGAKERNEL_DEADLINE_MS = 2000.0   # interpret-mode pallas launches on this
+                                  # CPU container take ~1s; the row measures
+                                  # fusion economics, not a latency SLO
 QOS_DELAY_S = 0.005         # synthetic per-dispatch slowdown (overload)
 QOS_BACKLOG = 8             # best_effort_backlog for the overload row
 FLEET_DEADLINE_MS = 250.0   # above the full-speed replay's queueing delay
@@ -177,13 +190,60 @@ def _measure_fleet(n_readings: int) -> list[dict]:
     return _report_rows("serve_fleet", report, FLEET_DEADLINE_MS)
 
 
+def _frame_replay(fleet, streams: dict, frame: int,
+                  preload: bool = False) -> tuple[dict, float]:
+    """Feed each tenant whole `(frame, F)` frames through `submit_many`,
+    interleaved round-robin across tenants, wait for every handle, and
+    check every label bit-identical against the offline reference.
+    Returns (report, wall_seconds).
+
+    `preload=True` expects a fleet built with `autostart=False`: every
+    frame is queued before the scheduler starts, so the first tick sees
+    the whole manifest due at once — the steady-state shape the
+    megakernel rows are about (with the scheduler live during the feed,
+    frames dispatch one by one as they arrive and a fused launch rarely
+    carries more than the tenant that happened to be due)."""
+    frames = []
+    for name, x in streams.items():
+        for f, s in enumerate(range(0, x.shape[0], frame)):
+            frames.append((f, name, x[s:s + frame]))
+    frames.sort(key=lambda t: t[0])  # round-robin across tenants
+
+    pending = {name: [] for name in streams}
+    t0 = time.perf_counter()
+    for _, name, rows_ in frames:
+        reqs, shed, _ = fleet.submit_many(name, rows_)
+        assert shed.size == 0  # no admission limits armed here
+        pending[name].extend(reqs)
+    if preload:
+        fleet.start()
+    for reqs in pending.values():
+        for r in reqs:
+            r.result(timeout=600)
+    wall = time.perf_counter() - t0
+
+    report = {"tenants": {}}
+    ok_all = True
+    for name, reqs in pending.items():
+        labels = np.array([r.label for r in reqs], dtype=np.int32)
+        t = fleet._tenant(name)
+        ref = t.engine.program.predict(streams[name]).astype(np.int32)
+        match = bool(np.array_equal(labels, ref))
+        ok_all = ok_all and match
+        report["tenants"][name] = {
+            "backend": t.spec.backend,
+            "labels_match_offline": match,
+            **t.stats.summary()}
+    report["fleet"] = fleet.stats.summary()
+    report["labels_match_offline"] = ok_all
+    return report, wall
+
+
 def _measure_workers(n_readings: int) -> list[dict]:
     """4-tenant frame replay with dispatch in spawned worker processes.
 
-    Feeds each tenant whole `(WORKER_FRAME, F)` frames through `submit_many`,
-    interleaved round-robin across tenants, then waits for every handle.
-    Labels are checked bit-identical against the in-process offline
-    reference — the shared-memory hop must not change a single bit."""
+    The shared-memory hop must not change a single bit — every label is
+    checked against the in-process offline reference."""
     from repro.serve import ClassifierFleet, TenantSpec
 
     specs, streams = [], {}
@@ -200,43 +260,56 @@ def _measure_workers(n_readings: int) -> list[dict]:
 
     fleet = ClassifierFleet(specs, workers=WORKER_PROCS)
     try:
-        frames = []
-        for name, x in streams.items():
-            for f, s in enumerate(range(0, x.shape[0], WORKER_FRAME)):
-                frames.append((f, name, x[s:s + WORKER_FRAME]))
-        frames.sort(key=lambda t: t[0])  # round-robin across tenants
-
-        pending = {name: [] for name in streams}
-        t0 = time.perf_counter()
-        for _, name, rows_ in frames:
-            reqs, shed, _ = fleet.submit_many(name, rows_)
-            assert shed.size == 0  # no admission limits armed here
-            pending[name].extend(reqs)
-        for reqs in pending.values():
-            for r in reqs:
-                r.result(timeout=600)
-        wall = time.perf_counter() - t0
-
-        report = {"tenants": {}}
-        ok_all = True
-        for name, reqs in pending.items():
-            labels = np.array([r.label for r in reqs], dtype=np.int32)
-            t = fleet._tenant(name)
-            ref = t.engine.program.predict(streams[name]).astype(np.int32)
-            match = bool(np.array_equal(labels, ref))
-            ok_all = ok_all and match
-            report["tenants"][name] = {
-                "backend": t.spec.backend,
-                "labels_match_offline": match,
-                **t.stats.summary()}
-        report["fleet"] = fleet.stats.summary()
-        report["labels_match_offline"] = ok_all
+        report, wall = _frame_replay(fleet, streams, WORKER_FRAME)
         total = sum(x.shape[0] for x in streams.values())
     finally:
         fleet.shutdown(drain=True)
     return _report_rows("serve_workers", report, FLEET_DEADLINE_MS,
                         workers=WORKER_PROCS,
                         wall_readings_per_s=round(total / wall, 1))
+
+
+def _measure_megakernel(n_readings: int) -> list[dict]:
+    """serve_megakernel rows: the same 4-tenant pallas fleet replayed twice
+    — per-tenant dispatch (one kernel launch per tenant batch) vs the
+    fused multi-program megakernel (every due tenant in ONE launch per
+    scheduler pass).  Both runs check every label bit-identical against
+    the offline reference; the megakernel rows also record how many fused
+    launches the tick scheduler actually made and the most tenants any
+    single launch carried."""
+    from repro.serve import ClassifierFleet, TenantSpec
+
+    rows = []
+    for mode in ("per_tenant", "megakernel"):
+        specs, streams = [], {}
+        for i, dataset in enumerate(MEGAKERNEL_TENANTS):
+            ds, tnn = get_trained_tnn(dataset)
+            cc = lower_classifier(tnn, *exact_netlists(tnn))
+            name = f"tnn_{dataset}"
+            specs.append(TenantSpec(
+                name=name,
+                program=CircuitProgram.from_classifier(cc, backend="pallas"),
+                backend="pallas", max_batch=MEGAKERNEL_FRAME,
+                deadline_ms=MEGAKERNEL_DEADLINE_MS, dataset=dataset))
+            streams[name] = _stream(ds.x_test, n_readings, seed=i)
+        fleet = ClassifierFleet(specs, megakernel=(mode == "megakernel"),
+                                autostart=False)
+        try:
+            report, wall = _frame_replay(fleet, streams, MEGAKERNEL_FRAME,
+                                         preload=True)
+            total = sum(x.shape[0] for x in streams.values())
+            extra = {"mode": mode,
+                     "wall_readings_per_s": round(total / wall, 1)}
+            if mode == "megakernel":
+                mk = fleet.stats_summary()["megakernel"]
+                extra["megakernel_launches"] = mk["launches"]
+                extra["peak_tenants_per_launch"] = \
+                    mk["peak_tenants_per_launch"]
+        finally:
+            fleet.shutdown(drain=True)
+        rows.extend(_report_rows("serve_megakernel", report,
+                                 MEGAKERNEL_DEADLINE_MS, **extra))
+    return rows
 
 
 class _SlowProgram:
@@ -494,6 +567,7 @@ def run() -> list[dict]:
     n_fleet = 2048 if QUICK else 16384
     rows.extend(_measure_fleet(n_fleet))
     rows.extend(_measure_workers(n_fleet))
+    rows.extend(_measure_megakernel(n_fleet))
     rows.extend(_measure_qos())
     rows.extend(_measure_socket("serve_socket", n_fleet, SOCKET_BATCH))
     rows.extend(_measure_socket("serve_socket_unary",

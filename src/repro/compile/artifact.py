@@ -135,7 +135,8 @@ def verify_program_bundle(path: str | Path,
 
 def load_program(path: str | Path, backend: str = "jax",
                  devices: tuple | None = None,
-                 expect_sha256: str | None = None) -> CircuitProgram:
+                 expect_sha256: str | None = None,
+                 **program_kw) -> CircuitProgram:
     """Rebuild a classifier `CircuitProgram` from a `save_program` bundle.
 
     Validates the bundle against its sha256 sidecar first: a truncated or
@@ -171,7 +172,7 @@ def load_program(path: str | Path, backend: str = "jax",
     ir.to_netlist()   # validates feed-forwardness before anything executes
     return CircuitProgram(ir=ir, thresholds=thresholds,
                           n_classes=header["n_classes"], backend=backend,
-                          devices=devices)
+                          devices=devices, **program_kw)
 
 
 # -- fleet manifest ---------------------------------------------------------

@@ -45,6 +45,11 @@ class CircuitProgram:
     n_classes: int | None = None
     backend: str = "jax"
     devices: tuple | None = None
+    # Pallas tuning knobs (word-tile width / interpret-mode override);
+    # forwarded to the kernel on the pallas backend, ignored elsewhere so
+    # configs can set them unconditionally
+    pallas_block_words: int | None = None
+    pallas_interpret: bool | None = None
     _netlist: C.Netlist | None = field(default=None, repr=False)
     _jax_plan: tuple | None = field(default=None, repr=False)
 
@@ -66,15 +71,40 @@ class CircuitProgram:
     # -- construction -------------------------------------------------------
     @classmethod
     def from_netlist(cls, nl: C.Netlist, backend: str = "jax",
-                     devices: tuple | None = None) -> "CircuitProgram":
+                     devices: tuple | None = None, **kw) -> "CircuitProgram":
         """Compile a bare netlist (DCE + levelize) into a program."""
-        return cls(ir=lower_netlist(nl), backend=backend, devices=devices)
+        return cls(ir=lower_netlist(nl), backend=backend, devices=devices,
+                   **kw)
 
     @classmethod
     def from_classifier(cls, cc: CompiledClassifier, backend: str = "jax",
-                        devices: tuple | None = None) -> "CircuitProgram":
+                        devices: tuple | None = None,
+                        **kw) -> "CircuitProgram":
         return cls(ir=cc.ir, thresholds=cc.thresholds,
-                   n_classes=cc.n_classes, backend=backend, devices=devices)
+                   n_classes=cc.n_classes, backend=backend, devices=devices,
+                   **kw)
+
+    # -- plan access ---------------------------------------------------------
+    def plan(self) -> tuple:
+        """`(op, in0, in1, outputs, n_inputs)` flat plan arrays — the tuple
+        `kernels.dispatch.fleet_eval_words` eats, so a serving fleet can
+        pool many programs into one multi-tenant megakernel launch."""
+        return (self.ir.op.astype(np.int16), self.ir.in0.astype(np.int32),
+                self.ir.in1.astype(np.int32),
+                self.ir.outputs.astype(np.int32), self.ir.n_inputs)
+
+    def pack_input_bits(self, xbin: np.ndarray) -> np.ndarray:
+        """Binarized readings `(S, F)` -> packed `(F, ceil(S/32))` uint32
+        words (the megakernel's word-plane layout)."""
+        from repro.kernels import circuit_sim as CS
+        return np.asarray(CS.pack_bits32(np.asarray(xbin)), dtype=np.uint32)
+
+    def binarize(self, x: np.ndarray) -> np.ndarray:
+        """Raw readings `(S, F)` -> 0/1 uint8 via the compiled ABC
+        thresholds (strict `>`, same as `predict`)."""
+        if self.thresholds is None:
+            raise ValueError("program has no ABC thresholds")
+        return (np.asarray(x) > self.thresholds[None, :]).astype(np.uint8)
 
     # -- execution ----------------------------------------------------------
     def eval_uint(self, packed_u64: np.ndarray) -> np.ndarray:
@@ -99,7 +129,9 @@ class CircuitProgram:
         exec_backend = "swar" if self.backend == "jax" else self.backend
         out = D.program_eval_words(op, in0, in1, outs, words32,
                                    self.ir.n_inputs, backend=exec_backend,
-                                   devices=self.devices)
+                                   devices=self.devices,
+                                   block_words=self.pallas_block_words,
+                                   interpret=self.pallas_interpret)
         return np.asarray(out[0], dtype=np.int64)
 
     # -- classifier inference ----------------------------------------------

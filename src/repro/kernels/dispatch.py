@@ -84,14 +84,27 @@ def _device_slices(P: int, n_dev: int) -> list[slice]:
     return [slice(s, min(s + per, P)) for s in range(0, P, per)]
 
 
+def _pallas_kwargs(block_words, interpret) -> dict:
+    """Only non-default Pallas knobs, so jit static-arg caches stay warm."""
+    kw = {}
+    if block_words is not None:
+        kw["block_words"] = int(block_words)
+    if interpret is not None:
+        kw["interpret"] = bool(interpret)
+    return kw
+
+
 def _eval_device(op, in0, in1, outputs, packed_u64, n_inputs, backend,
-                 devices) -> np.ndarray:
+                 devices, block_words=None, interpret=None) -> np.ndarray:
     import jax
 
     from repro.kernels import circuit_sim as CS
     if backend == "pallas":
+        from functools import partial
+
         from repro.kernels import pallas_circuit_sim as PS
-        eval_fn = PS.population_eval_uint
+        eval_fn = partial(PS.population_eval_uint,
+                          **_pallas_kwargs(block_words, interpret))
     else:
         eval_fn = CS.population_eval_uint
     words32 = CS.pack_words32(packed_u64)
@@ -113,12 +126,18 @@ def _eval_device(op, in0, in1, outputs, packed_u64, n_inputs, backend,
 def population_eval_uint(op: np.ndarray, in0: np.ndarray, in1: np.ndarray,
                          outputs: np.ndarray, packed_u64: np.ndarray,
                          n_inputs: int, backend: str = "swar",
-                         devices=None) -> np.ndarray:
+                         devices=None, block_words=None,
+                         interpret=None) -> np.ndarray:
     """Per-vector decoded outputs `(P, S)` for a population of netlists.
 
     `packed_u64` is `(n_inputs, W)` shared or `(P, n_inputs, W)`
     per-individual uint64 words; every backend returns the same integers
     for the same words (rows are `Netlist.eval_uint` of the row's genome).
+
+    `block_words` / `interpret` are Pallas tuning knobs (word-tile width
+    and interpret-mode override) forwarded to
+    `pallas_circuit_sim.population_eval_uint`; the other backends ignore
+    them, so campaign/tenant configs can set them unconditionally.
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown eval backend {backend!r}; "
@@ -133,21 +152,26 @@ def population_eval_uint(op: np.ndarray, in0: np.ndarray, in1: np.ndarray,
     return _eval_device(op32, np.asarray(in0, dtype=np.int32),
                         np.asarray(in1, dtype=np.int32),
                         np.asarray(outputs, dtype=np.int32),
-                        packed_u64, n_inputs, backend, devices).astype(np.int64)
+                        packed_u64, n_inputs, backend, devices,
+                        block_words=block_words,
+                        interpret=interpret).astype(np.int64)
 
 
 def population_eval_pop(pop: NetlistPopulation, packed_u64: np.ndarray,
-                        backend: str = "swar", devices=None) -> np.ndarray:
+                        backend: str = "swar", devices=None,
+                        block_words=None, interpret=None) -> np.ndarray:
     """`population_eval_uint` over an existing `NetlistPopulation`."""
     return population_eval_uint(pop.op, pop.in0, pop.in1, pop.outputs,
                                 packed_u64, pop.n_inputs, backend=backend,
-                                devices=devices)
+                                devices=devices, block_words=block_words,
+                                interpret=interpret)
 
 
 def program_eval_words(op: np.ndarray, in0: np.ndarray, in1: np.ndarray,
                        outputs: np.ndarray, words32: np.ndarray,
                        n_inputs: int, backend: str = "swar",
-                       devices=None) -> np.ndarray:
+                       devices=None, block_words=None,
+                       interpret=None) -> np.ndarray:
     """Single-program serving dispatch: `(n_inputs, W)` uint32 words ->
     `(P, W*32)` int64 decoded outputs, on any backend.
 
@@ -169,13 +193,18 @@ def program_eval_words(op: np.ndarray, in0: np.ndarray, in1: np.ndarray,
         raise ValueError("program_eval_words wants a shared (n_inputs, W) "
                          "word plane")
     if backend == "np":
-        # repack the uint32 lanes as the uint64 words the reference eats
-        # (inverse of pack_words32: little-endian lane pairs)
+        # repack the uint32 lanes as the uint64 words the reference eats —
+        # the inverse of pack_words32, whose contract is that lane 2k holds
+        # the LOW 32 bits of word k and lane 2k+1 the high 32.  A
+        # `.view(np.uint64)` only honours that on little-endian hosts, so
+        # combine the lanes arithmetically instead of reinterpreting bytes.
         W32 = words32.shape[1]
         if W32 % 2:
             words32 = np.concatenate(
                 [words32, np.zeros((words32.shape[0], 1), np.uint32)], axis=1)
-        packed_u64 = np.ascontiguousarray(words32).view(np.uint64)
+        lo = words32[:, 0::2].astype(np.uint64)
+        hi = words32[:, 1::2].astype(np.uint64)
+        packed_u64 = np.ascontiguousarray(lo | (hi << np.uint64(32)))
         pop = NetlistPopulation(n_inputs, np.asarray(op, dtype=np.int16),
                                 np.asarray(in0, dtype=np.int32),
                                 np.asarray(in1, dtype=np.int32),
@@ -186,8 +215,11 @@ def program_eval_words(op: np.ndarray, in0: np.ndarray, in1: np.ndarray,
 
     from repro.kernels import circuit_sim as CS
     if backend == "pallas":
+        from functools import partial
+
         from repro.kernels import pallas_circuit_sim as PS
-        eval_fn = PS.population_eval_uint
+        eval_fn = partial(PS.population_eval_uint,
+                          **_pallas_kwargs(block_words, interpret))
     else:
         eval_fn = CS.population_eval_uint
     plan = (np.asarray(op, dtype=np.int32), np.asarray(in0, dtype=np.int32),
@@ -209,6 +241,41 @@ def program_eval_words(op: np.ndarray, in0: np.ndarray, in1: np.ndarray,
         outs.append(np.asarray(eval_fn(*plan, shard, n_inputs)))
     out = np.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
     return out.astype(np.int64)
+
+
+def fleet_eval_words(plans: list, words_list: list, backend: str = "pallas",
+                     block_words=None, interpret=None) -> list[np.ndarray]:
+    """Whole-manifest serving dispatch: T tenants' circuits in ONE launch.
+
+    `plans` holds one `(op, in0, in1, outputs, n_inputs)` plan tuple per
+    tenant (P=1 rows or flat 1-D arrays both accepted) and `words_list`
+    the matching `(n_inputs_t, W_t)` uint32 word planes.  On the
+    ``pallas`` backend this pads every tenant's gate-op/ANF-mask tables
+    to a common gate budget and runs the multi-program megakernel —
+    grid over (tenant x word-tile), one `pallas_call` for the manifest.
+    ``np``/``swar`` fall back to per-tenant `program_eval_words` loops
+    (same answers, T launches), so callers can flip backends freely.
+
+    Returns one `(W_t * 32,)` int64 decoded-label array per tenant,
+    bit-identical to dispatching each tenant through
+    `program_eval_words` on its own.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown eval backend {backend!r}; "
+                         f"valid: {', '.join(BACKENDS)}")
+    if backend == "pallas":
+        from repro.kernels import pallas_circuit_sim as PS
+        outs = PS.fleet_eval_words(plans, words_list,
+                                   **_pallas_kwargs(block_words, interpret))
+        return [np.asarray(o, dtype=np.int64) for o in outs]
+    outs = []
+    for (op, in0, in1, outputs, n_in), w in zip(plans, words_list):
+        out = program_eval_words(
+            np.asarray(op).reshape(1, -1), np.asarray(in0).reshape(1, -1),
+            np.asarray(in1).reshape(1, -1),
+            np.asarray(outputs).reshape(1, -1), w, n_in, backend=backend)
+        outs.append(np.asarray(out[0], dtype=np.int64))
+    return outs
 
 
 def population_pc_errors(pop: NetlistPopulation, packed_u64: np.ndarray,

@@ -1,25 +1,47 @@
-"""Pallas kernel: population-parallel gate-level circuit simulation.
+"""Pallas kernels: population-parallel gate-level circuit simulation.
 
 The campaign hot loop — (population of genomes) x (packed test words) —
-as a real Pallas kernel instead of the `lax.scan` SWAR twin in
-`kernels/circuit_sim.py`.  Grid is (population, word tiles): each program
-instance owns one individual's plan row and one `block_words`-wide slab of
-packed uint32 test words, walks the gate columns with a `fori_loop` over a
-VMEM value plane of shape (n_inputs + n_gates, block_words), and writes that
-individual's output words.  Gates apply through the same algebraic normal
-form r = m0 ^ (ma & a) ^ (mb & b) ^ (mab & (a & b)) as both existing
-evaluators, with the per-gate coefficient masks precomputed on the host —
-the kernel body is branch-free regardless of opcode mix.
+as real Pallas kernels instead of the `lax.scan` SWAR twin in
+`kernels/circuit_sim.py`.  Three entry points share one kernel body:
 
-Bit-compatibility contract (pinned by tests/test_conformance.py): identical
-output words to `NetlistPopulation.simulate` (lane-split via `pack_words32`)
-and to `circuit_sim.simulate_population`, for both shared `(n_inputs, W)`
-and per-individual `(P, n_inputs, W)` word planes.
+  * `simulate_population` — output *words* `(P, n_out, W)`, the
+    conformance-suite surface (bit-identical to both host evaluators);
+  * `fused_eval_uint` — the **fused megakernel**: gate walk, output-word
+    extraction and LSB-first integer decode in ONE `pallas_call`.  The
+    value plane never leaves VMEM and the per-output-bit `(P, W, 32)`
+    planes the old two-stage path materialized in HBM are gone — each
+    grid cell writes its decoded int32 tile directly;
+  * `fleet_eval_words` — the **multi-program megakernel**: T tenants'
+    plan tables padded to a common gate budget and paged into VMEM, grid
+    over (tenant x word-tile), so a serving fleet evaluates its whole
+    manifest in one launch instead of per-tenant batches.
 
-On TPU the plan rows stay resident in VMEM and the word axis streams through
-the grid; off-TPU the kernel runs in interpret mode (the repo-wide dispatch
-policy, cf. `kernels/ops.py`), which is slower than the SWAR scan on CPU but
-exercises the exact kernel program the accelerator runs.
+Grid layout for the fused kernel is (population tiles, word tiles): each
+program instance owns a `block_pop`-row slab of plan tables and a
+`block_words`-wide slab of packed uint32 test words, walks the gate
+columns with a `fori_loop` over a VMEM-resident value plane of shape
+`(block_pop, n_inputs + n_gates, block_words)`, and writes that tile's
+decoded integers.  Word tiles stream through the grid — Pallas
+double-buffers the per-tile DMA behind the gate walk automatically, so
+HBM traffic for the word plane overlaps compute.  Gates apply through the
+same algebraic normal form r = m0 ^ (ma & a) ^ (mb & b) ^ (mab & (a & b))
+as both existing evaluators, with the per-gate coefficient masks
+precomputed on the host — the kernel body is branch-free regardless of
+opcode mix.
+
+Bit-compatibility contract (pinned by tests/test_conformance.py):
+identical output words to `NetlistPopulation.simulate` (lane-split via
+`pack_words32`) and to `circuit_sim.simulate_population`, for both shared
+`(n_inputs, W)` and per-individual `(P, n_inputs, W)` word planes; the
+fused decode matches `circuit_sim.population_eval_uint` integer for
+integer, and the fleet kernel matches per-tenant dispatch on every
+tenant regardless of gate-count/feature-count/output-width skew
+(padding must never leak into outputs).
+
+On TPU the plan rows stay resident in VMEM and the word axis streams
+through the grid; off-TPU the kernels run in interpret mode (the
+repo-wide dispatch policy, cf. `kernels/ops.py`), where the population
+tiling keeps the XLA program shape close to the SWAR scan.
 """
 from __future__ import annotations
 
@@ -35,10 +57,22 @@ from repro.kernels.circuit_sim import (_C0_TBL, _CA_TBL, _CAB_TBL, _CB_TBL,
                                        _U32)
 
 DEFAULT_BLOCK_WORDS = 128
+DEFAULT_BLOCK_POP = 8
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _pad_gateless(op, in0, in1):
+    """Zero-size blocks are illegal in pallas_call — pad gateless plans
+    with one dead CONST0 gate (node n_inputs, unreachable by outputs)."""
+    from repro.hw.egfet import Gate
+    P = op.shape[0]
+    op = np.full((P, 1), int(Gate.CONST0), dtype=np.int16)
+    in0 = np.zeros((P, 1), dtype=np.int32)
+    in1 = np.zeros((P, 1), dtype=np.int32)
+    return op, in0, in1
 
 
 def _kernel(in0_ref, in1_ref, m0_ref, ma_ref, mb_ref, mab_ref, out_idx_ref,
@@ -108,14 +142,16 @@ def simulate_population(op, in0, in1, outputs, words32, n_inputs: int, *,
     if interpret is None:
         interpret = not _on_tpu()
     op = np.asarray(op)
+    P = op.shape[0]
+    n_out = np.asarray(outputs).shape[1]
+    W = np.asarray(words32).shape[-1]
+    if W == 0:
+        # a zero-width word plane has nothing to simulate — mirror the
+        # gateless-plan pad guard instead of handing pallas_call a
+        # zero-size grid/block (which it rejects)
+        return jnp.zeros((P, n_out, 0), dtype=jnp.uint32)
     if op.shape[1] == 0:
-        # zero-size blocks are illegal in pallas_call — pad gateless plans
-        # with one dead CONST0 gate (node n_inputs, unreachable by outputs)
-        from repro.hw.egfet import Gate
-        P = op.shape[0]
-        op = np.full((P, 1), int(Gate.CONST0), dtype=np.int16)
-        in0 = np.zeros((P, 1), dtype=np.int32)
-        in1 = np.zeros((P, 1), dtype=np.int32)
+        op, in0, in1 = _pad_gateless(op, in0, in1)
     m0 = _C0_TBL[op]                   # (P, G) uint32 ANF masks
     ma = _CA_TBL[op]
     mb = _CB_TBL[op]
@@ -124,7 +160,6 @@ def simulate_population(op, in0, in1, outputs, words32, n_inputs: int, *,
     in1 = jnp.asarray(np.asarray(in1, dtype=np.int32))
     outputs = jnp.asarray(np.asarray(outputs, dtype=np.int32))
     words32 = jnp.asarray(words32, dtype=jnp.uint32)
-    W = words32.shape[-1]
     bw = min(block_words, max(W, 1))
     pad = (-W) % bw
     if pad:
@@ -138,16 +173,217 @@ def simulate_population(op, in0, in1, outputs, words32, n_inputs: int, *,
     return out[:, :, :W]
 
 
-def population_eval_uint(op, in0, in1, outputs, words32, n_inputs: int, *,
-                         block_words: int = DEFAULT_BLOCK_WORDS,
-                         interpret: bool | None = None) -> jax.Array:
-    """Decode output words (LSB-first) into per-vector ints: (P, W*32) int32."""
-    outw = simulate_population(op, in0, in1, outputs, words32, n_inputs,
-                               block_words=block_words, interpret=interpret)
-    P, n_out, W = outw.shape
+# ---------------------------------------------------------------------------
+# Fused megakernel: gate walk + output extraction + LSB-first decode in one
+# pallas_call.  Grid is (population tiles, word tiles); the value plane for
+# a (block_pop, block_words) tile lives in VMEM for the whole gate walk and
+# the decoded int32 tile is written directly — no (P, n_out, W) word plane
+# and no per-output-bit (P, W, 32) planes ever reach HBM.
+# ---------------------------------------------------------------------------
+def _fused_kernel(in0_ref, in1_ref, m0_ref, ma_ref, mb_ref, mab_ref,
+                  out_idx_ref, words_ref, out_ref, *, n_inputs: int,
+                  n_gates: int, n_out: int, block_pop: int, shared: bool):
+    bp = block_pop
+    w = words_ref[...]                      # (n_inputs, bw) | (bp, n_in, bw)
+    bw = w.shape[-1]
+    inw = (jnp.broadcast_to(w.reshape(1, n_inputs, bw), (bp, n_inputs, bw))
+           if shared else w.reshape(bp, n_inputs, bw))
+    vals = jnp.zeros((bp, n_inputs + n_gates, bw), dtype=_U32)
+    vals = jax.lax.dynamic_update_slice_in_dim(vals, inw, 0, axis=1)
+
+    def body(g, vals):
+        i0 = in0_ref[:, pl.ds(g, 1)]        # (bp, 1) per-individual taps
+        i1 = in1_ref[:, pl.ds(g, 1)]
+        a = jnp.take_along_axis(vals, i0[:, :, None], axis=1)[:, 0]
+        b = jnp.take_along_axis(vals, i1[:, :, None], axis=1)[:, 0]
+        r = (m0_ref[:, pl.ds(g, 1)] ^ (ma_ref[:, pl.ds(g, 1)] & a)
+             ^ (mb_ref[:, pl.ds(g, 1)] & b)
+             ^ (mab_ref[:, pl.ds(g, 1)] & (a & b)))
+        return jax.lax.dynamic_update_slice_in_dim(
+            vals, r[:, None, :], n_inputs + g, axis=1)
+
+    if n_gates:
+        vals = jax.lax.fori_loop(0, n_gates, body, vals)
+    outs = out_idx_ref[...]                 # (bp, n_out)
+    outw = jnp.take_along_axis(vals, outs[:, :, None], axis=1)
+    # LSB-first decode, fused: vector s of word w is bit (s % 32), so the
+    # (bp, bw, 32) bit cube reshapes straight into the per-vector ints
     shifts = jnp.arange(32, dtype=_U32)
-    acc = jnp.zeros((P, W, 32), dtype=jnp.int32)
-    for o in range(n_out):
+    acc = jnp.zeros((bp, bw, 32), dtype=jnp.int32)
+    for o in range(n_out):                  # n_out is static and small
         bits = ((outw[:, o, :, None] >> shifts) & _U32(1)).astype(jnp.int32)
         acc = acc + (bits << o)
-    return acc.reshape(P, W * 32)
+    out_ref[...] = acc.reshape(bp, bw * 32)
+
+
+@partial(jax.jit, static_argnames=("n_inputs", "block_words", "block_pop",
+                                   "interpret"))
+def _fused_padded(in0, in1, m0, ma, mb, mab, outputs, words32, *,
+                  n_inputs: int, block_words: int, block_pop: int,
+                  interpret: bool):
+    Pp, G = in0.shape
+    n_out = outputs.shape[1]
+    Wp = words32.shape[-1]
+    shared = words32.ndim == 2
+    bp, bw = block_pop, block_words
+    grid = (Pp // bp, Wp // bw)
+    words_spec = (pl.BlockSpec((n_inputs, bw), lambda p, w: (0, w))
+                  if shared else
+                  pl.BlockSpec((bp, n_inputs, bw), lambda p, w: (p, 0, w)))
+    plan_spec = pl.BlockSpec((bp, G), lambda p, w: (p, 0))
+    return pl.pallas_call(
+        partial(_fused_kernel, n_inputs=n_inputs, n_gates=G, n_out=n_out,
+                block_pop=bp, shared=shared),
+        grid=grid,
+        in_specs=[plan_spec, plan_spec, plan_spec, plan_spec, plan_spec,
+                  plan_spec,
+                  pl.BlockSpec((bp, n_out), lambda p, w: (p, 0)),
+                  words_spec],
+        out_specs=pl.BlockSpec((bp, bw * 32), lambda p, w: (p, w)),
+        out_shape=jax.ShapeDtypeStruct((Pp, Wp * 32), jnp.int32),
+        interpret=interpret,
+    )(in0, in1, m0, ma, mb, mab, outputs, words32)
+
+
+def fused_eval_uint(op, in0, in1, outputs, words32, n_inputs: int, *,
+                    block_words: int | None = None,
+                    block_pop: int | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """Fused gate-walk + decode: `(P, W*32)` int32 in one `pallas_call`.
+
+    Bit-identical to `circuit_sim.population_eval_uint` (and therefore to
+    decoding `simulate_population`'s words on the host), for shared and
+    per-individual word planes.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    if block_words is None:
+        block_words = DEFAULT_BLOCK_WORDS
+    op = np.asarray(op)
+    P = op.shape[0]
+    W = np.asarray(words32).shape[-1]
+    if W == 0:
+        return jnp.zeros((P, 0), dtype=jnp.int32)
+    if op.shape[1] == 0:
+        op, in0, in1 = _pad_gateless(op, in0, in1)
+    m0 = _C0_TBL[op]
+    ma = _CA_TBL[op]
+    mb = _CB_TBL[op]
+    mab = _CAB_TBL[op]
+    in0 = np.asarray(in0, dtype=np.int32)
+    in1 = np.asarray(in1, dtype=np.int32)
+    outputs = np.asarray(outputs, dtype=np.int32)
+    words32 = jnp.asarray(words32, dtype=jnp.uint32)
+    bp = min(block_pop if block_pop is not None else DEFAULT_BLOCK_POP,
+             max(P, 1))
+    bw = min(block_words, max(W, 1))
+    wpad = (-W) % bw
+    if wpad:
+        pad_width = ([(0, 0), (0, wpad)] if words32.ndim == 2
+                     else [(0, 0), (0, 0), (0, wpad)])
+        words32 = jnp.pad(words32, pad_width)
+    ppad = (-P) % bp
+    if ppad:
+        # pad plan rows with copies of row 0 — cheap, always well-formed,
+        # and the padded rows are sliced off below
+        idx = np.concatenate([np.arange(P), np.zeros(ppad, dtype=np.int64)])
+        in0, in1 = in0[idx], in1[idx]
+        m0, ma, mb, mab = m0[idx], ma[idx], mb[idx], mab[idx]
+        outputs = outputs[idx]
+        if words32.ndim == 3:
+            words32 = jnp.concatenate(
+                [words32, jnp.repeat(words32[:1], ppad, axis=0)], axis=0)
+    out = _fused_padded(jnp.asarray(in0), jnp.asarray(in1), jnp.asarray(m0),
+                        jnp.asarray(ma), jnp.asarray(mb), jnp.asarray(mab),
+                        jnp.asarray(outputs), words32, n_inputs=n_inputs,
+                        block_words=bw, block_pop=bp, interpret=interpret)
+    return out[:P, : W * 32]
+
+
+def population_eval_uint(op, in0, in1, outputs, words32, n_inputs: int, *,
+                         block_words: int | None = None,
+                         block_pop: int | None = None,
+                         interpret: bool | None = None) -> jax.Array:
+    """Decode output words (LSB-first) into per-vector ints: (P, W*32) int32.
+
+    Routed through the fused megakernel — one launch, no intermediate
+    output-word plane (the old two-stage path built an extra `(P, W, 32)`
+    plane per output bit on the host side of the kernel).
+    """
+    return fused_eval_uint(op, in0, in1, outputs, words32, n_inputs,
+                           block_words=block_words, block_pop=block_pop,
+                           interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Multi-program megakernel: T tenants' plans padded to one gate budget,
+# grid over (tenant x word-tile), one launch for the whole manifest.
+# ---------------------------------------------------------------------------
+def fleet_eval_words(plans, words_list, *, block_words: int | None = None,
+                     interpret: bool | None = None) -> list[np.ndarray]:
+    """Evaluate T single-program circuits over T word planes in ONE launch.
+
+    `plans` is a list of `(op, in0, in1, outputs, n_inputs)` tuples —
+    each a single program's plan (arrays may be `(G,)`/`(n_out,)` 1-D or
+    `(1, G)`/`(1, n_out)` rows); `words_list` holds each tenant's packed
+    `(n_inputs_t, W_t)` uint32 word plane.  Plans are padded to a common
+    gate budget and feature count (node indices remapped so gate nodes
+    land after the padded input rows), every tenant gets one trailing
+    CONST0 pad gate, and padded output taps point at that known-zero node
+    — so neither the gate-budget pad, the feature pad, the word pad nor
+    the output pad can leak into any tenant's decoded integers.  Returns
+    one `(W_t * 32,)` int32 array per tenant, bit-identical to running
+    each plan through `fused_eval_uint` on its own.
+    """
+    from repro.hw.egfet import Gate
+
+    if not plans:
+        return []
+    if len(plans) != len(words_list):
+        raise ValueError(f"{len(plans)} plans but {len(words_list)} word "
+                         "planes")
+    norm = []
+    for i, (op, in0, in1, outputs, n_in) in enumerate(plans):
+        op = np.asarray(op, dtype=np.int16).reshape(-1)
+        in0 = np.asarray(in0, dtype=np.int32).reshape(-1)
+        in1 = np.asarray(in1, dtype=np.int32).reshape(-1)
+        outputs = np.asarray(outputs, dtype=np.int32).reshape(-1)
+        w = np.ascontiguousarray(words_list[i], dtype=np.uint32)
+        if w.ndim != 2 or w.shape[0] != n_in:
+            raise ValueError(f"plan {i}: word plane {w.shape} does not "
+                             f"match n_inputs={n_in}")
+        norm.append((op, in0, in1, outputs, int(n_in), w))
+
+    T = len(norm)
+    n_in_max = max(p[4] for p in norm)
+    G_max = max(p[0].shape[0] for p in norm) + 1      # +1: shared zero node
+    n_out_max = max(p[3].shape[0] for p in norm)
+    W_list = [p[5].shape[1] for p in norm]
+    W_max = max(W_list)
+    if W_max == 0:
+        return [np.zeros(0, dtype=np.int32) for _ in norm]
+
+    zero_node = n_in_max + G_max - 1    # the trailing CONST0 pad gate
+    op_t = np.full((T, G_max), int(Gate.CONST0), dtype=np.int16)
+    in0_t = np.zeros((T, G_max), dtype=np.int32)
+    in1_t = np.zeros((T, G_max), dtype=np.int32)
+    out_t = np.full((T, n_out_max), zero_node, dtype=np.int32)
+    words_t = np.zeros((T, n_in_max, W_max), dtype=np.uint32)
+
+    def remap(idx: np.ndarray, n_in: int) -> np.ndarray:
+        # tenant node numbering: inputs 0..n_in-1, gates n_in.. — shift the
+        # gate nodes past the padded input rows
+        return np.where(idx >= n_in, idx + (n_in_max - n_in), idx)
+
+    for t, (op, in0, in1, outputs, n_in, w) in enumerate(norm):
+        G = op.shape[0]
+        op_t[t, :G] = op
+        in0_t[t, :G] = remap(in0, n_in)
+        in1_t[t, :G] = remap(in1, n_in)
+        out_t[t, : outputs.shape[0]] = remap(outputs, n_in)
+        words_t[t, :n_in, : w.shape[1]] = w
+
+    out = np.asarray(fused_eval_uint(
+        op_t, in0_t, in1_t, out_t, words_t, n_in_max,
+        block_words=block_words, block_pop=1, interpret=interpret))
+    return [out[t, : W_list[t] * 32] for t in range(T)]

@@ -82,6 +82,14 @@ def _add_fleet_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--best-effort-backlog", type=int, default=None,
                     help="shed best_effort submissions once their backend's "
                          "total backlog (queued + in flight) reaches this")
+    ap.add_argument("--megakernel", action="store_true",
+                    help="fused multi-tenant dispatch: every due pallas "
+                         "tenant's circuit rides ONE multi-program kernel "
+                         "launch per scheduler pass (in-process only; "
+                         "non-pallas tenants dispatch normally)")
+    ap.add_argument("--block-words", type=int, default=None,
+                    help="pallas word-tile width override (per-tenant "
+                         "dispatch AND the fused megakernel launch)")
     ap.add_argument("--autoscale", action="store_true",
                     help="grow/shrink replica pools from shed/queue/cost "
                          "pressure (bounds: --min-replicas/--max-replicas)")
@@ -216,6 +224,9 @@ def _build_fleet(args, live: bool = True) -> ClassifierFleet:
         best_effort_backlog=getattr(args, "best_effort_backlog", None),
         autoscale=autoscale,
         autoscale_interval_s=getattr(args, "autoscale_interval", 1.0),
+        megakernel=(getattr(args, "megakernel", False) if live else False),
+        megakernel_block_words=getattr(args, "block_words", None),
+        pallas_block_words=getattr(args, "block_words", None),
         warmup=live, autostart=live)
 
 
@@ -358,6 +369,8 @@ def replay_fleet(fleet: ClassifierFleet, streams: dict[str, np.ndarray],
             **s,
         }
     report["fleet"] = fleet.stats.summary()
+    if fleet.megakernel:
+        report["megakernel"] = fleet.stats_summary().get("megakernel")
     report["errors"] = list(fleet.errors)
     report["labels_match_offline"] = ok
     return report

@@ -278,6 +278,34 @@ class CircuitServingEngine:
                              f"{self.max_batch}")
         return self._dispatch(x)
 
+    def prepare_packed_batch(self, x: np.ndarray) -> tuple[np.ndarray, int]:
+        """One `(B <= max_batch, F)` batch -> packed uint32 word plane.
+
+        The megakernel half of `classify_batch`: validate, binarize
+        through the program's thresholds (or take raw bits when there are
+        none), zero-pad to the compiled `max_batch` shape, and bit-pack to
+        the `(F, max_batch/32)` plane a fused fleet launch consumes.
+        Returns `(words32, B)`; the caller slices the decoded labels back
+        to `B` rows (pad rows decode through the same circuit and are
+        discarded).
+        """
+        x = np.asarray(x)
+        if x.ndim != 2 or x.shape[1] != self.n_features:
+            raise ValueError(f"expected (B, {self.n_features}) readings, "
+                             f"got {x.shape}")
+        B = x.shape[0]
+        if B > self.max_batch:
+            raise ValueError(f"batch of {B} exceeds max_batch "
+                             f"{self.max_batch}")
+        xbin = (self.program.binarize(x)
+                if self.program.thresholds is not None
+                else np.asarray(x, dtype=np.uint8))
+        if B < self.max_batch:
+            pad = np.zeros((self.max_batch - B, xbin.shape[1]),
+                           dtype=xbin.dtype)
+            xbin = np.concatenate([xbin, pad], axis=0)
+        return self.program.pack_input_bits(xbin), B
+
     def _dispatch(self, x: np.ndarray) -> np.ndarray:
         """One padded fixed-shape batch through the program (timed)."""
         B = x.shape[0]

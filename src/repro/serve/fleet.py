@@ -257,6 +257,9 @@ class _BackendWorker(threading.Thread):
         self.fleet = fleet
         self.backend = backend
         self.tenants = tenants
+        # megakernel mode: every due pallas tenant rides ONE multi-program
+        # kernel launch per scheduler pass instead of per-tenant dispatches
+        self.fused = bool(fleet.megakernel) and backend == "pallas"
         self.cond = threading.Condition()
         self.stop = False          # set under cond; drain-all then exit
         self.kick = False          # flush(): treat every queue as due
@@ -332,17 +335,31 @@ class _BackendWorker(threading.Thread):
                 self.fleet._unload_worker_tenant(t)
             self.cond.notify_all()
 
+    def _pick_jobs(self, now: float) -> list[_Tenant]:
+        """Megakernel mode: EVERY due tenant with an idle replica, ordered
+        guaranteed -> best-effort -> shadow (they all share one launch, so
+        the order only fixes result/stat attribution, not service)."""
+        due = [t for t in self.tenants
+               if self._due(t, now) and t.pool.has_idle()]
+        return sorted(due, key=lambda t: (self._qos_rank(t),
+                                          t.batcher.oldest_due_at))
+
     def run(self) -> None:
         while True:
             with self.cond:
                 while True:
                     self._reap_retired()
                     now = self.fleet._clock()
-                    tenant = self._pick(now)
-                    if tenant is not None:
-                        batch = tenant.batcher.pop_batch()
-                        replica = tenant.pool.acquire(len(batch))
-                        self.in_flight += len(batch)
+                    picked = (self._pick_jobs(now) if self.fused
+                              else [t for t in (self._pick(now),)
+                                    if t is not None])
+                    if picked:
+                        jobs = []
+                        for tenant in picked:
+                            batch = tenant.batcher.pop_batch()
+                            replica = tenant.pool.acquire(len(batch))
+                            self.in_flight += len(batch)
+                            jobs.append((tenant, replica, batch))
                         break
                     if (self.stop and self.queued() == 0
                             and self.in_flight == 0):
@@ -351,7 +368,10 @@ class _BackendWorker(threading.Thread):
                         return
                     self.cond.wait(self._wait_s(now))
                 ex = self._ensure_executor()
-            ex.submit(self._run_dispatch, tenant, replica, batch)
+            if self.fused:
+                ex.submit(self._run_dispatch_fused, jobs)
+            else:
+                ex.submit(self._run_dispatch, *jobs[0])
 
     def _run_dispatch(self, tenant: _Tenant, replica: EngineReplica,
                       batch: list[QueuedItem]) -> None:
@@ -368,6 +388,19 @@ class _BackendWorker(threading.Thread):
                 self._reap_retired()
                 self.cond.notify_all()
 
+    def _run_dispatch_fused(self, jobs: list) -> None:
+        ok = False
+        try:
+            ok = self.fleet._dispatch_fused(jobs)
+        finally:
+            with self.cond:
+                for tenant, replica, batch in jobs:
+                    tenant.pool.release(replica, n_readings=len(batch),
+                                        ok=ok)
+                    self.in_flight -= len(batch)
+                self._reap_retired()
+                self.cond.notify_all()
+
 
 class ClassifierFleet:
     """Router + scheduler over per-tenant replica pools."""
@@ -380,6 +413,8 @@ class ClassifierFleet:
                  best_effort_backlog: int | None = None,
                  autoscale: AutoscaleConfig | None = None,
                  autoscale_interval_s: float = 1.0,
+                 megakernel: bool = False,
+                 megakernel_block_words: int | None = None,
                  clock=time.perf_counter):
         if not specs:
             raise ValueError("a fleet needs at least one tenant")
@@ -388,6 +423,10 @@ class ClassifierFleet:
             raise ValueError(f"duplicate tenant names: {sorted(names)}")
         if workers is not None and workers < 1:
             raise ValueError("workers must be >= 1 (or None for in-process)")
+        if megakernel and workers is not None:
+            raise ValueError("megakernel dispatch is in-process (the fused "
+                             "launch pools every tenant's plan in one "
+                             "kernel) — it cannot ride worker subprocesses")
         self.stats = ServeStats(window=stats_window)
         self.stats_window = stats_window
         self.safety_factor = safety_factor
@@ -396,6 +435,10 @@ class ClassifierFleet:
         self.best_effort_backlog = best_effort_backlog
         self._clock = clock
         self.workers = workers
+        self.megakernel = bool(megakernel)
+        self.megakernel_block_words = megakernel_block_words
+        self._megakernel_launches = 0       # fused multi-tenant launches
+        self._megakernel_peak_tenants = 0   # most tenants in one launch
         self._worker_hosts: dict[str, WorkerHost] = {}  # backend -> host
         self._worker_key_seq = 0
         self._autoscaler = Autoscaler(autoscale) if autoscale else None
@@ -480,6 +523,7 @@ class ClassifierFleet:
                       rate_limit_rps: float | dict[str, float] | None = None,
                       min_replicas: int | None = None,
                       max_replicas: int | None = None,
+                      pallas_block_words: int | None = None,
                       **kw) -> "ClassifierFleet":
         """Serve every artifact the emit dir's `fleet.json` manifest names.
 
@@ -500,7 +544,8 @@ class ClassifierFleet:
                "tenants": tenants, "replicas": replicas,
                "max_queue": max_queue, "qos": qos,
                "rate_limit_rps": rate_limit_rps,
-               "min_replicas": min_replicas, "max_replicas": max_replicas}
+               "min_replicas": min_replicas, "max_replicas": max_replicas,
+               "pallas_block_words": pallas_block_words}
         doc = load_manifest_doc(emit_dir)
         rows = doc["tenants"]
         if tenants is not None:
@@ -531,9 +576,13 @@ class ClassifierFleet:
         # cross-check the bundle against the digest the row recorded: a
         # sidecar that agrees with its bundle can still disagree with the
         # manifest that promised it (stale emit, swapped file, tampered row)
+        program_kw = {}
+        if backend == "pallas" and ctx.get("pallas_block_words") is not None:
+            program_kw["pallas_block_words"] = int(ctx["pallas_block_words"])
         program = load_program(ctx["emit_dir"] / row["program"],
                                backend=backend,
-                               expect_sha256=row.get("sha256"))
+                               expect_sha256=row.get("sha256"),
+                               **program_kw)
         qos_ctx = ctx.get("qos")
         qos = (qos_ctx if isinstance(qos_ctx, str)
                else (qos_ctx or {}).get(row["name"],
@@ -917,6 +966,70 @@ class ClassifierFleet:
                 self.stats.record_request(r.latency_ms, r.deadline_ms)
             tenant.stats.record_request(r.latency_ms, r.deadline_ms)
             r._complete()
+        return True
+
+    def _dispatch_fused(self, jobs: list) -> bool:
+        """Serve MANY tenants' popped batches in one megakernel launch.
+
+        `jobs` is `[(tenant, replica, entries), ...]` — every due pallas
+        tenant of this scheduler pass.  Each tenant's batch is binarized
+        with its own ABC thresholds, padded to its engine's compiled
+        batch shape (so the fused kernel sees stable word widths and the
+        jit cache stays warm), bit-packed, and the whole manifest goes
+        through `kernels.dispatch.fleet_eval_words` as ONE launch.
+        Per-tenant accounting mirrors `_dispatch`: every tenant is
+        charged the full launch wall time (that IS the latency its batch
+        paid), the fleet-level batch sample is recorded once per launch,
+        and shadows stay out of fleet stats and the error log.  A launch
+        failure fails every request of every job — the whole launch is
+        the unit of execution.
+        """
+        from repro.kernels import dispatch as D
+
+        prepared = []
+        try:
+            plans, words_list = [], []
+            for tenant, replica, entries in jobs:
+                reqs = [e.item for e in entries]
+                words32, B = replica.engine.prepare_packed_batch(
+                    self._gather_batch(reqs))
+                plans.append(replica.engine.program.plan())
+                words_list.append(words32)
+                prepared.append((tenant, replica, reqs, B))
+            t0 = self._clock()
+            outs = D.fleet_eval_words(
+                plans, words_list, backend="pallas",
+                block_words=self.megakernel_block_words)
+            dt = self._clock() - t0
+        except Exception as exc:        # complete exceptionally, never hang
+            msg = f"megakernel: {type(exc).__name__}: {exc}"
+            for tenant, replica, entries in jobs:
+                if tenant.shadow_of is None:
+                    self.errors.append(f"{tenant.name}: {msg}")
+                for e in entries:
+                    e.item.error = msg
+                    e.item._complete()
+            return False
+        live_readings = sum(len(reqs) for t, _, reqs, _ in prepared
+                            if t.shadow_of is None)
+        if live_readings:
+            self.stats.record(live_readings, dt)   # one launch = one batch
+        self._megakernel_launches += 1
+        self._megakernel_peak_tenants = max(self._megakernel_peak_tenants,
+                                            len(jobs))
+        for (tenant, replica, reqs, B), out in zip(prepared, outs):
+            labels = np.asarray(out[:B], dtype=np.int32)
+            is_shadow = tenant.shadow_of is not None
+            tenant.est_dispatch_s = 0.7 * tenant.est_dispatch_s + 0.3 * dt
+            tenant.last_dispatch_s = dt
+            tenant.stats.record(len(reqs), dt)
+            replica.engine.stats.record(len(reqs), dt)
+            replica.engine.complete(reqs, labels)
+            for r in reqs:
+                if not is_shadow:
+                    self.stats.record_request(r.latency_ms, r.deadline_ms)
+                tenant.stats.record_request(r.latency_ms, r.deadline_ms)
+                r._complete()
         return True
 
     # -- shadow deployment ---------------------------------------------------
@@ -1342,6 +1455,12 @@ class ClassifierFleet:
                 "manifest_generation": self._manifest_generation,
                 "tenants": tenants,
             }
+            if self.megakernel:
+                out["megakernel"] = {
+                    "launches": self._megakernel_launches,
+                    "peak_tenants_per_launch": self._megakernel_peak_tenants,
+                    "block_words": self.megakernel_block_words,
+                }
         if self._worker_hosts:
             out["workers"] = {b: h.summary()
                               for b, h in sorted(self._worker_hosts.items())}

@@ -16,6 +16,13 @@ failure.  The seeded sweep always runs; when hypothesis is installed the
 same oracle is additionally driven by shrinking random shapes (example
 budget scales with REPRO_CONFORMANCE_EXAMPLES — the nightly CI job raises
 it), and the `slow`-marked sweep covers larger populations and widths.
+
+The fused-megakernel matrix extends the oracle to the serving path: the
+single-launch fused kernel (`fused_eval_uint`) and the multi-tenant
+`fleet_eval_words` (heterogeneous plans padded to one gate budget) must
+match `predict_with_circuits` on all five golden datasets, and a
+hypothesis property pins that padding mixed gate counts / input widths /
+word widths into one launch never leaks bits across tenants.
 """
 import os
 
@@ -123,6 +130,86 @@ def test_degenerate_shapes_agree():
         assert_conformance(pop, _rand_bits(rng, S, n_in))
 
 
+def test_zero_width_word_plane_returns_empty():
+    """Regression (PR 9): `W == 0` used to hand pallas_call a zero-size
+    grid/block; now both kernel entry points short-circuit to empty
+    results, mirroring the gateless-plan pad guard."""
+    from repro.kernels import dispatch as D
+
+    rng = np.random.default_rng(7)
+    pop = C.random_netlist_population(rng, 4, 10, 2, 3)
+    empty = np.zeros((4, 0), dtype=np.uint32)
+    words = np.asarray(PS.simulate_population(
+        pop.op, pop.in0, pop.in1, pop.outputs, empty, 4))
+    assert words.shape == (3, 2, 0)
+    ints = np.asarray(PS.population_eval_uint(
+        pop.op, pop.in0, pop.in1, pop.outputs, empty, 4))
+    assert ints.shape == (3, 0)
+    fleet = D.fleet_eval_words(
+        [(pop.op[0], pop.in0[0], pop.in1[0], pop.outputs[0], 4)],
+        [empty], backend="pallas")
+    assert fleet[0].shape == (0,)
+
+
+def test_block_words_knob_reaches_pallas_kernel(monkeypatch):
+    """Regression (PR 9): dispatch used to silently drop the Pallas knobs
+    — a campaign/tenant `block_words` override never reached the kernel.
+    Pin the plumbing end-to-end by spying on the jitted pallas_call
+    wrapper through `program_eval_words` AND `population_eval_uint`."""
+    from repro.kernels import dispatch as D
+
+    seen = []
+    real = PS._fused_padded
+
+    def spy(*args, **kw):
+        seen.append(kw["block_words"])
+        return real(*args, **kw)
+
+    monkeypatch.setattr(PS, "_fused_padded", spy)
+    rng = np.random.default_rng(11)
+    pop = C.random_netlist_population(rng, 5, 12, 2, 4)
+    bits = _rand_bits(rng, 200, 5)          # 7 words — default tile is 128
+    words32 = np.asarray(CS.pack_bits32(bits))
+
+    D.program_eval_words(pop.op[:1], pop.in0[:1], pop.in1[:1],
+                         pop.outputs[:1], words32, 5, backend="pallas",
+                         block_words=2)
+    assert seen[-1] == 2, "block_words override never reached the kernel"
+
+    D.population_eval_uint(pop.op, pop.in0, pop.in1, pop.outputs,
+                           C.pack_vectors(bits), 5, backend="pallas",
+                           block_words=3)
+    assert seen[-1] == 3
+
+    prog = CircuitProgram.from_netlist(pop.netlist(0), backend="pallas",
+                                       pallas_block_words=4)
+    prog.eval_bits(bits)
+    assert seen[-1] == 4, "CircuitProgram.pallas_block_words was dropped"
+
+
+def test_np_backend_odd_width_repack_matches_swar():
+    """Regression (PR 9): the np backend's uint32->uint64 lane repack for
+    odd-width word planes reinterpreted bytes (`.view(np.uint64)`), which
+    is only the documented lane contract on little-endian hosts.  Pin
+    np/swar/pallas bit-identity through `program_eval_words` on odd
+    widths, and the repack itself against an arithmetic lane combine."""
+    from repro.kernels import dispatch as D
+
+    rng = np.random.default_rng(21)
+    pop = C.random_netlist_population(rng, 6, 18, 3, 1)
+    for W32 in (1, 3, 5):
+        words32 = rng.integers(0, 2**32, size=(6, W32), dtype=np.uint32)
+        outs = {b: D.program_eval_words(pop.op, pop.in0, pop.in1,
+                                        pop.outputs, words32, 6, backend=b)
+                for b in ("np", "swar", "pallas")}
+        np.testing.assert_array_equal(
+            outs["np"], outs["swar"],
+            err_msg=f"np != swar on odd width W32={W32}")
+        np.testing.assert_array_equal(
+            outs["swar"], outs["pallas"],
+            err_msg=f"swar != pallas on odd width W32={W32}")
+
+
 @pytest.mark.slow
 def test_fuzz_sweep_large():
     """Bigger populations / word planes; nightly raises the budget."""
@@ -188,6 +275,79 @@ def test_fleet_serving_matches_predict_with_circuits(golden_fleet, backend):
         fleet.shutdown(drain=True)
 
 
+@pytest.mark.parametrize("variant", ("fused", "fleet"))
+def test_megakernel_matches_predict_with_circuits(golden_fleet, variant):
+    """Megakernel matrix: the fused single-program kernel and the
+    multi-tenant `fleet_eval_words` launch must both reproduce
+    `predict_with_circuits` labels on all five golden datasets.
+
+    `fused` routes each golden program through the single-`pallas_call`
+    gate-walk+decode path one tenant at a time; `fleet` pools all five
+    tenants' plan tables into ONE padded multi-program launch — 5 tenants
+    with different gate/feature/class counts sharing a kernel, every
+    label still bit-exact."""
+    from repro.compile.artifact import load_program
+    from repro.kernels import dispatch as D
+
+    emit_dir, refs = golden_fleet
+    progs, planes = {}, {}
+    for tenant, (x, _) in sorted(refs.items()):
+        prog = load_program(f"{emit_dir}/{tenant}_program.npz",
+                            backend="pallas")
+        progs[tenant] = prog
+        planes[tenant] = prog.pack_input_bits(prog.binarize(x))
+    if variant == "fused":
+        for tenant, (x, want) in refs.items():
+            got = progs[tenant].predict(x)
+            np.testing.assert_array_equal(
+                got, want,
+                err_msg=f"fused megakernel != predict_with_circuits "
+                        f"({tenant})")
+    else:
+        order = sorted(refs)
+        outs = D.fleet_eval_words([progs[t].plan() for t in order],
+                                  [planes[t] for t in order],
+                                  backend="pallas")
+        for tenant, out in zip(order, outs):
+            x, want = refs[tenant]
+            np.testing.assert_array_equal(
+                out[: x.shape[0]].astype(np.int32), want,
+                err_msg=f"fleet megakernel != predict_with_circuits "
+                        f"({tenant})")
+
+
+def test_megakernel_fleet_serving_matches(golden_fleet):
+    """Serving-path megakernel: all five golden tenants on the pallas
+    backend with `megakernel=True` — the scheduler must carry every due
+    tenant in one fused launch and still hand back exact labels."""
+    from repro.serve import ClassifierFleet
+
+    emit_dir, refs = golden_fleet
+    fleet = ClassifierFleet.from_emit_dir(
+        emit_dir, backends="pallas", max_batch=64, deadline_ms=5_000.0,
+        megakernel=True, autostart=False, warmup=False)
+    try:
+        handles = {tenant: [fleet.submit(tenant, row) for row in x]
+                   for tenant, (x, _) in sorted(refs.items())}
+        fleet.start()
+        fleet.flush(timeout=120)
+        for tenant, (_, want) in refs.items():
+            got = np.array([r.result(timeout=120) for r in handles[tenant]],
+                           dtype=np.int32)
+            np.testing.assert_array_equal(
+                got, want,
+                err_msg=f"megakernel fleet != predict_with_circuits "
+                        f"({tenant})")
+        assert fleet.errors == []
+        mk = fleet.stats_summary()["megakernel"]
+        assert mk["launches"] >= 1
+        # every tenant was due before start(): the first pass must have
+        # fused at least 4 of the 5 into one launch
+        assert mk["peak_tenants_per_launch"] >= 4, mk
+    finally:
+        fleet.shutdown(drain=True)
+
+
 # ---------------------------------------------------------------------------
 # Hypothesis-driven variant (shrinks failures to minimal netlists)
 # ---------------------------------------------------------------------------
@@ -209,3 +369,36 @@ if _HAVE_HYPOTHESIS:
         pop = C.random_netlist_population(rng, n_in, n_gates, n_out, P)
         assert_conformance(pop, _rand_bits(rng, S, n_in),
                            check_programs=False)
+
+    @settings(max_examples=N_EXAMPLES, deadline=None)
+    @given(st.lists(st.tuples(st.integers(1, 7),    # n_in per tenant
+                              st.integers(0, 40),   # n_gates per tenant
+                              st.integers(1, 5),    # n_out per tenant
+                              st.integers(1, 100)),  # vectors per tenant
+                    min_size=2, max_size=6),
+           st.integers(0, 2**31 - 1))
+    def test_hypothesis_fleet_megakernel_padding_never_leaks(shapes, seed):
+        """Mixed per-tenant gate counts through the multi-program
+        megakernel: every tenant's plan is padded to the common
+        (G_max, n_in_max, W_max) tables, and NONE of that padding — pad
+        gates, pad input rows, pad words, pad output taps — may change
+        any tenant's decoded integers vs evaluating that tenant alone."""
+        from repro.kernels import dispatch as D
+
+        rng = np.random.default_rng(seed)
+        plans, words_list, refs = [], [], []
+        for (n_in, n_gates, n_out, S) in shapes:
+            n_out = min(n_out, n_in + n_gates)
+            pop = C.random_netlist_population(rng, n_in, n_gates, n_out, 1)
+            bits = _rand_bits(rng, S, n_in)
+            packed = C.pack_vectors(bits)
+            refs.append((S, pop.eval_uint(packed)[0, :S]))
+            plans.append((pop.op[0], pop.in0[0], pop.in1[0],
+                          pop.outputs[0], n_in))
+            words_list.append(np.asarray(CS.pack_bits32(bits)))
+        outs = D.fleet_eval_words(plans, words_list, backend="pallas")
+        for t, ((S, want), out) in enumerate(zip(refs, outs)):
+            np.testing.assert_array_equal(
+                out[:S], want,
+                err_msg=f"fleet megakernel tenant {t} (shape "
+                        f"{shapes[t]}) != Netlist reference")

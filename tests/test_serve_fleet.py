@@ -227,6 +227,78 @@ def test_shutdown_cancel_completes_exceptionally(emit_dir):
 
 
 # ---------------------------------------------------------------------------
+# Megakernel dispatch mode (fused multi-tenant pallas launches)
+# ---------------------------------------------------------------------------
+def test_megakernel_fuses_due_tenants_bit_identically(emit_dir):
+    """All three toy tenants on the pallas backend, queues pre-loaded
+    before the scheduler starts: the first fused pass must carry every
+    tenant in ONE multi-program launch, and every label must match the
+    offline `CircuitProgram.predict` reference."""
+    out, ccs = emit_dir
+    fleet = ClassifierFleet.from_emit_dir(
+        out, backends="pallas", max_batch=64, deadline_ms=60_000.0,
+        megakernel=True, autostart=False, warmup=False)
+    rng = np.random.default_rng(17)
+    handles = {}
+    for name, (F, _, _, _) in TOY_TENANTS.items():
+        x = rng.random((48, F))
+        handles[name] = (x, [fleet.submit(name, row) for row in x])
+    fleet.start()
+    try:
+        fleet.flush(timeout=60.0)
+        for name, (x, reqs) in handles.items():
+            ref = CircuitProgram.from_classifier(ccs[name]).predict(x)
+            assert [r.result(timeout=60.0) for r in reqs] \
+                == [int(v) for v in ref], name
+        assert fleet.errors == []
+        mk = fleet.stats_summary()["megakernel"]
+        assert mk["launches"] >= 1
+        assert mk["peak_tenants_per_launch"] == len(TOY_TENANTS), mk
+        # per-tenant + fleet accounting both saw the fused traffic
+        s = fleet.stats_summary()
+        assert s["fleet"]["n_readings"] == 48 * len(TOY_TENANTS)
+        for name in TOY_TENANTS:
+            assert s["tenants"][name]["n_readings"] == 48
+    finally:
+        fleet.shutdown(drain=True)
+
+
+def test_megakernel_only_fuses_pallas_backend(emit_dir):
+    """Mixed-backend fleet with megakernel on: swar tenants keep their
+    per-tenant dispatch path (and still serve correctly)."""
+    out, ccs = emit_dir
+    fleet = ClassifierFleet.from_emit_dir(
+        out, backends={"toy_a": "pallas", "toy_b": "swar",
+                       "toy_c": "pallas"},
+        max_batch=64, deadline_ms=60_000.0, megakernel=True,
+        autostart=False, warmup=False)
+    rng = np.random.default_rng(23)
+    handles = {}
+    for name, (F, _, _, _) in TOY_TENANTS.items():
+        x = rng.random((16, F))
+        handles[name] = (x, [fleet.submit(name, row) for row in x])
+    fleet.start()
+    try:
+        fleet.flush(timeout=60.0)
+        for name, (x, reqs) in handles.items():
+            ref = CircuitProgram.from_classifier(ccs[name]).predict(x)
+            assert [r.result(timeout=60.0) for r in reqs] \
+                == [int(v) for v in ref], name
+        mk = fleet.stats_summary()["megakernel"]
+        assert mk["peak_tenants_per_launch"] <= 2   # only the pallas pair
+    finally:
+        fleet.shutdown(drain=True)
+
+
+def test_megakernel_rejects_worker_processes(emit_dir):
+    out, _ = emit_dir
+    with pytest.raises(ValueError, match="megakernel"):
+        ClassifierFleet.from_emit_dir(out, backends="pallas",
+                                      megakernel=True, workers=2,
+                                      autostart=False, warmup=False)
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis: the micro-batcher policy under arbitrary schedules
 # ---------------------------------------------------------------------------
 try:
