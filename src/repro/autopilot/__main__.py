@@ -77,6 +77,11 @@ def _parse_args(argv=None) -> argparse.Namespace:
     run.add_argument("--cgp-iters", type=int, default=150)
     run.add_argument("--cgp-points", type=int, default=2)
     run.add_argument("--pcc-samples", type=int, default=6000)
+    run.add_argument("--phase-cache", default=None,
+                     help="Phase-1/2 product cache dir (default: "
+                          "$REPRO_PHASE_CACHE or ~/.cache/repro/"
+                          "phase_cache); restarted controllers skip the "
+                          "TNN/CGP/PCC rebuild entirely")
     run.add_argument("--drift-rate", type=float, default=0.0,
                      help="fraction of the objective's sample plane "
                           "bootstrap-resampled each round (0 = static data)")
@@ -144,7 +149,8 @@ def _cmd_run(args) -> int:
                                 cgp_points=args.cgp_points,
                                 cgp_iters=args.cgp_iters,
                                 pcc_samples=args.pcc_samples,
-                                eval_backend=args.eval_backend)
+                                eval_backend=args.eval_backend,
+                                cache_dir=args.phase_cache)
     if args.drift_rate > 0.0:
         attach_tnn_drift(problem, args.drift_rate, seed=args.seed)
     cfg = CampaignConfig(n_islands=args.islands, pop_size=args.pop,

@@ -166,7 +166,10 @@ class CampaignSource:
 
         if self.problem.drift is not None:
             self.problem.drift(round_idx)
-            self.campaign.clear_eval_cache()
+            # mark_drift (not bare clear_eval_cache): with a parallel
+            # campaign the executor's workers must replay this round on
+            # their own problem copies before stepping again
+            self.campaign.mark_drift(round_idx)
         epoch = None
         for _ in range(self.epochs_per_round):
             epoch = self.campaign.step_epoch()

@@ -32,6 +32,11 @@ from repro.compile.verilog import (
 )
 from repro.compile.vread import VerilogDesign, eval_classifier_verilog
 
+# NOTE: repro.compile.zoo (the batch compiler CLI) is deliberately not
+# imported here — `python -m repro.compile.zoo` would re-execute the
+# already-imported module (runpy warns).  Import it directly:
+# `from repro.compile.zoo import ZooEntry, build_zoo, make_entries`.
+
 __all__ = [
     "ArtifactCorruptError",
     "CircuitIR",

@@ -203,7 +203,8 @@ def write_artifacts(cc: CompiledClassifier, out_dir: str | Path,
                     interface: str | None = "abc",
                     dataset: str | None = None,
                     replicas: int = 1,
-                    provenance: dict | None = None) -> dict[str, str]:
+                    provenance: dict | None = None,
+                    register: bool = True) -> dict[str, str]:
     """Write `<base>.v` + `<base>_egfet.json` + a servable program bundle
     under `out_dir`, and register the design as tenant `base` in the
     directory's `fleet.json` manifest (`repro.serve` consumes it).
@@ -211,7 +212,13 @@ def write_artifacts(cc: CompiledClassifier, out_dir: str | Path,
     should stand up for this tenant by default.  `provenance` (seed,
     generations, objective values, config fingerprint — whatever produced
     this design) is stamped into the manifest row so a later promotion
-    decision can tell *which search* a live tenant came from."""
+    decision can tell *which search* a live tenant came from.
+
+    `register=False` writes the files but skips the manifest: manifest
+    registration is read-modify-write on one `fleet.json`, so concurrent
+    writers (the zoo batch compiler's worker pool) emit with
+    `register=False` and the parent registers the returned `entry` rows
+    serially via `artifact.register_tenant`."""
     from repro.compile import artifact as A
 
     out = Path(out_dir)
@@ -241,6 +248,8 @@ def write_artifacts(cc: CompiledClassifier, out_dir: str | Path,
     }
     if provenance is not None:
         entry["provenance"] = dict(provenance)
-    mpath = A.register_tenant(out, entry)
-    return {"verilog": str(vpath), "report": str(rpath),
-            "program": str(ppath), "manifest": str(mpath)}
+    paths = {"verilog": str(vpath), "report": str(rpath),
+             "program": str(ppath), "entry": entry}
+    if register:
+        paths["manifest"] = str(A.register_tenant(out, entry))
+    return paths

@@ -124,34 +124,64 @@ def _poly_mutate_int(x, domains, eta, prob, rng):
     return np.clip(np.rint(y), 0, hi).astype(np.int64)
 
 
-def _memoized(objective: Callable[[np.ndarray], np.ndarray]
+def _memoized(objective: Callable[[np.ndarray], np.ndarray],
+              maxsize: int | None = None
               ) -> Callable[[np.ndarray], np.ndarray]:
-    """Wrap a batched objective with a chromosome-level cache.
+    """Wrap a batched objective with a bounded chromosome-level LRU cache.
 
     Integer GAs re-visit identical chromosomes constantly (SBX clones
     parents, elitism carries survivors across generations); with circuit-
     level fitness each duplicate costs a full batched simulation.  Only
     never-seen rows reach the wrapped objective — results are unchanged for
-    any row-independent objective (the batched-evaluator contract).
+    any row-independent objective (the batched-evaluator contract), and
+    LRU eviction (`maxsize`) cannot change them either: an evicted
+    chromosome that reappears is simply re-evaluated to the same value.
+    `maxsize=None` keeps the cache unbounded (the historical behavior);
+    long campaigns should bound it so memory cannot grow with the number
+    of distinct chromosomes ever visited.
+
+    `evaluate.cache_info()` reports cumulative hits / misses / evictions
+    plus the current size — `Campaign` folds these into its per-epoch
+    cache history rows.
     """
-    cache: dict[bytes, np.ndarray] = {}
+    from collections import OrderedDict
+
+    cache: OrderedDict[bytes, np.ndarray] = OrderedDict()
+    stats = {"hits": 0, "misses": 0, "evictions": 0}
 
     def evaluate(X: np.ndarray) -> np.ndarray:
         X = np.ascontiguousarray(X)
         keys = [row.tobytes() for row in X]
         fresh_rows, fresh_keys, seen = [], [], set()
         for i, k in enumerate(keys):
-            if k not in cache and k not in seen:
+            if k in cache:
+                cache.move_to_end(k)
+                stats["hits"] += 1
+            elif k not in seen:
                 seen.add(k)
                 fresh_rows.append(i)
                 fresh_keys.append(k)
+        fresh: dict[bytes, np.ndarray] = {}
         if fresh_rows:
+            stats["misses"] += len(fresh_keys)
             F = objective(X[np.array(fresh_rows)])
             for k, f in zip(fresh_keys, F):
-                cache[k] = np.asarray(f, dtype=np.float64)
-        return np.stack([cache[k] for k in keys])
+                fresh[k] = np.asarray(f, dtype=np.float64)
+        # gather BEFORE eviction so a tiny maxsize can never evict a row
+        # this very batch still needs
+        out = np.stack([cache.get(k, fresh.get(k)) for k in keys])
+        cache.update(fresh)
+        if maxsize is not None:
+            while len(cache) > maxsize:
+                cache.popitem(last=False)
+                stats["evictions"] += 1
+        return out
+
+    def cache_info() -> dict:
+        return {**stats, "size": len(cache), "maxsize": maxsize}
 
     evaluate.cache_clear = cache.clear    # data drifted -> memo is stale
+    evaluate.cache_info = cache_info
     return evaluate
 
 

@@ -12,9 +12,19 @@ CLI:  python -m repro.evolve --problem tnn --dataset cardio ...
 """
 from repro.evolve.campaign import Campaign, CampaignResult  # noqa: F401
 from repro.evolve.config import CampaignConfig  # noqa: F401
+from repro.evolve.executor import IslandExecutor  # noqa: F401
 from repro.evolve.islands import ParetoArchive, migrate_ring  # noqa: F401
+from repro.evolve.phase_cache import (  # noqa: F401
+    PhaseCacheCorruptError,
+    default_cache_dir,
+    load_phase,
+    phase_key,
+    save_phase,
+)
 from repro.evolve.problems import (  # noqa: F401
     CampaignProblem,
+    ProblemSpec,
+    build_problem,
     build_synth_problem,
     build_tnn_problem,
     compile_archive_winner,

@@ -22,7 +22,7 @@ import numpy as np
 from repro.data.tabular import DATASETS
 from repro.evolve.campaign import Campaign
 from repro.evolve.config import CampaignConfig
-from repro.evolve.problems import (build_synth_problem, build_tnn_problem,
+from repro.evolve.problems import (ProblemSpec, build_problem,
                                    compile_archive_winner)
 
 
@@ -40,6 +40,13 @@ def _parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", choices=("np", "swar", "pallas"),
                     default="np", help="gate-sim executor for fitness")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="island-executor process count (0/1 = serial; "
+                         "N>1 steps islands concurrently, bit-identical)")
+    ap.add_argument("--phase-cache", default=None,
+                    help="Phase-1/2 product cache dir (default: "
+                         "$REPRO_PHASE_CACHE or ~/.cache/repro/phase_cache;"
+                         " set the env to 'off' to disable)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="checkpoint root (resume happens automatically)")
     ap.add_argument("--fresh", action="store_true",
@@ -64,19 +71,22 @@ def _parse_args(argv=None) -> argparse.Namespace:
 
 def _run_one(args: argparse.Namespace, dataset: str | None) -> dict:
     if args.problem == "synth":
-        problem = build_synth_problem(args.genes, args.domain)
+        spec = ProblemSpec("synth", {"n_genes": args.genes,
+                                     "domain": args.domain})
     else:
-        problem = build_tnn_problem(dataset, seed=args.seed,
-                                    epochs=args.tnn_epochs,
-                                    cgp_points=args.cgp_points,
-                                    cgp_iters=args.cgp_iters,
-                                    pcc_samples=args.pcc_samples,
-                                    eval_backend=args.backend)
+        spec = ProblemSpec("tnn", {"dataset": dataset, "seed": args.seed,
+                                   "epochs": args.tnn_epochs,
+                                   "cgp_points": args.cgp_points,
+                                   "cgp_iters": args.cgp_iters,
+                                   "pcc_samples": args.pcc_samples,
+                                   "eval_backend": args.backend,
+                                   "cache_dir": args.phase_cache})
+    problem = build_problem(spec)
     cfg = CampaignConfig(n_islands=args.islands, pop_size=args.pop,
                          n_epochs=args.epochs,
                          gens_per_epoch=args.gens_per_epoch,
                          migrate_k=args.migrate_k, seed=args.seed,
-                         eval_backend=args.backend)
+                         eval_backend=args.backend, workers=args.workers)
     ckpt_dir = args.ckpt_dir
     if ckpt_dir and dataset and args.dataset == "all":
         ckpt_dir = str(Path(ckpt_dir) / dataset)
@@ -86,7 +96,7 @@ def _run_one(args: argparse.Namespace, dataset: str | None) -> dict:
     campaign = Campaign(problem.domains, problem.objective, cfg,
                         checkpoint_dir=ckpt_dir,
                         seed_population=problem.seed_population,
-                        name=problem.name)
+                        name=problem.name, problem_spec=spec)
 
     def on_epoch(epoch: int, c: Campaign) -> None:
         best = c.archive.F[:, 0].min() if len(c.archive) else float("nan")
@@ -95,8 +105,11 @@ def _run_one(args: argparse.Namespace, dataset: str | None) -> dict:
               flush=True)
 
     t0 = time.perf_counter()
-    res = campaign.run(on_epoch=on_epoch,
-                       kill_after_epoch=args.kill_after_epoch)
+    try:
+        res = campaign.run(on_epoch=on_epoch,
+                           kill_after_epoch=args.kill_after_epoch)
+    finally:
+        campaign.close()
     dt = time.perf_counter() - t0
     if res.resumed_from is not None:
         print(f"[{problem.name}] resumed from epoch {res.resumed_from} "
@@ -110,8 +123,9 @@ def _run_one(args: argparse.Namespace, dataset: str | None) -> dict:
                    "epochs": cfg.n_epochs,
                    "gens_per_epoch": cfg.gens_per_epoch,
                    "migrate_k": cfg.migrate_k, "seed": cfg.seed,
-                   "backend": cfg.eval_backend},
+                   "backend": cfg.eval_backend, "workers": cfg.workers},
         "resumed_from": res.resumed_from,
+        "cache": res.cache_history[-1] if res.cache_history else None,
         "archive": [{"x": x.tolist(), "f": [float(a), float(b)]}
                     for x, (a, b) in zip(res.archive_x, res.archive_f)],
     }

@@ -21,7 +21,16 @@ previous epoch's snapshot loads instead (`checkpoint.manager`).
 The fitness dedup cache is shared across islands: chromosomes are evaluated
 once per campaign process no matter how many islands revisit them.  The
 cache is pure memoization of a row-independent objective, so a resumed
-process with a cold cache follows the identical trajectory.
+process with a cold cache follows the identical trajectory.  It is LRU
+bounded by `cfg.memo_maxsize`, and its hit/miss/eviction counters are
+surfaced per epoch in `cache_history` (one row per `step_epoch`).
+
+With `cfg.workers > 1` and a picklable `problem_spec`, epoch stepping
+fans the islands out over `evolve.executor.IslandExecutor`'s process
+pool — bit-identical to serial stepping (islands only interact at the
+epoch boundary, which stays here) and transparent to checkpoints: the
+parent still owns states, archive and manifest, so a campaign stepped
+serially resumes parallel and vice versa.
 """
 from __future__ import annotations
 
@@ -51,6 +60,9 @@ class CampaignResult:
     resumed_from: int | None # epoch of the loaded snapshot, if any
     histories: list[list[tuple[int, float, float]]] = field(
         default_factory=list)
+    # one row per epoch stepped in this process: fitness-memo counters
+    # (cumulative) + executor metadata — see Campaign.cache_history
+    cache_history: list[dict] = field(default_factory=list)
 
 
 class Campaign:
@@ -61,13 +73,15 @@ class Campaign:
                  cfg: CampaignConfig,
                  checkpoint_dir: str | None = None,
                  seed_population: np.ndarray | None = None,
-                 name: str = "campaign"):
+                 name: str = "campaign",
+                 problem_spec=None):
         self.domains = np.asarray(domains)
         self.cfg = cfg
         self.name = name
         self.n_genes = int(self.domains.shape[0])
         self.seed_population = seed_population
-        evaluate = (_memoized(objective) if cfg.base.dedup_eval else objective)
+        evaluate = (_memoized(objective, maxsize=cfg.memo_maxsize)
+                    if cfg.base.dedup_eval else objective)
         self._evaluate = evaluate       # shared memo (see clear_eval_cache)
         self.drivers = [
             NSGA2Driver(self.domains, objective, cfg.island_nsga2(i),
@@ -81,6 +95,17 @@ class Campaign:
         self.archive = ParetoArchive(self.n_genes)
         self.next_epoch = 0
         self.resumed_from: int | None = None
+        # fitness-memo counters, one row per epoch stepped here (serial
+        # rows read the in-process memo; parallel rows aggregate the
+        # worker memos reported with each epoch's step results)
+        self.cache_history: list[dict] = []
+        self.problem_spec = problem_spec
+        self._executor = None           # built lazily on first step_epoch
+        if cfg.workers > 1 and problem_spec is None:
+            raise ValueError(
+                f"cfg.workers={cfg.workers} needs a picklable problem_spec "
+                "(ProblemSpec) — a bare objective callable cannot cross "
+                "the process boundary")
 
     # -- checkpoint plumbing -------------------------------------------------
     def _state_tree(self) -> dict:
@@ -183,11 +208,46 @@ class Campaign:
         The dedup cache assumes a *fixed* objective; a drift hook that
         mutates the underlying data would otherwise keep serving stale
         fitness values for revisited chromosomes.  The autopilot calls
-        this after every `CampaignProblem.drift` application.
+        this after every `CampaignProblem.drift` application.  With a
+        live executor, worker memos are invalidated too (lazily, before
+        the next row any worker evaluates).
         """
         clear = getattr(self._evaluate, "cache_clear", None)
         if clear is not None:
             clear()
+        if self._executor is not None:
+            self._executor.clear_eval_cache()
+
+    def mark_drift(self, round_idx: int) -> None:
+        """Record a `problem.drift(round_idx)` the caller just applied.
+
+        Clears the in-process memo and, when stepping parallel, tells the
+        executor so its workers replay the same deterministic drift round
+        on their problem copies before stepping again.  Callers that
+        drift must use this (not bare `clear_eval_cache`) if the campaign
+        may run with `workers > 1`.
+        """
+        if self._executor is not None:
+            self._executor.mark_drift(round_idx)
+        clear = getattr(self._evaluate, "cache_clear", None)
+        if clear is not None:
+            clear()
+
+    def _ensure_executor(self):
+        if self._executor is None and self.cfg.workers > 1:
+            from repro.evolve.executor import IslandExecutor
+            self._executor = IslandExecutor(self.problem_spec, self.cfg,
+                                            n_workers=self.cfg.workers)
+        return self._executor
+
+    def _record_cache_row(self, epoch: int, executor_stats: dict | None
+                          ) -> None:
+        if executor_stats is not None:
+            row = {"epoch": epoch, "mode": "parallel", **executor_stats}
+        else:
+            info = getattr(self._evaluate, "cache_info", lambda: {})()
+            row = {"epoch": epoch, "mode": "serial", **info}
+        self.cache_history.append(row)
 
     def step_epoch(self) -> int:
         """Advance exactly one epoch (+checkpoint); returns its index.
@@ -196,18 +256,41 @@ class Campaign:
         bounded by `cfg.n_epochs` — a long-running controller keeps
         calling this for as long as it wants candidates, and every epoch
         lands a resumable checkpoint exactly like the batch path.
+
+        With `cfg.workers > 1` the epoch's generations run on the island
+        executor's process pool; archive fold, migration and the
+        checkpoint stay in this process either way.
         """
         self.init_or_resume()
         epoch = self.next_epoch
-        for _ in range(self.cfg.gens_per_epoch):
-            for i, driver in enumerate(self.drivers):
-                self.states[i] = driver.step(self.states[i])
+        executor = self._ensure_executor()
+        stats = None
+        if executor is not None:
+            self.states, stats = executor.step_islands(
+                self.states, self.cfg.gens_per_epoch)
+        else:
+            for _ in range(self.cfg.gens_per_epoch):
+                for i, driver in enumerate(self.drivers):
+                    self.states[i] = driver.step(self.states[i])
         for state in self.states:
             self.archive.update(*extract_front(state.pop, state.F))
         migrate_ring(self.states, self.cfg.migrate_k)
+        self._record_cache_row(epoch, stats)
         self._save(epoch)
         self.next_epoch = epoch + 1
         return epoch
+
+    def close(self) -> None:
+        """Tear down the executor pool, if one was spawned."""
+        if self._executor is not None:
+            self._executor.close()
+            self._executor = None
+
+    def __enter__(self) -> "Campaign":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def best_by_objective(self, obj: int = 0) -> tuple[np.ndarray, np.ndarray]:
         """(chromosome, objectives) of the archive entry minimizing `obj`."""
@@ -237,4 +320,5 @@ class Campaign:
         return CampaignResult(
             archive_x=self.archive.X.copy(), archive_f=self.archive.F.copy(),
             epochs_run=ran, resumed_from=self.resumed_from,
-            histories=[list(s.history) for s in self.states])
+            histories=[list(s.history) for s in self.states],
+            cache_history=[dict(r) for r in self.cache_history])

@@ -29,6 +29,17 @@ class CampaignConfig:
     # evaluator backend for problems that honor it ("np" | "swar" | "pallas")
     eval_backend: str = "np"
     checkpoint_keep: int = 3
+    # process-pool island executor: 0/1 = step islands serially in-process;
+    # N>1 spawns N workers that advance islands concurrently within an
+    # epoch (bit-identical to serial — islands only interact at migration
+    # and archive-fold boundaries, which stay in the parent).  Excluded
+    # from the resume fingerprint: a checkpoint written serially resumes
+    # under any worker count and vice versa.
+    workers: int = 0
+    # LRU bound on the shared fitness memo (chromosome keys); None =
+    # unbounded.  Pure memoization — eviction re-evaluates to the same
+    # value — so this too is excluded from the fingerprint.
+    memo_maxsize: int | None = 131072
     base: NSGA2Config = field(default_factory=NSGA2Config)   # operator params
 
     @property

@@ -5,10 +5,22 @@ libraries + Pareto PCC combinations) at a configurable budget and wraps the
 Phase-3 `TNNApproxProblem` for the campaign runner; `compile_archive_winner`
 closes the loop by lowering an archive chromosome straight through
 `repro.compile.lower_classifier` to a servable `CompiledClassifier`.
+
+The Phase-1/2 products are cached twice over: an in-process memo keyed by
+the content hash (`evolve.phase_cache.phase_key`) makes repeated
+`build_tnn_problem` calls with identical args free inside one process,
+and the on-disk content-addressed cache (`evolve.phase_cache`) carries
+them across processes — autopilot rounds, zoo sweeps, CI jobs, and the
+spawned workers of the parallel island executor all skip retraining.
+
+`ProblemSpec` is the picklable recipe a spawned executor worker uses to
+rebuild the same problem on its side of the process boundary (closures
+over numpy state don't pickle; a named builder + kwargs does).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, field
 from typing import Callable
 
 import numpy as np
@@ -33,44 +45,97 @@ class CampaignProblem:
     drift: Callable[[int], None] | None = None
 
 
-def build_synth_problem(n_genes: int = 10, domain: int = 6) -> CampaignProblem:
+@dataclass(frozen=True)
+class ProblemSpec:
+    """Picklable recipe for rebuilding a `CampaignProblem` in a worker.
+
+    The parallel island executor spawns fresh processes; an objective
+    closure cannot cross that boundary, but (builder name, kwargs) can.
+    `build_problem` dispatches back to the named builder — workers
+    rebuilding a TNN problem ride the phase cache, so the rebuild costs a
+    cache load, not a retrain.
+    """
+
+    kind: str                       # "synth" | "tnn"
+    kwargs: dict = field(default_factory=dict)
+
+    def build(self) -> "CampaignProblem":
+        return build_problem(self)
+
+
+def build_problem(spec: ProblemSpec) -> CampaignProblem:
+    """Rebuild the problem a `ProblemSpec` names (executor worker entry)."""
+    if spec.kind == "synth":
+        return build_synth_problem(**spec.kwargs)
+    if spec.kind == "tnn":
+        return build_tnn_problem(**spec.kwargs)
+    raise ValueError(f"unknown problem kind {spec.kind!r} "
+                     "(expected 'synth' or 'tnn')")
+
+
+def build_synth_problem(n_genes: int = 10, domain: int = 6,
+                        work: int = 0,
+                        wait_ms: float = 0.0) -> CampaignProblem:
     """Deterministic two-objective toy with a known diagonal Pareto front.
 
     Pure integer arithmetic — no training, no RNG — so two processes agree
     bit-for-bit on every objective value.  Used by the CLI's `synth` problem
     and the resume / seed-determinism tests.
+
+    Two expensive-objective stand-ins for the `evolve_parallel` benchmark
+    (results discarded, objective values untouched either way):
+
+      * `work` > 0 burns that many 128x128 matmuls per evaluated row —
+        CPU-bound load that scales with cores;
+      * `wait_ms` > 0 blocks that long per evaluated row — an objective
+        that waits on an external device (accelerator dispatch, RPC),
+        which is what the island executor overlaps even when only one
+        core is visible (CPU-bound work cannot speed up there, blocking
+        work can).
     """
     domains = np.full(n_genes, domain, dtype=np.int64)
     scale = n_genes * (domain - 1)
+    burn = (np.linspace(0.0, 1.0, 128 * 128, dtype=np.float64)
+            .reshape(128, 128) if work else None)
 
     def objective(pop: np.ndarray) -> np.ndarray:
         pop = np.asarray(pop, dtype=np.int64)
+        if work:
+            acc = burn
+            for _ in range(work * pop.shape[0]):
+                acc = burn @ acc
+                acc *= 1e-4                     # keep magnitudes finite
+        if wait_ms > 0.0:
+            import time
+            time.sleep(wait_ms * pop.shape[0] / 1000.0)
         f0 = pop.sum(1) / scale
         f1 = (domain - 1 - pop).sum(1) / scale
         pen = (pop == 2).sum(1) * 0.2       # middle values are dominated
         return np.stack([f0 + pen, f1 + pen], 1)
 
-    return CampaignProblem(name=f"synth{n_genes}x{domain}", domains=domains,
-                           objective=objective)
+    name = (f"synth{n_genes}x{domain}" + (f"w{work}" if work else "")
+            + (f"d{wait_ms:g}" if wait_ms else ""))
+    return CampaignProblem(name=name, domains=domains, objective=objective)
 
 
-def build_tnn_problem(dataset: str, seed: int = 0, epochs: int = 12,
-                      cgp_points: int = 3, cgp_iters: int = 500,
-                      pcc_samples: int = 30000,
-                      eval_backend: str = "np") -> CampaignProblem:
-    """Phases 1-3 setup for one Table-2 dataset at a configurable budget.
+# in-process memo over phase products, keyed by the content hash — the
+# layer in front of the on-disk cache (same process, same args -> the
+# exact TNN is trained once, not once per build_tnn_problem call)
+_PHASE_MEMO: dict = {}
 
-    Mirrors examples/evolve_approx_tnn.py: train the exact TNN, evolve
-    approximate popcount libraries for every neuron size, build the Pareto
-    PCC library, and return the NSGA-II integration problem whose objective
-    scores whole populations (on `eval_backend` for the output-plane gate
-    simulation).  Deterministic in (dataset, seed, budgets).
-    """
+
+def clear_phase_memo() -> None:
+    """Drop the in-process Phase-1/2 product memo (tests/benchmarks)."""
+    _PHASE_MEMO.clear()
+
+
+def _compute_phase_products(dataset: str, seed: int, epochs: int,
+                            cgp_points: int, cgp_iters: int,
+                            pcc_samples: int):
+    """Run Phases 1-2 from scratch (the cache-miss path)."""
     from repro.core import tnn as T
     from repro.core.cgp import evolve_pc_library
-    from repro.core.nsga2 import NSGA2Config  # noqa: F401 (re-export site)
     from repro.core.pcc import build_pcc_library, pc_pareto
-    from repro.core.ternary import abc_binarize
     from repro.data.tabular import make_dataset
 
     ds = make_dataset(dataset)
@@ -89,7 +154,66 @@ def build_tnn_problem(dataset: str, seed: int = 0, epochs: int = 12,
     pcc_lib = build_pcc_library(sorted(set(pcc_sizes)), pc_libs,
                                 n_samples=pcc_samples)
     pc_out = pc_pareto(pc_libs[max(tnn.out_nnz, 1)])
+    return tnn, pc_libs, pcc_lib, pc_out
 
+
+def _phase_products(dataset: str, seed: int, epochs: int, cgp_points: int,
+                    cgp_iters: int, pcc_samples: int,
+                    cache_dir: str | None):
+    """Phase-1/2 products via memo -> disk cache -> recompute (+backfill)."""
+    from repro.evolve import phase_cache as PC
+
+    key = PC.phase_key(dataset, seed, epochs, cgp_points, cgp_iters,
+                       pcc_samples)
+    if key in _PHASE_MEMO:
+        return _PHASE_MEMO[key]
+    root = PC.default_cache_dir() if cache_dir is None else cache_dir
+    if root is not None:
+        try:
+            products = PC.load_phase(root, key)
+            _PHASE_MEMO[key] = products
+            return products
+        except FileNotFoundError:
+            pass
+        except PC.PhaseCacheCorruptError as exc:
+            warnings.warn(f"{exc}", RuntimeWarning, stacklevel=3)
+            PC.drop_entry(root, key)
+    products = _compute_phase_products(dataset, seed, epochs, cgp_points,
+                                       cgp_iters, pcc_samples)
+    if root is not None:
+        PC.save_phase(root, key, *products)
+    _PHASE_MEMO[key] = products
+    return products
+
+
+def build_tnn_problem(dataset: str, seed: int = 0, epochs: int = 12,
+                      cgp_points: int = 3, cgp_iters: int = 500,
+                      pcc_samples: int = 30000,
+                      eval_backend: str = "np",
+                      cache_dir: str | None = None) -> CampaignProblem:
+    """Phases 1-3 setup for one Table-2 dataset at a configurable budget.
+
+    Mirrors examples/evolve_approx_tnn.py: train the exact TNN, evolve
+    approximate popcount libraries for every neuron size, build the Pareto
+    PCC library, and return the NSGA-II integration problem whose objective
+    scores whole populations (on `eval_backend` for the output-plane gate
+    simulation).  Deterministic in (dataset, seed, budgets) — which is why
+    the expensive Phase-1/2 half is served from `evolve.phase_cache` (and
+    an in-process memo) instead of recomputed per call.  `cache_dir=None`
+    resolves the default cache root (``REPRO_PHASE_CACHE`` env, else
+    ``~/.cache/repro/phase_cache``; set the env to ``off`` to disable).
+    The cheap Phase-3 wrapper (`TNNApproxProblem` + its per-candidate bit
+    caches) is rebuilt per call so callers can mutate their problem
+    (drift hooks, `eval_backend` swaps) without aliasing each other.
+    """
+    from repro.core import tnn as T
+    from repro.core.nsga2 import NSGA2Config  # noqa: F401 (re-export site)
+    from repro.core.ternary import abc_binarize
+    from repro.data.tabular import make_dataset
+
+    tnn, pc_libs, pcc_lib, pc_out = _phase_products(
+        dataset, seed, epochs, cgp_points, cgp_iters, pcc_samples, cache_dir)
+    ds = make_dataset(dataset)
     xb_tr = np.asarray(abc_binarize(ds.x_train, tnn.thresholds))
     prob = T.TNNApproxProblem(tnn=tnn, pcc_lib=pcc_lib, pc_out_lib=pc_out,
                               xbin=xb_tr, y=ds.y_train,

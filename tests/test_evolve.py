@@ -11,7 +11,7 @@ import pytest
 
 from repro.core.nsga2 import NSGA2Config, extract_front, nsga2
 from repro.evolve import (Campaign, CampaignConfig, ParetoArchive,
-                          build_synth_problem, migrate_ring)
+                          ProblemSpec, build_synth_problem, migrate_ring)
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
@@ -160,6 +160,150 @@ def test_seed_changes_front(tmp_path):
     a = json.loads((tmp_path / "s7.json").read_text())
     b = json.loads((tmp_path / "s8.json").read_text())
     assert a["archive"] != b["archive"]
+
+
+# ---------------------------------------------------------------------------
+# Parallel island executor: bit-identity with serial stepping
+# ---------------------------------------------------------------------------
+def _spec_campaign(workers, ckpt=None, **kw) -> Campaign:
+    spec = ProblemSpec("synth", {})
+    p = spec.build()
+    return Campaign(p.domains, p.objective, _cfg(workers=workers, **kw),
+                    checkpoint_dir=ckpt, name=p.name, problem_spec=spec)
+
+
+@pytest.mark.parametrize("workers", [1, 2, 4])
+def test_parallel_campaign_bit_identical(workers):
+    """The acceptance criterion: same archive X/F and same per-island
+    histories whether islands step serially or across N workers."""
+    serial = _campaign().run()
+    with _spec_campaign(workers) as c:
+        par = c.run()
+    np.testing.assert_array_equal(serial.archive_x, par.archive_x)
+    np.testing.assert_array_equal(serial.archive_f, par.archive_f)
+    assert serial.histories == par.histories
+
+
+def test_parallel_resume_crosses_worker_counts(tmp_path):
+    """workers is excluded from the resume fingerprint: a checkpoint
+    written serially resumes under a worker pool bit-identically."""
+    full = _campaign().run()
+    _campaign(_cfg(n_epochs=2), ckpt=str(tmp_path)).run()
+    with _spec_campaign(2, ckpt=str(tmp_path)) as c:
+        resumed = c.run()
+    assert resumed.resumed_from == 1
+    np.testing.assert_array_equal(full.archive_x, resumed.archive_x)
+    np.testing.assert_array_equal(full.archive_f, resumed.archive_f)
+
+
+def test_workers_require_problem_spec():
+    p = build_synth_problem()
+    with pytest.raises(ValueError, match="problem_spec"):
+        Campaign(p.domains, p.objective, _cfg(workers=2))
+
+
+def test_executor_rejects_bare_callable():
+    from repro.evolve.executor import IslandExecutor
+    with pytest.raises(TypeError, match="ProblemSpec"):
+        IslandExecutor(lambda X: X, _cfg(workers=2))
+
+
+def test_cache_history_rows_serial_and_parallel():
+    res = _campaign().run()
+    assert len(res.cache_history) == _cfg().n_epochs
+    last = res.cache_history[-1]
+    assert last["mode"] == "serial" and last["epoch"] == _cfg().n_epochs - 1
+    assert last["misses"] > 0 and last["hits"] >= 0
+    assert last["maxsize"] == _cfg().memo_maxsize
+
+    with _spec_campaign(2) as c:
+        par = c.run()
+    plast = par.cache_history[-1]
+    assert plast["mode"] == "parallel" and plast["workers"] == 2
+    assert plast["misses"] > 0 and plast["reports"] >= 1
+
+
+def test_memo_bound_does_not_change_front():
+    """Eviction re-evaluates to identical values — a pathologically tiny
+    memo bound must not alter the trajectory."""
+    ref = _campaign().run()
+    tiny = _campaign(_cfg(memo_maxsize=4))
+    res = tiny.run()
+    np.testing.assert_array_equal(ref.archive_x, res.archive_x)
+    info = tiny._evaluate.cache_info()
+    assert info["evictions"] > 0 and info["size"] <= 4
+
+
+# ---------------------------------------------------------------------------
+# Bounded fitness memo (_memoized LRU)
+# ---------------------------------------------------------------------------
+def _counting_objective():
+    calls = {"rows": 0}
+
+    def objective(pop):
+        calls["rows"] += pop.shape[0]
+        return np.stack([pop.sum(1).astype(float),
+                         (5 - pop).sum(1).astype(float)], 1)
+
+    return objective, calls
+
+
+def test_memoized_hits_and_misses():
+    from repro.core.nsga2 import _memoized
+
+    objective, calls = _counting_objective()
+    evaluate = _memoized(objective)
+    X = np.arange(12, dtype=np.int64).reshape(4, 3)
+    first = evaluate(X)
+    assert calls["rows"] == 4
+    again = evaluate(X)                       # pure cache hits
+    np.testing.assert_array_equal(first, again)
+    assert calls["rows"] == 4
+    info = evaluate.cache_info()
+    assert info["hits"] == 4 and info["misses"] == 4
+    assert info["evictions"] == 0 and info["maxsize"] is None
+
+
+def test_memoized_lru_evicts_and_recomputes_identically():
+    from repro.core.nsga2 import _memoized
+
+    objective, calls = _counting_objective()
+    evaluate = _memoized(objective, maxsize=2)
+    X = np.arange(12, dtype=np.int64).reshape(4, 3)
+    first = evaluate(X)                       # 4 misses, bound 2 -> evicts 2
+    info = evaluate.cache_info()
+    assert info["size"] == 2 and info["evictions"] == 2
+    again = evaluate(X)                       # evicted rows recompute
+    np.testing.assert_array_equal(first, again)
+    assert calls["rows"] > 4
+    assert evaluate.cache_info()["size"] <= 2
+
+
+def test_memoized_tiny_bound_smaller_than_batch():
+    """Eviction must never drop a row the *current* batch still needs."""
+    from repro.core.nsga2 import _memoized
+
+    objective, _ = _counting_objective()
+    evaluate = _memoized(objective, maxsize=1)
+    X = np.arange(18, dtype=np.int64).reshape(6, 3)
+    # duplicate rows inside one batch: dedup within the call, one value each
+    Xdup = np.vstack([X, X[::-1]])
+    out = evaluate(Xdup)
+    np.testing.assert_array_equal(out[:6], out[6:][::-1])
+    assert evaluate.cache_info()["size"] <= 1
+
+
+def test_memoized_cache_clear_resets():
+    from repro.core.nsga2 import _memoized
+
+    objective, calls = _counting_objective()
+    evaluate = _memoized(objective, maxsize=8)
+    X = np.arange(6, dtype=np.int64).reshape(2, 3)
+    evaluate(X)
+    evaluate.cache_clear()
+    assert evaluate.cache_info()["size"] == 0
+    evaluate(X)
+    assert calls["rows"] == 4                 # recomputed after clear
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,244 @@
+"""Content-addressed phase cache + the zoo batch compiler.
+
+The corruption tests pin the loud-rebuild contract: a truncated or
+bit-flipped cache entry must raise/warn and recompute, never silently
+serve stale Phase-1/2 products.  The zoo tests pin incremental rebuild
+semantics: fingerprint-matched entries with verifying bundles are
+skipped, anything stale or corrupt is rebuilt, `force` rebuilds all.
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.evolve import phase_cache as PC
+from repro.evolve.problems import build_tnn_problem, clear_phase_memo
+
+# smallest budgets that still exercise the full pipeline
+TINY = dict(seed=0, epochs=2, cgp_points=1, cgp_iters=25, pcc_samples=400)
+DATASET = "breast_cancer"
+
+
+def _tiny_key() -> str:
+    return PC.phase_key(DATASET, TINY["seed"], TINY["epochs"],
+                        TINY["cgp_points"], TINY["cgp_iters"],
+                        TINY["pcc_samples"])
+
+
+@pytest.fixture(scope="module")
+def warm_cache(tmp_path_factory):
+    """One real pipeline run, persisted to a module-lifetime cache dir."""
+    root = tmp_path_factory.mktemp("phase_cache")
+    clear_phase_memo()
+    build_tnn_problem(DATASET, cache_dir=str(root), **TINY)
+    return root
+
+
+# ---------------------------------------------------------------------------
+# phase cache: keying, roundtrip, corruption
+# ---------------------------------------------------------------------------
+def test_phase_key_sensitive_to_every_input():
+    base = _tiny_key()
+    for delta in ({"seed": 1}, {"epochs": 3}, {"cgp_points": 2},
+                  {"cgp_iters": 26}, {"pcc_samples": 401}):
+        kw = {**TINY, **delta}
+        other = PC.phase_key(DATASET, kw["seed"], kw["epochs"],
+                             kw["cgp_points"], kw["cgp_iters"],
+                             kw["pcc_samples"])
+        assert other != base, f"key ignored {delta}"
+    assert PC.phase_key("cardio", **TINY) != base
+
+
+def test_cache_dir_env_off_disables(monkeypatch):
+    monkeypatch.setenv("REPRO_PHASE_CACHE", "off")
+    assert PC.default_cache_dir() is None
+    monkeypatch.setenv("REPRO_PHASE_CACHE", "/some/dir")
+    assert PC.default_cache_dir() == Path("/some/dir")
+
+
+def test_roundtrip_identity(warm_cache):
+    """load_phase returns bit-identical products to what save_phase took."""
+    tnn, pc_libs, pcc_lib, pc_out = PC.load_phase(warm_cache, _tiny_key())
+    clear_phase_memo()
+    tnn2, pc_libs2, pcc2, pc_out2 = PC.load_phase(warm_cache, _tiny_key())
+    np.testing.assert_array_equal(tnn.w1t, tnn2.w1t)
+    np.testing.assert_array_equal(tnn.w2t, tnn2.w2t)
+    np.testing.assert_array_equal(tnn.thresholds, tnn2.thresholds)
+    assert tnn.test_acc == tnn2.test_acc and tnn.name == tnn2.name
+    assert sorted(pc_libs) == sorted(pc_libs2)
+    for n in pc_libs:
+        for a, b in zip(pc_libs[n], pc_libs2[n]):
+            np.testing.assert_array_equal(a.op, b.op)
+            np.testing.assert_array_equal(a.outputs, b.outputs)
+            assert a.n_inputs == b.n_inputs and a.meta == b.meta
+    assert sorted(pcc_lib.entries) == sorted(pcc2.entries)
+    for size in pcc_lib.entries:
+        for a, b in zip(pcc_lib.entries[size], pcc2.entries[size]):
+            assert (a.est_area, a.mde, a.wcde) == (b.est_area, b.mde, b.wcde)
+            np.testing.assert_array_equal(a.pc_pos.op, b.pc_pos.op)
+    assert len(pc_out) == len(pc_out2)
+
+
+def test_load_missing_entry_is_filenotfound(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no phase-cache entry"):
+        PC.load_phase(tmp_path, "0" * 64)
+
+
+def test_truncated_entry_is_loud(warm_cache, tmp_path):
+    import shutil
+    root = tmp_path / "c"
+    shutil.copytree(warm_cache, root)
+    path = PC.entry_path(root, _tiny_key())
+    path.write_bytes(path.read_bytes()[: path.stat().st_size // 2])
+    with pytest.raises(PC.PhaseCacheCorruptError, match="checksum"):
+        PC.load_phase(root, _tiny_key())
+
+
+def test_bitflipped_entry_is_loud(warm_cache, tmp_path):
+    import shutil
+    root = tmp_path / "c"
+    shutil.copytree(warm_cache, root)
+    path = PC.entry_path(root, _tiny_key())
+    blob = bytearray(path.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    path.write_bytes(bytes(blob))
+    with pytest.raises(PC.PhaseCacheCorruptError, match="checksum"):
+        PC.load_phase(root, _tiny_key())
+
+
+def test_missing_sidecar_is_loud(warm_cache, tmp_path):
+    import shutil
+    root = tmp_path / "c"
+    shutil.copytree(warm_cache, root)
+    path = PC.entry_path(root, _tiny_key())
+    path.with_name(path.name + ".sha256").unlink()
+    with pytest.raises(PC.PhaseCacheCorruptError, match="sidecar"):
+        PC.load_phase(root, _tiny_key())
+
+
+def test_corrupt_entry_warns_and_rebuilds(warm_cache, tmp_path):
+    """The consumer path: build_tnn_problem on a corrupt entry warns,
+    recomputes, and leaves a *valid* rewritten entry behind."""
+    import shutil
+    root = tmp_path / "c"
+    shutil.copytree(warm_cache, root)
+    path = PC.entry_path(root, _tiny_key())
+    path.write_bytes(b"garbage")
+    clear_phase_memo()
+    with pytest.warns(RuntimeWarning, match="checksum"):
+        build_tnn_problem(DATASET, cache_dir=str(root), **TINY)
+    # rebuilt entry must load cleanly now
+    PC.load_phase(root, _tiny_key())
+
+
+def test_in_process_memo_shares_products(warm_cache):
+    """Two build calls in one process reuse the very same trained TNN."""
+    clear_phase_memo()
+    a = build_tnn_problem(DATASET, cache_dir=str(warm_cache), **TINY)
+    b = build_tnn_problem(DATASET, cache_dir=str(warm_cache), **TINY)
+    assert a.tnn is b.tnn                    # memo hit, not a retrain
+    assert a.approx is not b.approx          # Phase-3 wrapper stays per-call
+
+
+# ---------------------------------------------------------------------------
+# zoo batch compiler
+# ---------------------------------------------------------------------------
+ZOO_BUDGETS = dict(islands=2, pop=8, epochs=1, gens_per_epoch=2,
+                   migrate_k=1, tnn_epochs=2, cgp_points=1, cgp_iters=25,
+                   pcc_samples=400)
+
+
+def _entries(variants=("base", "lean")):
+    from repro.compile.zoo import make_entries
+    return make_entries([DATASET], list(variants), **ZOO_BUDGETS)
+
+
+def test_zoo_build_skip_corrupt_force(tmp_path, warm_cache):
+    from repro.compile import artifact as A
+    from repro.compile.zoo import build_zoo
+
+    emit = tmp_path / "zoo"
+    entries = _entries()
+    rep = build_zoo(entries, emit, cache_dir=str(warm_cache))
+    assert len(rep["built"]) == 2 and rep["cached"] == []
+    rows = {r["name"]: r for r in A.load_manifest(emit)}
+    assert sorted(rows) == sorted(e.name for e in entries)
+    for row in rows.values():
+        bundle = emit / row["program"]
+        assert bundle.exists()
+        assert bundle.with_name(bundle.name + ".sha256").exists()
+        assert row["provenance"]["zoo_fingerprint"]
+        A.verify_program_bundle(bundle, expect_sha256=row["sha256"])
+
+    # identical re-run: pure skip
+    rep = build_zoo(entries, emit, cache_dir=str(warm_cache))
+    assert rep["built"] == [] and len(rep["cached"]) == 2
+
+    # corrupt one bundle -> only that entry rebuilds
+    victim = rows[entries[0].name]
+    bundle = emit / victim["program"]
+    bundle.write_bytes(b"garbage")
+    rep = build_zoo(entries, emit, cache_dir=str(warm_cache))
+    assert rep["built"] == [entries[0].name]
+    A.verify_program_bundle(emit / victim["program"])
+
+    # stale fingerprint (changed recipe) -> rebuild that entry
+    import dataclasses
+    changed = [dataclasses.replace(_entries(("base",))[0], seed=1)]
+    rep = build_zoo(changed, emit, cache_dir=str(warm_cache))
+    assert rep["built"] == [changed[0].name]
+
+    # force rebuilds everything
+    rep = build_zoo(entries, emit, cache_dir=str(warm_cache), force=True)
+    assert len(rep["built"]) == 2 and rep["cached"] == []
+
+
+def test_zoo_manifest_serves(tmp_path, warm_cache):
+    """A zoo emit dir is a loadable fleet: every bundle rebuilds a program
+    that classifies the right feature width."""
+    from repro.compile import artifact as A
+    from repro.compile.zoo import build_zoo
+
+    emit = tmp_path / "zoo"
+    build_zoo(_entries(("base",)), emit, cache_dir=str(warm_cache))
+    (row,) = A.load_manifest(emit)
+    prog = A.load_program(emit / row["program"], backend="np",
+                          expect_sha256=row["sha256"])
+    labels = prog.predict_bits(
+        np.zeros((4, row["n_features"]), dtype=np.uint8))
+    assert labels.shape == (4,)
+
+
+def test_zoo_duplicate_names_rejected(tmp_path):
+    from repro.compile.zoo import build_zoo
+    entries = _entries(("base",)) * 2
+    with pytest.raises(ValueError, match="duplicate zoo entry"):
+        build_zoo(entries, tmp_path / "zoo")
+
+
+def test_zoo_unknown_variant_rejected():
+    from repro.compile.zoo import make_entries
+    with pytest.raises(ValueError, match="unknown variant"):
+        make_entries([DATASET], ["nope"], **ZOO_BUDGETS)
+
+
+def test_zoo_report_written_by_cli(tmp_path, warm_cache):
+    from repro.compile import zoo as Z
+
+    out = tmp_path / "report.json"
+    Z.main(["--datasets", DATASET, "--variants", "base",
+            "--emit-dir", str(tmp_path / "zoo"),
+            "--phase-cache", str(warm_cache),
+            "--islands", "2", "--pop", "8", "--epochs", "1",
+            "--gens-per-epoch", "2", "--migrate-k", "1",
+            "--tnn-epochs", "2", "--cgp-points", "1", "--cgp-iters", "25",
+            "--pcc-samples", "400", "--out", str(out)])
+    rep = json.loads(out.read_text())
+    assert rep["entries"] == 1 and rep["built"] == [f"tnn_{DATASET}__base"]
+
+
+def test_zoo_cli_rejects_unknown_dataset(tmp_path):
+    from repro.compile import zoo as Z
+    with pytest.raises(SystemExit, match="unknown dataset"):
+        Z.main(["--datasets", "nope", "--emit-dir", str(tmp_path)])
